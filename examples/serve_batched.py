@@ -1,0 +1,45 @@
+"""Batched serving example (deliverable b): prefill a batch of prompts,
+then decode with the KV/state cache — on a hybrid (Jamba-family) model to
+exercise attention + Mamba + MoE caches together.
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced
+from repro.models import Runtime, init_params
+from repro.serve import ServeEngine
+
+
+def main():
+    cfg = reduced(get_config("jamba-v0.1-52b"))
+    rt = Runtime(rwkv_chunk=16, mamba_chunk=16, moe_impl="dense")
+    key = jax.random.PRNGKey(7)
+    params = init_params(cfg, key)
+
+    batch, prompt_len, n_new = 8, 48, 24
+    engine = ServeEngine(cfg, params, rt, max_len=prompt_len + n_new)
+    prompts = jax.random.randint(key, (batch, prompt_len), 0, cfg.vocab_size)
+
+    t0 = time.time()
+    greedy = engine.generate(prompts, n_new)
+    t1 = time.time()
+    sampled = engine.generate(prompts, n_new, temperature=0.8, key=key)
+    t2 = time.time()
+
+    assert greedy.shape == (batch, prompt_len + n_new)
+    # greedy decode is deterministic
+    again = engine.generate(prompts, n_new)
+    assert bool(jnp.all(again == greedy))
+    print(f"greedy:  {batch * n_new} tokens in {t1-t0:.2f}s")
+    print(f"sampled: {batch * n_new} tokens in {t2-t1:.2f}s")
+    print("batch 0 greedy tail:", greedy[0, -8:].tolist())
+    print("batch 0 sampled tail:", sampled[0, -8:].tolist())
+    print("serve_batched OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""End-to-end driver (deliverable b): train a ~100M-parameter llama-family
+model for a few hundred steps on the synthetic corpus, with checkpointing
+and the full sharded train loop.
+
+    PYTHONPATH=src python examples/train_100m.py [--steps 300]
+
+On this CPU container the model runs on a 1-device mesh; on a TPU slice the
+identical script uses every chip (the plan/runtime adapt to the mesh).
+"""
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ShapeConfig
+from repro.configs.base import ModelConfig
+from repro.core import parallel as par
+from repro.data import Batcher, SyntheticSource
+from repro.launch.mesh import make_host_mesh
+from repro.optim import AdamWConfig
+from repro.train.trainer import TrainConfig, train_loop
+
+# ~100M params: 12L, d=768, vocab 16k (llama-style SwiGLU decoder)
+M100 = ModelConfig(
+    name="llama-100m", family="dense", n_layers=12, d_model=768,
+    n_heads=12, n_kv_heads=12, d_ff=2048, vocab_size=16384,
+    source="paper-style Llama-2 family scaled to ~100M")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--seq_len", type=int, default=256)
+    ap.add_argument("--global_batch", type=int, default=8)
+    ap.add_argument("--ckpt_every", type=int, default=100)
+    args = ap.parse_args()
+
+    cfg = M100
+    print(f"{cfg.name}: {cfg.param_count()/1e6:.1f}M params")
+    mesh = make_host_mesh(data=len(jax.devices()), model=1)
+    shape = ShapeConfig("e2e", args.seq_len, args.global_batch, "train")
+    plan = par.choose_plan(cfg, mesh, shape)
+    rt = par.make_runtime(cfg, plan, shape, param_dtype=jnp.float32,
+                          compute_dtype=jnp.float32, remat=False)
+
+    batches = Batcher(SyntheticSource(cfg.vocab_size, seed=1),
+                      shape.seq_len, shape.global_batch)
+    tc = TrainConfig(steps=args.steps, warmup=20, log_every=20,
+                     ckpt_every=args.ckpt_every,
+                     ckpt_dir="results/ckpt/llama-100m",
+                     opt=AdamWConfig(lr=6e-4))
+    params, _, history = train_loop(cfg, plan, rt, tc, batches)
+    first, last = history[0]["loss"], history[-1]["loss"]
+    print(f"loss {first:.4f} -> {last:.4f}")
+    assert last < first - 0.5, "expected substantial learning on synthetic data"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Sharded pytree checkpointing without external deps.
+
+Layout: ``<dir>/step_<N>/manifest.json`` + one ``.npy`` per leaf, keyed by
+the flattened tree path.  Arrays are fetched shard-by-shard
+(``jax.device_get``) and restored with ``jax.device_put`` against the
+target sharding, so save/restore round-trips across different meshes.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _path_key(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save_checkpoint(directory: str, step: int, tree: Any) -> str:
+    out = os.path.join(directory, f"step_{step:08d}")
+    os.makedirs(out, exist_ok=True)
+    leaves = {}
+    def dump(path, leaf):
+        key = _path_key(path)
+        arr = np.asarray(jax.device_get(leaf))
+        logical_dtype = str(jax.numpy.asarray(leaf).dtype)
+        if arr.dtype.kind == "V":        # bfloat16 etc: store raw bits
+            arr = arr.view(np.uint16 if arr.dtype.itemsize == 2 else np.uint8)
+        fname = re.sub(r"[^A-Za-z0-9_.-]", "_", key) + ".npy"
+        np.save(os.path.join(out, fname), arr)
+        leaves[key] = {"file": fname, "shape": list(arr.shape),
+                       "dtype": logical_dtype}
+        return leaf
+    jax.tree_util.tree_map_with_path(dump, tree)
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump({"step": step, "leaves": leaves}, f, indent=1)
+    return out
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_")]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, step: int, target: Any,
+                       shardings: Any = None) -> Any:
+    src = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(src, "manifest.json")) as f:
+        manifest = json.load(f)["leaves"]
+
+    def load(path, leaf, shard=None):
+        key = _path_key(path)
+        entry = manifest[key]
+        arr = np.load(os.path.join(src, entry["file"]))
+        if entry["dtype"] not in str(arr.dtype):   # bit-stored bf16 etc.
+            import ml_dtypes
+            arr = arr.view(np.dtype(getattr(ml_dtypes, entry["dtype"])))
+        assert tuple(arr.shape) == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        if shard is not None:
+            return jax.device_put(arr, shard)
+        return jax.device_put(arr)
+
+    if shardings is not None:
+        return jax.tree_util.tree_map_with_path(load, target, shardings)
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: load(p, l), target)

@@ -1,0 +1,368 @@
+"""Analytical performance model — the paper's empirical study in closed form.
+
+Models a distributed training step as computation + collective communication
+with an explicit overlap model, over parameterized hardware generations
+(V100 / A100 / H100 DGX clusters and TPU v5e pods), parallelization
+strategies (FSDP/ZeRO sharded data parallel x tensor x pipeline x context
+parallelism) and workloads (the paper's Llama-2 family and every assigned
+architecture).
+
+Key modeling choices, each traceable to a paper observation:
+
+* Ring collectives are chunk-pipelined: t = (n-1) * max(B/(n*bw), alpha).
+  For fixed per-layer message sizes this reproduces Fig 2b / Fig 4 — the
+  effective bus bandwidth of AllGather/ReduceScatter *decays* with world
+  size because per-rank chunks shrink below the latency floor.
+* NCCL AllReduce has a tree algorithm whose bandwidth term does not grow
+  with n (Fig 2a): t = 2B/bw + 2*log2(n)*alpha.  TPU ICI has no tree; the
+  'ici' fabric uses ring reduce-scatter + all-gather (2x ring terms), but
+  over a 2D torus ring bandwidth is multiplied by the number of
+  independent rings (links per chip).
+* Cross-island collectives (spanning >1 DGX node, or >1 pod) see the
+  slower fabric: bw_eff = inter_bw / ranks_per_island, alpha_eff =
+  alpha_inter (Fig 7: TP beyond a node is penalized).
+* FSDP AllGather/ReduceScatter overlap with adjacent-layer compute up to
+  one layer's compute time (explicit prefetch, Zhao et al.); tensor-
+  parallel AllReduces are blocking (§2.1); pipeline adds the GPipe bubble.
+* Power: P = idle + (peak - idle) * compute_utilization — per the paper's
+  observation that GPU power draw is nearly flat (-5.9%) while utilization
+  halves (§4.1).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.perf import flops as flops_lib
+
+
+# ---------------------------------------------------------------------------
+# hardware generations (Table 1 + TPU v5e target)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    name: str
+    flops_bf16: float          # peak per chip, FLOP/s
+    hbm_bw: float              # B/s
+    intra_bw: float            # B/s per chip within the fast island
+    inter_bw: float            # B/s per island across the slow fabric
+    island: int                # chips per fast island (DGX node / pod)
+    alpha_intra: float         # per-hop latency, s
+    alpha_inter: float
+    power_peak: float          # W per chip, fully utilized
+    power_idle: float          # W per chip, stalled on comm
+    rings: int = 1             # independent ring directions (torus links)
+    kernel_eff: float = 0.72   # achievable fraction of peak in dense matmul
+    fabric: str = "nccl"       # 'nccl' (tree AR available) | 'ici'
+
+
+# kernel_eff calibration: V100 lacks FlashAttention/Hopper kernels (App. F);
+# A100 reaches ~0.63 of peak on the paper's workload; H100's tripled FLOPs
+# outpace its kernels' achievable efficiency on the same (small local batch)
+# workload — the paper's "asymmetric improvement" (§4.4).
+V100 = Hardware("V100", 125e12, 0.9e12, 300e9, 100e9, 8,
+                3e-6, 14e-6, 300.0, 250.0, kernel_eff=0.35)
+A100 = Hardware("A100", 312e12, 2.0e12, 600e9, 200e9, 8,
+                2.5e-6, 12e-6, 400.0, 330.0, kernel_eff=0.63)
+H100 = Hardware("H100", 990e12, 3.35e12, 900e9, 400e9, 8,
+                2.5e-6, 12e-6, 660.0, 560.0, kernel_eff=0.48)
+TPU_V5E = Hardware("TPUv5e", 197e12, 819e9, 4 * 50e9, 25e9, 256,
+                   1e-6, 10e-6, 200.0, 110.0, rings=4, kernel_eff=0.70,
+                   fabric="ici")
+
+# how much adjacent-layer compute an FSDP prefetch can hide under
+# (prefetch depth > 1 lets a collective span more than one layer)
+PREFETCH_EFF = 1.5
+GRAD_DTYPE_BYTES = 4          # fp32 gradient reduce-scatter (Megatron-style)
+
+HARDWARE = {h.name: h for h in (V100, A100, H100, TPU_V5E)}
+
+
+# ---------------------------------------------------------------------------
+# collectives
+# ---------------------------------------------------------------------------
+
+def _bw_alpha(hw: Hardware, n: int) -> Tuple[float, float]:
+    """Effective per-rank ring bandwidth + per-hop latency for group size n."""
+    if n <= hw.island:
+        return hw.intra_bw * (hw.rings if hw.fabric == "ici" else 1), hw.alpha_intra
+    ranks_per_island = hw.island
+    return hw.inter_bw / ranks_per_island * (
+        hw.rings if hw.fabric == "ici" else 1), hw.alpha_inter
+
+
+def t_all_gather(hw: Hardware, bytes_total: float, n: int) -> float:
+    """Ring all-gather of a tensor of bytes_total (global result size)."""
+    if n <= 1:
+        return 0.0
+    bw, alpha = _bw_alpha(hw, n)
+    return (n - 1) * max(bytes_total / (n * bw), alpha)
+
+
+def t_reduce_scatter(hw: Hardware, bytes_total: float, n: int) -> float:
+    return t_all_gather(hw, bytes_total, n)
+
+
+def t_all_reduce(hw: Hardware, bytes_total: float, n: int) -> float:
+    if n <= 1:
+        return 0.0
+    bw, alpha = _bw_alpha(hw, n)
+    if hw.fabric == "nccl":      # tree: bandwidth term ~ independent of n
+        return 2 * bytes_total / bw + 2 * math.log2(max(n, 2)) * alpha
+    return 2 * (n - 1) * max(bytes_total / (n * bw), alpha)
+
+
+def t_all_to_all(hw: Hardware, bytes_total: float, n: int) -> float:
+    if n <= 1:
+        return 0.0
+    bw, alpha = _bw_alpha(hw, n)
+    return (n - 1) * max(bytes_total / (n * bw), alpha)
+
+
+def t_p2p(hw: Hardware, bytes_total: float, cross_island: bool) -> float:
+    bw = hw.inter_bw / hw.island if cross_island else hw.intra_bw
+    alpha = hw.alpha_inter if cross_island else hw.alpha_intra
+    return bytes_total / bw + alpha
+
+
+def bus_bandwidth_allgather(hw: Hardware, bytes_total: float, n: int) -> float:
+    """NCCL-tests style busbw in B/s (for reproducing Fig 2)."""
+    t = t_all_gather(hw, bytes_total, n)
+    return bytes_total * (n - 1) / n / t if t else float("inf")
+
+
+def bus_bandwidth_allreduce(hw: Hardware, bytes_total: float, n: int) -> float:
+    t = t_all_reduce(hw, bytes_total, n)
+    return 2 * bytes_total * (n - 1) / n / t if t else float("inf")
+
+
+# ---------------------------------------------------------------------------
+# parallelization strategy
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Strategy:
+    n_devices: int
+    tp: int = 1                 # tensor-parallel degree
+    pp: int = 1                 # pipeline-parallel degree
+    cp: int = 1                 # context-parallel degree
+    zero_stage: int = 3         # 0: DDP, 2/3: sharded (paper: FSDP ~ ZeRO-2/3)
+    microbatches: int = 1       # pipeline microbatches per step
+
+    @property
+    def dp(self) -> int:
+        return self.n_devices // (self.tp * self.pp * self.cp)
+
+    @property
+    def model_parallel(self) -> int:
+        return self.tp * self.pp * self.cp
+
+    def valid(self) -> bool:
+        return (self.dp >= 1 and
+                self.dp * self.tp * self.pp * self.cp == self.n_devices)
+
+
+# ---------------------------------------------------------------------------
+# step-time model
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class StepReport:
+    strategy: Strategy
+    hardware: str
+    t_step: float
+    t_compute: float
+    t_comm_total: float
+    t_comm_exposed: float
+    comm_breakdown: Dict[str, float]
+    tokens: int
+    wps: float                   # words(tokens)/s global
+    wps_per_device: float
+    tflops_per_device: float     # achieved
+    mfu: float
+    power_per_device: float      # W
+    tokens_per_joule: float
+    memory_per_device: float     # bytes (params+opt+grads+activations)
+    fits: bool
+
+    def row(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d.pop("comm_breakdown")
+        d.pop("strategy")
+        s = self.strategy
+        d.update(n=s.n_devices, tp=s.tp, pp=s.pp, cp=s.cp, dp=s.dp)
+        return d
+
+
+def _model_bytes(cfg: ModelConfig, dtype_bytes: int = 2) -> float:
+    return cfg.param_count() * dtype_bytes
+
+
+def step_time(cfg: ModelConfig, hw: Hardware, strat: Strategy,
+              global_batch: int, seq_len: int,
+              hbm_capacity: float = 80e9, train: bool = True,
+              remat: bool = False) -> StepReport:
+    """Analytic step time for one optimizer step (or forward, if not train)."""
+    assert strat.valid(), strat
+    shape = ShapeConfig("x", seq_len, global_batch,
+                        "train" if train else "prefill")
+    tokens = global_batch * seq_len
+    L = cfg.n_layers
+    d = cfg.d_model
+    P_bytes = _model_bytes(cfg)
+
+    # ---- compute -----------------------------------------------------------
+    total_flops = flops_lib.compiled_flops(cfg, shape, remat=remat and train)
+    flops_per_dev = total_flops / strat.n_devices
+    t_compute = flops_per_dev / (hw.flops_bf16 * hw.kernel_eff)
+    # forward is 1/4 of compute with remat (1/3 without); AG prefetch hides
+    # under the *forward* layer, grad RS under the *backward* layer.
+    fwd_frac = (1 / 4 if remat else 1 / 3) if train else 1.0
+    t_layer_fwd = t_compute * fwd_frac / L
+    t_layer_bwd = t_compute * (1 - fwd_frac) / L if train else 0.0
+
+    # per-device local batch (examples)
+    local_batch = max(global_batch // (strat.dp * strat.cp), 1)
+    act_bytes_layer = local_batch * seq_len * d * 2 / strat.cp  # bf16
+
+    comm: Dict[str, float] = {"fsdp_ag": 0.0, "fsdp_rs": 0.0, "ddp_ar": 0.0,
+                              "tp_ar": 0.0, "pp_p2p": 0.0, "cp": 0.0,
+                              "moe_a2a": 0.0}
+
+    # ---- sharded data parallel collectives (per layer) ---------------------
+    layer_param_bytes = P_bytes / L / (strat.tp * strat.pp)
+    n_dp = strat.dp
+    if strat.zero_stage >= 2 and n_dp > 1:
+        # AllGather params fwd (+ bwd re-gather for ZeRO-3), ReduceScatter grads
+        ag_per_layer = t_all_gather(hw, layer_param_bytes, n_dp)
+        n_ag = 2 if strat.zero_stage == 3 else 1
+        rs_per_layer = t_reduce_scatter(
+            hw, layer_param_bytes * GRAD_DTYPE_BYTES / 2, n_dp)
+        comm["fsdp_ag"] = L * n_ag * ag_per_layer
+        comm["fsdp_rs"] = (L * rs_per_layer) if train else 0.0
+        win_fwd = PREFETCH_EFF * t_layer_fwd
+        win_bwd = PREFETCH_EFF * t_layer_bwd
+        exposed_fsdp = L * max(0.0, ag_per_layer - win_fwd)
+        if strat.zero_stage == 3:
+            exposed_fsdp += L * max(0.0, ag_per_layer - win_bwd)
+        if train:
+            exposed_fsdp += L * max(0.0, rs_per_layer - win_bwd)
+    elif n_dp > 1 and train:
+        comm["ddp_ar"] = t_all_reduce(hw, P_bytes * GRAD_DTYPE_BYTES / 2, n_dp)
+        # DDP grad all-reduce overlaps with backward (non-blocking, §2.1)
+        exposed_fsdp = max(0.0, comm["ddp_ar"] - PREFETCH_EFF * t_compute * 2 / 3)
+    else:
+        exposed_fsdp = 0.0
+
+    # ---- tensor parallel (blocking) ----------------------------------------
+    if strat.tp > 1:
+        # Megatron: 2 AllReduces fwd (+2 bwd) per layer over activations
+        ars_per_layer = 2 * (3 if train else 1)
+        t_ar = t_all_reduce(hw, act_bytes_layer, strat.tp)
+        comm["tp_ar"] = L * ars_per_layer * t_ar
+        exposed_tp = comm["tp_ar"]          # blocking / on critical path
+    else:
+        exposed_tp = 0.0
+
+    # ---- context parallel ---------------------------------------------------
+    if strat.cp > 1:
+        # ring attention: pass KV around the cp ring each layer
+        kv_bytes = local_batch * seq_len / strat.cp * cfg.kv_heads * \
+            cfg.head_dim_ * 2 * 2
+        t_ring = (strat.cp - 1) * t_p2p(hw, kv_bytes, strat.cp > hw.island)
+        comm["cp"] = L * t_ring * (3 if train else 1)
+        exposed_cp = 0.25 * comm["cp"]       # mostly overlapped with attn math
+    else:
+        exposed_cp = 0.0
+
+    # ---- MoE all-to-all ------------------------------------------------------
+    if cfg.moe.n_experts:
+        n_moe = sum(cfg.is_moe_layer(i) for i in range(L))
+        tok_bytes = (tokens / strat.dp / strat.cp) * cfg.moe.top_k * \
+            cfg.moe.capacity_factor * d * 2
+        ep = min(strat.tp * strat.pp, cfg.moe.n_experts)
+        t_a2a = t_all_to_all(hw, tok_bytes, max(ep, 2)) * 2  # dispatch+combine
+        comm["moe_a2a"] = n_moe * t_a2a * (3 if train else 1)
+        exposed_moe = 0.5 * comm["moe_a2a"]
+    else:
+        exposed_moe = 0.0
+
+    # ---- pipeline ------------------------------------------------------------
+    bubble = 0.0
+    if strat.pp > 1:
+        m = max(strat.microbatches, strat.pp)
+        bubble_frac = (strat.pp - 1) / (m + strat.pp - 1)
+        act_boundary = local_batch * seq_len * d * 2 / m
+        comm["pp_p2p"] = (strat.pp - 1) * m * t_p2p(
+            hw, act_boundary, strat.pp * strat.tp > hw.island) * (2 if train else 1)
+        bubble = bubble_frac            # fraction of step, applied below
+    exposed_pp = comm["pp_p2p"] * 0.5
+
+    t_comm_total = sum(comm.values())
+    t_exposed = exposed_fsdp + exposed_tp + exposed_cp + exposed_moe + exposed_pp
+    t_step = (t_compute + t_exposed) / max(1e-9, (1 - bubble))
+
+    # ---- memory ---------------------------------------------------------------
+    shard = strat.tp * strat.pp * (n_dp if strat.zero_stage >= 3 else
+                                   (n_dp if strat.zero_stage == 2 else 1))
+    opt_shard = strat.tp * strat.pp * (n_dp if strat.zero_stage >= 2 else 1)
+    mem = (P_bytes / (strat.tp * strat.pp)) / (n_dp if strat.zero_stage >= 3 else 1)
+    mem += 2 * P_bytes / (strat.tp * strat.pp) / (n_dp if strat.zero_stage >= 2 else 1)  # grads(bf16)+..
+    mem += 8 * cfg.param_count() / opt_shard       # adam m+v fp32
+    if train:
+        mem += L / strat.pp * act_bytes_layer      # remat boundaries
+    mem += act_bytes_layer * 4                      # working set
+
+    # ---- throughput / power -----------------------------------------------
+    wps = tokens / t_step
+    model_fl = flops_lib.model_flops(cfg, shape)
+    mfu = model_fl / t_step / (strat.n_devices * hw.flops_bf16)
+    util = t_compute / t_step
+    power = hw.power_idle + (hw.power_peak - hw.power_idle) * util
+    achieved = total_flops / t_step / strat.n_devices
+
+    return StepReport(
+        strategy=strat, hardware=hw.name, t_step=t_step, t_compute=t_compute,
+        t_comm_total=t_comm_total, t_comm_exposed=t_exposed,
+        comm_breakdown=comm, tokens=tokens, wps=wps,
+        wps_per_device=wps / strat.n_devices,
+        tflops_per_device=achieved / 1e12, mfu=mfu,
+        power_per_device=power,
+        tokens_per_joule=wps / (power * strat.n_devices),
+        memory_per_device=mem, fits=mem < hbm_capacity)
+
+
+def sweep_strategies(cfg: ModelConfig, hw: Hardware, n_devices: int,
+                     global_batch: int, seq_len: int,
+                     tps: Iterable[int] = (1, 2, 4, 8, 16),
+                     pps: Iterable[int] = (1, 2, 4, 8, 16),
+                     zero_stage: int = 3,
+                     hbm_capacity: float = 80e9) -> List[StepReport]:
+    """Fig 6: search viable (tp, pp) combinations."""
+    out = []
+    for tp in tps:
+        for pp in pps:
+            if tp * pp > n_devices:
+                continue
+            if n_devices % (tp * pp):
+                continue
+            strat = Strategy(n_devices, tp=tp, pp=pp, zero_stage=zero_stage,
+                             microbatches=max(8, pp))
+            if not strat.valid() or strat.dp < 1:
+                continue
+            if global_batch % (strat.dp) and global_batch >= strat.dp:
+                continue
+            if strat.dp > global_batch:
+                continue
+            out.append(step_time(cfg, hw, strat, global_batch, seq_len,
+                                 hbm_capacity))
+    return out
+
+
+def best_strategy(reports: List[StepReport],
+                  require_fits: bool = True) -> Optional[StepReport]:
+    cand = [r for r in reports if (r.fits or not require_fits)]
+    return max(cand, key=lambda r: r.wps) if cand else None

@@ -1,0 +1,391 @@
+"""Parallelization plan: the paper's technique as a first-class object.
+
+The paper's central finding is that the *composition* of sharded data
+parallelism (FSDP/HSDP) with model parallelism (tensor / context) determines
+throughput at scale, because model parallelism shrinks the FSDP collective
+group.  A ``ParallelPlan`` captures one point in that strategy space and
+produces:
+
+  * parameter PartitionSpecs (2D: FSDP axis x model axis),
+  * named activation constraints consumed by the model code
+    (``Runtime.constrain``),
+  * batch input specs,
+
+for any of the assigned architectures on any mesh.
+
+Attention strategy selection (see DESIGN.md §4):
+  * ``head_tp``  — Megatron-style: Q heads sharded on the model axis
+                   (requires n_heads % tp == 0); KV heads sharded too when
+                   divisible, else replicated (GQA).
+  * ``context``  — sequence sharded on the model axis; K/V all-gathered for
+                   exact attention (train/prefill).  Head-count agnostic.
+Decode always shards the KV cache along *sequence* (flash-decode over the
+mesh); for global_batch < data axis size the cache seq dim is sharded over
+both (data, model).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelPlan:
+    mesh: Mesh
+    dp: Tuple[str, ...]                  # batch-dim axes ('pod','data') or ('data',)
+    fsdp: Tuple[str, ...]                # param-shard axes (HSDP: ('data',))
+    tp: str                              # model axis name
+    attn: str                            # 'head_tp' | 'context'
+    kv_tp: bool                          # shard KV heads on model axis
+    shape_mode: str = "train"            # train | prefill | decode
+    decode_cache_axes: Tuple[str, ...] = ("model",)
+    seq_parallel_residuals: bool = True  # Megatron-SP residual stream
+
+    @property
+    def tp_size(self) -> int:
+        return self.mesh.shape[self.tp]
+
+    def axis_size(self, axes) -> int:
+        return int(np.prod([self.mesh.shape[a] for a in axes])) if axes else 1
+
+
+def choose_plan(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig,
+                dp_mode: str = "hsdp", attn_override: Optional[str] = None,
+                seq_parallel: bool = True) -> ParallelPlan:
+    """Pick the paper-recommended strategy for (arch, shape, mesh)."""
+    axes = mesh.axis_names
+    assert "data" in axes and "model" in axes, axes
+    has_pod = "pod" in axes
+    dp = ("pod", "data") if has_pod else ("data",)
+    # HSDP (default): shard params inside the pod, replicate across pods
+    # (grad all-reduce over 'pod' crosses the slow DCN once per step).
+    fsdp = ("data",) if (has_pod and dp_mode == "hsdp") else dp
+
+    tp_size = mesh.shape["model"]
+    if attn_override:
+        attn = attn_override
+    elif cfg.mixer != "attn" and cfg.attn_every <= 1:
+        attn = "head_tp"          # no attention layers at all (rwkv)
+    else:
+        attn = "head_tp" if cfg.n_heads % tp_size == 0 else "context"
+    kv_tp = attn == "head_tp" and cfg.kv_heads % tp_size == 0
+
+    # decode cache: shard sequence over model, and over data too when the
+    # batch cannot occupy the data axis (long-context, global_batch=1)
+    data_size = int(np.prod([mesh.shape[a] for a in dp]))
+    if shape.mode == "decode" and shape.global_batch < data_size:
+        cache_axes = ("data", "model") if not has_pod else ("pod", "data", "model")
+    else:
+        cache_axes = ("model",)
+
+    return ParallelPlan(mesh=mesh, dp=dp, fsdp=fsdp, tp="model", attn=attn,
+                        kv_tp=kv_tp, shape_mode=shape.mode,
+                        decode_cache_axes=cache_axes,
+                        seq_parallel_residuals=seq_parallel)
+
+
+# ---------------------------------------------------------------------------
+# spec fitting: drop axes that do not divide the dimension
+# ---------------------------------------------------------------------------
+
+def _fit_spec(spec: P, shape, mesh: Mesh) -> P:
+    out = []
+    for dim, entry in enumerate(spec):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        keep = []
+        size = shape[dim]
+        for a in axes:
+            n = mesh.shape[a]
+            if size % n == 0 and size >= n:
+                keep.append(a)
+                size //= n
+            # else: drop axis (dim not divisible)
+        out.append(tuple(keep) if len(keep) > 1 else (keep[0] if keep else None))
+    return P(*out)
+
+
+def fitted(plan: ParallelPlan, spec: P, x_or_shape):
+    shape = getattr(x_or_shape, "shape", x_or_shape)
+    spec = P(*(tuple(spec) + (None,) * (len(shape) - len(spec))))
+    return NamedSharding(plan.mesh, _fit_spec(spec, shape, plan.mesh))
+
+
+# ---------------------------------------------------------------------------
+# parameter shardings
+# ---------------------------------------------------------------------------
+
+def _param_spec(cfg: ModelConfig, plan: ParallelPlan, path: Tuple[str, ...],
+                ndim: int) -> P:
+    """PartitionSpec for one parameter leaf, identified by its tree path.
+
+    Stacked block params have a leading (n_blocks,) dim -> specs are shifted
+    right by one (the stack dim is never sharded).
+    """
+    f, m = plan.fsdp, plan.tp
+    names = [getattr(p, "key", getattr(p, "name", str(p))) for p in path]
+    leaf = names[-1]
+    stacked = "blocks" in names
+    # position of the leading stack dim (blocks[i] leaves carry one)
+    pad = 1 if stacked else 0
+    base_ndim = ndim - pad
+
+    def spec(*entries):
+        entries = entries + (None,) * (base_ndim - len(entries))
+        return P(*((None,) * pad + entries))
+
+    in_attention = "mixer" in names
+    vocab_tp = plan.attn == "head_tp"   # context plans keep vocab unsharded
+
+    if leaf == "tok":
+        return spec(m if vocab_tp else None, f)
+    if leaf == "lm_head":
+        return spec(f, m if vocab_tp else None)
+    if leaf in ("scale", "bias") or base_ndim == 0:
+        return spec()
+    if leaf == "router":
+        return spec(f, None)
+    # MoE expert stacks (E, d, f) / (E, f, d)
+    if base_ndim == 3 and leaf in ("w_up", "w_gate", "w_down"):
+        return spec(m, f if leaf != "w_down" else None,
+                    f if leaf == "w_down" else None)
+    if in_attention:
+        head_m = m if plan.attn == "head_tp" else None
+        kv_m = m if plan.kv_tp else None
+        if leaf == "wq":
+            return spec(f, head_m)
+        if leaf in ("wk", "wv"):
+            return spec(f, kv_m)
+        if leaf == "wo":
+            return spec(head_m, f)
+        if leaf == "bq":
+            return spec(head_m)
+        if leaf in ("bk", "bv"):
+            return spec(kv_m)
+        # rwkv time-mix
+        if leaf in ("wr", "wk", "wv", "wg"):
+            return spec(f, m)
+        if leaf == "u":
+            return spec(m, None)
+        if leaf in ("tm_w1", "td_w1"):
+            return spec(f, None)
+        if leaf == "td_w2":
+            return spec(None, f)
+        if leaf == "tm_w2":
+            return spec(None, None, f)
+        # mamba
+        if leaf in ("w_x_in", "w_z_in"):
+            return spec(f, m)
+        if leaf == "conv_w":
+            return spec(None, m)
+        if leaf in ("conv_b", "b_dt", "D"):
+            return spec(m)
+        if leaf == "w_x":
+            return spec(m, None)
+        if leaf == "w_dt":
+            return spec(None, m)
+        if leaf == "A_log":
+            return spec(m, None)
+        if leaf == "w_out":
+            return spec(m, f)
+        if leaf in ("maa_x",):
+            return spec()
+        if leaf == "maa_rkvwg":
+            return spec(None, None)
+        if leaf == "w0":
+            return spec()
+    # dense / shared-expert / rwkv channel-mix FFN (2D)
+    ffn_m = m if plan.attn == "head_tp" else None
+    if leaf in ("w_up", "w_gate"):
+        return spec(f, ffn_m)
+    if leaf == "w_down":
+        return spec(ffn_m, f)
+    if leaf == "wk":            # rwkv channel-mix key (d, dff)
+        return spec(f, ffn_m)
+    if leaf == "wv":            # rwkv channel-mix value (dff, d)
+        return spec(ffn_m, f)
+    if leaf == "wr":
+        return spec(f, None)
+    if leaf in ("maa_k", "maa_r"):
+        return spec()
+    return spec()
+
+
+def param_shardings(cfg: ModelConfig, plan: ParallelPlan, params_shape):
+    """Tree of NamedShardings matching ``jax.eval_shape(init_params, ...)``."""
+    def one(path, leaf):
+        spec = _param_spec(cfg, plan, path, len(leaf.shape))
+        return fitted(plan, spec, leaf.shape)
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+# ---------------------------------------------------------------------------
+# activation constraints (consumed via Runtime.constrain)
+# ---------------------------------------------------------------------------
+
+def activation_specs(cfg: ModelConfig, plan: ParallelPlan) -> Dict[str, P]:
+    dp, m = plan.dp, plan.tp
+    cp = plan.attn == "context"
+    decode = plan.shape_mode == "decode"
+    seq = m if (cp and not decode) else None
+    # Megatron-style sequence parallelism for the residual stream: pure
+    # attention architectures keep (B, S, d) activations seq-sharded on the
+    # model axis between layers (all-gather at matmul entry, reduce-scatter
+    # after wo/w_down — GSPMD inserts these from the constraints).  This is
+    # what bounds remat-stored activations per layer boundary.  Recurrent
+    # mixers (rwkv/mamba/hybrid) scan along the sequence and keep residuals
+    # seq-unsharded; their per-block remat granularity bounds memory instead.
+    res_seq = m if (not decode and cfg.mixer == "attn"
+                    and plan.seq_parallel_residuals) else seq
+    cache_seq = plan.decode_cache_axes
+    return {
+        # (B, S, d): sequence sharded for context-parallel plans + SP
+        "act_btd": P(dp, res_seq, None),
+        # (B, S, f): FFN hidden — TP for head plans, seq-sharded for CP
+        "act_btf": P(dp, seq, None if cp else m),
+        # (B, S, V)
+        "logits": P(dp, seq, None if cp else m),
+        # (B, S, H, hd)
+        "heads_q": P(dp, seq, None if cp else m, None),
+        "heads_kv": P(dp, seq, (m if plan.kv_tp else None) if not cp else None,
+                      None),
+        # decode KV cache (B, Sc, Kv, hd): sequence-sharded flash-decode
+        "kv_cache": P(dp if not decode or len(cache_seq) == 1 else None,
+                      cache_seq if decode else None, None, None),
+        # MoE buffers (E=experts over model, capacity over data)
+        "expert_buf": P(m, dp, None),
+        "expert_hidden": P(m, dp, None),
+        # MoE group-local dispatch tensors (G = data shards)
+        "moe_group_tokens": P(dp, None, None),
+        "moe_group_buf": P(dp, None, None, None),
+        # rwkv
+        "rwkv_heads": P(dp, None, m, None),
+        "rwkv_state": P(dp, m, None, None),
+        # mamba
+        "mamba_inner": P(dp, seq, m),
+        "mamba_state": P(dp, m, None),
+    }
+
+
+def make_param_gatherer(cfg: ModelConfig, plan: ParallelPlan):
+    """Per-layer FSDP de-gather: constraint mapping a (sliced, per-iteration)
+    layer-param pytree to its *replicated-over-fsdp* layout (model-axis
+    sharding kept).  Applied inside the scan body so the all-gather is
+    loop-variant and cannot be hoisted over the whole layer stack."""
+    gplan = dataclasses.replace(plan, fsdp=())
+
+    def gather(lp):
+        def one(path, leaf):
+            spec = _param_spec(cfg, gplan, path, len(leaf.shape))
+            return jax.lax.with_sharding_constraint(
+                leaf, fitted(plan, spec, leaf.shape))
+        return jax.tree_util.tree_map_with_path(one, lp)
+
+    return gather
+
+
+def make_runtime(cfg: ModelConfig, plan: ParallelPlan, shape: ShapeConfig,
+                 **overrides):
+    """Runtime wired to this plan's activation constraints.
+
+    Context-parallel plans keep q seq-sharded through attention, so the
+    blocked-attention path must not scan over the (sharded) query-chunk
+    axis: q_chunk = S makes it a single iteration and the KV scan provides
+    the memory bound.
+    """
+    from repro.models.layers import Runtime
+    import jax.numpy as jnp
+    kw = dict(
+        param_dtype=jnp.bfloat16,
+        compute_dtype=jnp.bfloat16,
+        remat=shape.mode == "train",
+        constrain=make_constrainer(cfg, plan),
+        moe_impl="dropping" if cfg.moe.n_experts else "auto",
+        moe_groups=plan.axis_size(plan.dp),
+    )
+    if plan.attn == "context":
+        kw["attn_q_chunk"] = shape.seq_len
+    if overrides.pop("fsdp_gather_per_block", False):
+        kw["gather_params"] = make_param_gatherer(cfg, plan)
+    kw.update(overrides)
+    return Runtime(**kw)
+
+
+def make_constrainer(cfg: ModelConfig, plan: ParallelPlan):
+    specs = activation_specs(cfg, plan)
+
+    def constrain(name: str, x):
+        spec = specs.get(name)
+        if spec is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, fitted(plan, spec, x))
+
+    return constrain
+
+
+# ---------------------------------------------------------------------------
+# batch / cache input specs
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg: ModelConfig, plan: ParallelPlan, batch) -> Dict:
+    """NamedShardings for a batch pytree (tokens/labels/embeds/...)."""
+    dp = plan.dp
+    cp_seq = plan.tp if plan.attn == "context" and plan.shape_mode != "decode" else None
+
+    def one(path, leaf):
+        names = [getattr(p, "key", str(p)) for p in path]
+        leaf_name = names[-1] if names else ""
+        nd = len(leaf.shape)
+        if leaf_name in ("tokens", "labels"):
+            return fitted(plan, P(dp, cp_seq), leaf.shape)
+        if leaf_name == "embeds":
+            return fitted(plan, P(dp, cp_seq, None), leaf.shape)
+        if leaf_name == "vision_embeds":
+            return fitted(plan, P(dp, None, None), leaf.shape)
+        if leaf_name == "position_ids":
+            return fitted(plan, P(None, dp, cp_seq), leaf.shape)
+        if nd == 0:
+            return fitted(plan, P(), leaf.shape)
+        return fitted(plan, P(dp), leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(one, batch)
+
+
+def cache_shardings(cfg: ModelConfig, plan: ParallelPlan, cache_shape):
+    """Shardings for a decode cache pytree (from jax.eval_shape)."""
+    specs = activation_specs(cfg, plan)
+
+    def one(path, leaf):
+        names = [getattr(p, "key", getattr(p, "name", str(p))) for p in path]
+        leaf_name = names[-1]
+        stacked = "blocks" in names
+        pad = (None,) if stacked else ()
+        nd = len(leaf.shape) - len(pad)
+        if leaf_name in ("k", "v"):
+            spec = specs["kv_cache"]
+        elif leaf_name == "wkv":
+            spec = specs["rwkv_state"] if nd == 4 else P(plan.dp, plan.tp)
+            if nd == 4:
+                spec = P(plan.dp, plan.tp, None, None)
+        elif leaf_name == "ssm":
+            spec = specs["mamba_state"]
+        elif leaf_name == "conv":
+            spec = P(plan.dp, None, plan.tp)
+        elif leaf_name == "x_prev":
+            spec = P(plan.dp, None)
+        elif leaf_name in ("kpos", "idx"):
+            spec = P()
+        else:
+            spec = P()
+        return fitted(plan, P(*(pad + tuple(spec))), leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)

@@ -1,0 +1,95 @@
+"""Pipeline parallelism: GPipe schedule over a mesh axis via shard_map +
+collective_permute (ppermute), jax-native (no NCCL p2p emulation).
+
+Each device along the ``pipe`` axis owns one *stage* = a contiguous group
+of layers (stacked params, leading dim = stage).  A global minibatch is
+split into M microbatches; for ``M + P - 1`` ticks every stage computes on
+its current activation and ppermutes it to the next stage.  Ticks where a
+stage holds no valid microbatch are the *pipeline bubble* — fraction
+(P-1)/(M+P-1), exactly the term the paper's cost model charges
+(``core/costmodel.py``).
+
+Differentiable: shard_map + ppermute have transpose rules, so the same
+function trains under jax.grad (the backward pass runs the reverse
+schedule automatically).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def pipeline_apply(stage_fn: Callable, params_stacked, x_microbatches,
+                   mesh, axis: str = "pipe"):
+    """Run x through P stages of stage_fn under a GPipe schedule.
+
+    stage_fn: (stage_params, h) -> h, applied by every stage.
+    params_stacked: pytree with leading dim P (one slice per stage).
+    x_microbatches: (M, mb, ...) microbatched activations (replicated).
+    Returns (M, mb, ...) outputs.
+    """
+    n_stages = mesh.shape[axis]
+
+    def per_stage(params_local, xs):
+        # params_local: stage slice (leading dim 1); xs: (M, mb, ...)
+        params_local = jax.tree.map(lambda a: a[0], params_local)
+        stage = jax.lax.axis_index(axis)
+        M = xs.shape[0]
+        mb_shape = xs.shape[1:]
+        state = jnp.zeros(mb_shape, xs.dtype)          # activation in flight
+        outputs = jnp.zeros_like(xs)
+
+        def tick(carry, t):
+            state, outputs = carry
+            # stage 0 ingests microbatch t (while valid)
+            inject = xs[jnp.minimum(t, M - 1)]
+            h = jnp.where(stage == 0, inject, state)
+            h = stage_fn(params_local, h)
+            # last stage emits microbatch t - (P-1)
+            out_slot = t - (n_stages - 1)
+            valid = (out_slot >= 0) & (out_slot < M)
+            outputs = jax.lax.cond(
+                valid & (stage == n_stages - 1),
+                lambda o: jax.lax.dynamic_update_slice(
+                    o, h[None], (jnp.maximum(out_slot, 0),) + (0,) * h.ndim),
+                lambda o: o, outputs)
+            # hand activation to the next stage
+            state = jax.lax.ppermute(
+                h, axis, [(i, (i + 1) % n_stages) for i in range(n_stages)])
+            return (state, outputs), None
+
+        (state, outputs), _ = jax.lax.scan(
+            tick, (state, outputs), jnp.arange(M + n_stages - 1))
+        # only the last stage's buffer holds real outputs; select+broadcast
+        mask = (stage == n_stages - 1).astype(outputs.dtype)
+        return jax.lax.psum(outputs * mask, axis)
+
+    pspec = jax.tree.map(lambda _: P(axis), params_stacked)
+    fn = jax.shard_map(
+        per_stage, mesh=mesh,
+        in_specs=(pspec, P()), out_specs=P(),
+        check_vma=False)
+    return fn(params_stacked, x_microbatches)
+
+
+def make_pipelined_block_fn(cfg, rt):
+    """stage_fn applying `layers_per_stage` stacked transformer layers."""
+    from repro.models.transformer import _apply_layer, _sig
+
+    def stage_fn(stage_params, h):
+        # stage_params: {'layers': pytree stacked (L_per_stage, ...)}
+        def body(h_, lp):
+            h2, _, _ = _apply_layer(cfg, _sig(cfg, 0), lp, h_, None, rt)
+            return h2, None
+        h, _ = jax.lax.scan(body, h, stage_params["layers"])
+        return h
+
+    return stage_fn
+
+
+def bubble_fraction(n_stages: int, n_microbatches: int) -> float:
+    return (n_stages - 1) / (n_microbatches + n_stages - 1)

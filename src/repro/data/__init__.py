@@ -1,0 +1,3 @@
+from repro.data.pipeline import SyntheticSource, BinTokenSource, Batcher
+
+__all__ = ["SyntheticSource", "BinTokenSource", "Batcher"]

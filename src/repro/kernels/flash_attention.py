@@ -1,0 +1,123 @@
+"""Pallas TPU flash attention (forward): blocked online softmax in VMEM.
+
+TPU-native design (not a CUDA port, see DESIGN.md §2):
+  * grid = (batch*kv_heads*q_per_kv, n_q_blocks, n_kv_blocks); the minormost
+    kv-block axis executes sequentially on a TensorCore, so the running
+    (m, l, acc) state lives in VMEM scratch and is carried across kv steps
+    — the TPU analogue of a persistent CTA loop.
+  * BlockSpecs tile q/k/v to (block_q|block_kv, head_dim) VMEM windows;
+    block sizes default to 128/256 to keep the MXU's 128-lane shape and a
+    working set of ~(2*bq*D + 2*bk*D + bq*bk)*4B well under VMEM.
+  * GQA: q heads are grouped by kv head via index_map arithmetic — no
+    repeated K/V in HBM.
+  * causal + sliding-window masks built from absolute block offsets with
+    broadcasted iota (2D, as the TPU requires).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale, block_q, block_kv, n_kv, causal, window, seq_len):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)                    # (bq, D)
+    k = k_ref[0].astype(jnp.float32)                    # (bk, D)
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale  # (bq,bk)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_kv), 0)
+    k_pos = kj * block_kv + jax.lax.broadcasted_iota(jnp.int32,
+                                                     (block_q, block_kv), 1)
+    mask = k_pos < seq_len
+    if causal:
+        mask &= k_pos <= q_pos
+    if window:
+        mask &= k_pos > (q_pos - window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                                 # (bq, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    # fully-masked rows: make exp(NEG_INF - NEG_INF)=1 contributions vanish
+    p = jnp.where(mask, p, 0.0)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    m_scr[...] = m_new
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(p, v)
+
+    @pl.when(kj == n_kv - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "block_q", "block_kv", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0,
+                    block_q=128, block_kv=256, interpret=False):
+    """q (B,S,H,D), k/v (B,S,Kv,D) -> (B,S,H,D). Self-attention layout."""
+    B, S, H, D = q.shape
+    Kv = k.shape[2]
+    G = H // Kv
+    assert H % Kv == 0, (H, Kv)
+    block_q = min(block_q, S)
+    block_kv = min(block_kv, S)
+    s_pad = -(-S // max(block_q, block_kv)) * max(block_q, block_kv)
+    if s_pad != S:
+        pad = [(0, 0), (0, s_pad - S), (0, 0), (0, 0)]
+        q = jnp.pad(q, pad)
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    Sp = q.shape[1]
+    nq, nk = Sp // block_q, Sp // block_kv
+
+    # (B, S, H, D) -> (B*H, S, D) with q heads grouped by kv head
+    qg = q.reshape(B, Sp, Kv, G, D).transpose(0, 2, 3, 1, 4) \
+          .reshape(B * Kv * G, Sp, D)
+    kg = k.transpose(0, 2, 1, 3).reshape(B * Kv, Sp, D)
+    vg = v.transpose(0, 2, 1, 3).reshape(B * Kv, Sp, D)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=D ** -0.5, block_q=block_q, block_kv=block_kv,
+        n_kv=nk, causal=causal, window=window, seq_len=S)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * Kv * G, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_kv, D), lambda b, i, j, G=G: (b // G, j, 0)),
+            pl.BlockSpec((1, block_kv, D), lambda b, i, j, G=G: (b // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Kv * G, Sp, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, kg, vg)
+
+    out = out.reshape(B, Kv, G, Sp, D).transpose(0, 3, 1, 2, 4) \
+             .reshape(B, Sp, H, D)
+    return out[:, :S]

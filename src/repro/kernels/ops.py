@@ -1,0 +1,34 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret='auto'`` executes the kernel bodies in Python on CPU (the
+validation substrate) and compiles them for real on TPU.  Model code calls
+these through ``Runtime.attn_impl == 'pallas'``.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.rmsnorm import rmsnorm as _rmsnorm
+from repro.kernels.rwkv6 import wkv6 as _wkv6
+
+
+def _interp(interpret):
+    if interpret == "auto":
+        return jax.default_backend() != "tpu"
+    return bool(interpret)
+
+
+def attention(q, k, v, *, causal=True, window=0, block_q=128, block_kv=256,
+              interpret="auto"):
+    return _flash(q, k, v, causal=causal, window=window, block_q=block_q,
+                  block_kv=block_kv, interpret=_interp(interpret))
+
+
+def rmsnorm(x, scale, *, eps=1e-6, block_rows=256, interpret="auto"):
+    return _rmsnorm(x, scale, eps=eps, block_rows=block_rows,
+                    interpret=_interp(interpret))
+
+
+def wkv6(r, k, v, w, u, *, chunk=64, interpret="auto"):
+    return _wkv6(r, k, v, w, u, chunk=chunk, interpret=_interp(interpret))

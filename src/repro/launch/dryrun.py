@@ -1,0 +1,257 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, and record memory / FLOP / collective statistics.
+
+This is the proof that the distribution config is coherent without real
+hardware: a sharding mismatch, compile-time OOM, or unsupported collective
+fails here.  Results feed EXPERIMENTS.md §Dry-run and §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
+  python -m repro.launch.dryrun --arch all --shape all [--multi_pod]
+  python -m repro.launch.dryrun ... --out results/dryrun
+"""
+import argparse
+import dataclasses
+import functools
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_compilation_cache_dir", "/tmp/jax_cache")
+jax.config.update("jax_persistent_cache_min_compile_time_secs", 2.0)
+
+from repro.configs import SHAPES, get_config, list_archs, supports_shape
+from repro.core import parallel as par
+from repro.launch import specs as specs_lib
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer as tfm
+from repro.optim import init_opt_state
+from repro.perf import flops as flops_lib
+from repro.perf.hlo import collective_stats
+from repro.serve.engine import make_prefill, make_serve_step
+from repro.train.trainer import TrainConfig, make_train_step
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _to_dtype_sds(shapes, shardings, float_dtype):
+    def one(s, sh):
+        dt = float_dtype if jnp.issubdtype(s.dtype, jnp.floating) else s.dtype
+        return SDS(s.shape, dt, sharding=sh)
+    return jax.tree.map(one, shapes, shardings)
+
+
+def _attach(shapes, shardings):
+    return jax.tree.map(lambda s, sh: SDS(s.shape, s.dtype, sharding=sh),
+                        shapes, shardings)
+
+
+def lower_one(arch: str, shape_name: str, multi_pod: bool,
+              dp_mode: str = "hsdp", attn_override=None, rt_overrides=None,
+              donate: bool = False, seq_parallel: bool = True,
+              grad_accum: int = 1):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    plan = par.choose_plan(cfg, mesh, shape, dp_mode=dp_mode,
+                           attn_override=attn_override,
+                           seq_parallel=seq_parallel)
+    rt = par.make_runtime(cfg, plan, shape, **(rt_overrides or {}))
+
+    key = jax.random.PRNGKey(0)
+    pshapes = jax.eval_shape(functools.partial(tfm.init_params, cfg), key)
+    pshard = par.param_shardings(cfg, plan, pshapes)
+    params_sds = _to_dtype_sds(pshapes, pshard, jnp.bfloat16)
+
+    with jax.set_mesh(mesh):
+        if shape.mode == "train":
+            batch = specs_lib.train_batch_specs(cfg, shape)
+            bshard = par.batch_specs(cfg, plan, batch)
+            batch_sds = _attach(batch, bshard)
+            oshapes = jax.eval_shape(init_opt_state, params_sds)
+            oshard = {"m": pshard, "v": pshard,
+                      "step": par.fitted(plan, par.P(), ())}
+            opt_sds = _attach(oshapes, oshard)
+            step = make_train_step(cfg, rt, TrainConfig(grad_accum=grad_accum))
+            lowered = jax.jit(step, out_shardings=(pshard, oshard, None),
+                              donate_argnums=(0, 1) if donate else ()) \
+                .lower(params_sds, opt_sds, batch_sds)
+        elif shape.mode == "prefill":
+            batch = specs_lib.prefill_batch_specs(cfg, shape)
+            bshard = par.batch_specs(cfg, plan, batch)
+            batch_sds = _attach(batch, bshard)
+            fn = make_prefill(cfg, rt, max_len=shape.seq_len)
+            cshapes = jax.eval_shape(
+                lambda: tfm.init_cache(cfg, shape.global_batch, shape.seq_len,
+                                       jnp.bfloat16, par.make_runtime(
+                                           cfg, plan, shape, constrain=None)))
+            cshard = par.cache_shardings(cfg, plan, cshapes)
+            lowered = jax.jit(fn, out_shardings=(None, cshard)) \
+                .lower(params_sds, batch_sds)
+        else:  # decode
+            rt_nc = par.make_runtime(cfg, plan, shape, constrain=None)
+            cshapes = jax.eval_shape(
+                lambda: tfm.init_cache(cfg, shape.global_batch, shape.seq_len,
+                                       jnp.bfloat16, rt_nc))
+            cshard = par.cache_shardings(cfg, plan, cshapes)
+            cache_sds = _attach(cshapes, cshard)
+            tokens, pos = specs_lib.decode_token_specs(cfg, shape)
+            tok_sds = SDS(tokens.shape, tokens.dtype,
+                          sharding=par.fitted(plan, par.P(plan.dp, None),
+                                              tokens.shape))
+            pos_sds = SDS((), jnp.int32,
+                          sharding=par.fitted(plan, par.P(), ()))
+            step = make_serve_step(cfg, rt)
+            lowered = jax.jit(step, out_shardings=(None, cshard)) \
+                .lower(params_sds, cache_sds, tok_sds, pos_sds)
+    return cfg, shape, plan, lowered
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+            dp_mode: str = "hsdp", attn_override=None, tag: str = "",
+            rt_overrides=None, donate: bool = False,
+            seq_parallel: bool = True, grad_accum: int = 1):
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    label = f"{arch}_{shape_name}_{mesh_name}" + (f"_{tag}" if tag else "")
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if not supports_shape(cfg, shape):
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "status": "skipped",
+               "reason": "requires sub-quadratic attention (DESIGN.md §4)"}
+        _write(out_dir, label, rec)
+        print(f"[dryrun] {label}: SKIP (full attention, long context)")
+        return rec
+
+    t0 = time.time()
+    try:
+        cfg, shape, plan, lowered = lower_one(arch, shape_name, multi_pod,
+                                              dp_mode, attn_override,
+                                              rt_overrides, donate,
+                                              seq_parallel, grad_accum)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        # trip-count-scaled: while bodies multiplied by known_trip_count
+        coll = collective_stats(compiled.as_text())
+        n_dev = plan.mesh.devices.size          # chips in THIS mesh
+        rec = {
+            "arch": arch, "shape": shape_name, "mesh": mesh_name,
+            "status": "ok", "plan": {
+                "attn": plan.attn, "kv_tp": plan.kv_tp, "dp": list(plan.dp),
+                "fsdp": list(plan.fsdp),
+                "decode_cache_axes": list(plan.decode_cache_axes)},
+            "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+            "n_devices": n_dev,
+            "flops_hlo_per_device_raw": cost.get("flops", 0.0),
+            "bytes_accessed_per_device_raw": cost.get("bytes accessed", 0.0),
+            "flops_compiled_analytic": flops_lib.compiled_flops(
+                cfg, shape, remat=(shape.mode == "train")),
+            "flops_forward_analytic": flops_lib.forward_flops(cfg, shape),
+            "flops_model_6nd": flops_lib.model_flops(cfg, shape),
+            "memory": {
+                "argument_bytes_per_device": getattr(mem, "argument_size_in_bytes", 0),
+                "output_bytes_per_device": getattr(mem, "output_size_in_bytes", 0),
+                "temp_bytes_per_device": getattr(mem, "temp_size_in_bytes", 0),
+                "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", 0),
+            },
+            "collectives": coll,
+            "collective_bytes_total": int(sum(v["bytes"] for v in coll.values())),
+            "params_total": cfg.param_count(),
+            "params_active": cfg.active_param_count(),
+            "rt_overrides": {k: bool(v) if isinstance(v, bool) else v
+                             for k, v in (rt_overrides or {}).items()
+                             if not callable(v)},
+            "donate": donate,
+        }
+        print(f"[dryrun] {label}: OK  compile {t_compile:.0f}s  "
+              f"flops {rec['flops_compiled_analytic']:.3e}  "
+              f"coll {rec['collective_bytes_total']:.3e}B  "
+              f"temp/dev {rec['memory']['temp_bytes_per_device']/2**30:.2f}GiB")
+    except Exception as e:  # noqa: BLE001 — record failures, keep sweeping
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "status": "error", "error": repr(e),
+               "traceback": traceback.format_exc()[-4000:]}
+        print(f"[dryrun] {label}: FAIL {e!r}")
+    _write(out_dir, label, rec)
+    return rec
+
+
+def _write(out_dir, label, rec):
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, label + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi_pod", action="store_true")
+    ap.add_argument("--both_meshes", action="store_true")
+    ap.add_argument("--dp_mode", default="hsdp", choices=["hsdp", "fsdp2d"])
+    ap.add_argument("--attn", default=None, choices=[None, "head_tp", "context"])
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--skip_existing", action="store_true")
+    # perf-iteration knobs (§Perf): each maps to a Runtime override
+    ap.add_argument("--donate", action="store_true",
+                    help="donate params+opt buffers to the step")
+    ap.add_argument("--remat_inner", action="store_true",
+                    help="checkpoint each layer inside scanned blocks")
+    ap.add_argument("--gather_per_block", action="store_true",
+                    help="force per-layer FSDP all-gather inside the scan")
+    ap.add_argument("--mamba_chunk", type=int, default=0)
+    ap.add_argument("--rwkv_chunk", type=int, default=0)
+    ap.add_argument("--attn_kv_chunk", type=int, default=0)
+    ap.add_argument("--attn_q_chunk", type=int, default=0)
+    ap.add_argument("--no_sp", action="store_true",
+                    help="disable sequence-parallel residual stream")
+    ap.add_argument("--grad_accum", type=int, default=1)
+    args = ap.parse_args()
+    rt_overrides = {}
+    if args.remat_inner:
+        rt_overrides["remat_inner"] = True
+    if args.gather_per_block:
+        rt_overrides["fsdp_gather_per_block"] = True
+    for k in ("mamba_chunk", "rwkv_chunk", "attn_kv_chunk", "attn_q_chunk"):
+        if getattr(args, k):
+            rt_overrides[k] = getattr(args, k)
+
+    archs = list_archs(assigned_only=True) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                mesh_name = "pod2x16x16" if mp else "pod16x16"
+                label = f"{arch}_{shape}_{mesh_name}" + \
+                    (f"_{args.tag}" if args.tag else "")
+                path = os.path.join(args.out, label + ".json")
+                if args.skip_existing and os.path.exists(path):
+                    with open(path) as f:
+                        if json.load(f).get("status") in ("ok", "skipped"):
+                            print(f"[dryrun] {label}: cached")
+                            continue
+                rec = run_one(arch, shape, mp, args.out, args.dp_mode,
+                              args.attn, args.tag, rt_overrides, args.donate,
+                              not args.no_sp, args.grad_accum)
+                n_fail += rec["status"] == "error"
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Production mesh builders.
+
+TPU v5e target: one pod = 256 chips as a (16, 16) (data, model) mesh;
+multi-pod = 2 pods = 512 chips with a leading 'pod' axis (DCN-connected).
+Functions, not module constants: importing this module must never touch
+jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1, pod: int = 0):
+    """Small mesh over however many (fake) devices are present (tests)."""
+    if pod:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,68 @@
+"""ShapeDtypeStruct stand-ins for every model input: the dry-run's inputs.
+
+``input_specs(cfg, shape)`` returns the abstract batch for train/prefill or
+the (tokens, pos) pair for decode; modality frontends (audio codec / vision
+tower) are stubbed as precomputed embeddings of the right shape, per the
+brief.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig,
+                      dtype=jnp.bfloat16) -> Dict:
+    B, S = shape.global_batch, shape.seq_len
+    batch = {}
+    if cfg.input_mode == "embeddings":
+        batch["embeds"] = SDS((B, S, cfg.d_model), dtype)
+    else:
+        batch["tokens"] = SDS((B, S), jnp.int32)
+    batch["labels"] = SDS((B, S), jnp.int32)
+    if cfg.input_mode == "tokens+vision":
+        batch["vision_embeds"] = SDS((B, cfg.vision_tokens, cfg.d_model), dtype)
+        batch["position_ids"] = SDS((3, B, S), jnp.int32)
+    return batch
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: ShapeConfig,
+                        dtype=jnp.bfloat16) -> Dict:
+    batch = train_batch_specs(cfg, shape, dtype)
+    batch.pop("labels")
+    return batch
+
+
+def decode_token_specs(cfg: ModelConfig, shape: ShapeConfig):
+    B = shape.global_batch
+    tokens = SDS((B, 1), jnp.int32)
+    pos = SDS((), jnp.int32)
+    return tokens, pos
+
+
+def concrete_train_batch(cfg: ModelConfig, batch_size: int, seq_len: int,
+                         key, dtype=jnp.float32) -> Dict:
+    """Small concrete batch for smoke tests (same structure as the specs)."""
+    ks = jax.random.split(key, 4)
+    batch = {}
+    if cfg.input_mode == "embeddings":
+        batch["embeds"] = jax.random.normal(
+            ks[0], (batch_size, seq_len, cfg.d_model), dtype) * 0.1
+    else:
+        batch["tokens"] = jax.random.randint(
+            ks[0], (batch_size, seq_len), 0, cfg.vocab_size)
+    batch["labels"] = jax.random.randint(
+        ks[1], (batch_size, seq_len), 0, cfg.vocab_size)
+    if cfg.input_mode == "tokens+vision":
+        batch["vision_embeds"] = jax.random.normal(
+            ks[2], (batch_size, cfg.vision_tokens, cfg.d_model), dtype) * 0.02
+        pos = jnp.broadcast_to(jnp.arange(seq_len, dtype=jnp.int32)[None],
+                               (batch_size, seq_len))
+        batch["position_ids"] = jnp.broadcast_to(pos[None], (3, batch_size, seq_len))
+    return batch

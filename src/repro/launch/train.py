@@ -1,0 +1,84 @@
+"""Training driver: ``python -m repro.launch.train --arch qwen3-0.6b ...``
+
+Runs real training on whatever devices exist (CPU here; the same code path
+lowers for the production TPU mesh — the mesh shape is the only delta).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import SHAPES, get_config, reduced, ShapeConfig
+from repro.core import parallel as par
+from repro.data import Batcher, BinTokenSource, SyntheticSource
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.optim import AdamWConfig
+from repro.train.trainer import TrainConfig, train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="smoke-scale variant of the arch")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq_len", type=int, default=512)
+    ap.add_argument("--global_batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--grad_accum", type=int, default=1)
+    ap.add_argument("--data", default="synthetic",
+                    help="'synthetic' or a path to a flat uint16 token file")
+    ap.add_argument("--ckpt_dir", default="")
+    ap.add_argument("--ckpt_every", type=int, default=0)
+    ap.add_argument("--log_every", type=int, default=10)
+    ap.add_argument("--mesh", default="host",
+                    choices=["host", "pod", "multipod"],
+                    help="'host' = all local devices as (data,); 'pod'/"
+                         "'multipod' = production meshes (needs real chips)")
+    ap.add_argument("--dp_mode", default="hsdp", choices=["hsdp", "fsdp2d"])
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+
+    if args.mesh == "host":
+        mesh = make_host_mesh(data=len(jax.devices()), model=1)
+    else:
+        mesh = make_production_mesh(multi_pod=args.mesh == "multipod")
+
+    shape = ShapeConfig("cli", args.seq_len, args.global_batch, "train")
+    plan = par.choose_plan(cfg, mesh, shape, dp_mode=args.dp_mode)
+    rt = par.make_runtime(cfg, plan, shape,
+                          param_dtype=jnp.float32, compute_dtype=jnp.float32,
+                          remat=False, rwkv_chunk=32, mamba_chunk=64,
+                          attn_min_chunked_len=max(2048, args.seq_len + 1)
+                          if args.seq_len <= 2048 else 2048)
+
+    if args.data == "synthetic":
+        src = SyntheticSource(cfg.vocab_size, seed=args.seed)
+    else:
+        src = BinTokenSource(args.data)
+    batches = Batcher(src, args.seq_len, args.global_batch)
+
+    tc = TrainConfig(steps=args.steps, warmup=max(args.steps // 20, 1),
+                     log_every=args.log_every, ckpt_every=args.ckpt_every,
+                     ckpt_dir=args.ckpt_dir or os.path.join("results", "ckpt",
+                                                            cfg.name),
+                     grad_accum=args.grad_accum,
+                     opt=AdamWConfig(lr=args.lr))
+    params, opt_state, history = train_loop(
+        cfg, plan, rt, tc, batches, key=jax.random.PRNGKey(args.seed))
+    losses = [h["loss"] for h in history]
+    print(f"done: loss {losses[0]:.4f} -> {losses[-1]:.4f} "
+          f"over {args.steps} steps")
+    return history
+
+
+if __name__ == "__main__":
+    main()

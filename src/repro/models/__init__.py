@@ -1,0 +1,9 @@
+from repro.models.layers import Runtime, DEFAULT_RUNTIME
+from repro.models.transformer import (
+    init_params, init_cache, forward, loss_fn, prefill, decode_step,
+    layer_plan, param_count_actual)
+
+__all__ = [
+    "Runtime", "DEFAULT_RUNTIME", "init_params", "init_cache", "forward",
+    "loss_fn", "prefill", "decode_step", "layer_plan", "param_count_actual",
+]

@@ -1,0 +1,271 @@
+"""Attention: GQA with RoPE/M-RoPE, sliding windows, qk-norm, KV caches.
+
+Two execution paths:
+  * dense masked attention for short sequences / decode (1 query token);
+  * a blocked online-softmax path (lax.scan over KV chunks inside a scan
+    over Q chunks) so that S x S score matrices are never materialized --
+    this is what makes 32k-prefill fit in ``memory_analysis`` and it is the
+    pure-jnp oracle for the Pallas flash kernel in ``repro.kernels``.
+
+All functions are batch-first: q (B, Sq, H, D), k/v (B, Skv, Kv, D).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (Runtime, apply_rope, rms_norm_headwise)
+
+NEG_INF = -1e30
+
+
+def init_attention(cfg, key):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.kv_heads, cfg.head_dim_
+    ks = jax.random.split(key, 4)
+    s = d ** -0.5
+    p = {
+        "wq": jax.random.normal(ks[0], (d, h * hd)) * s,
+        "wk": jax.random.normal(ks[1], (d, kv * hd)) * s,
+        "wv": jax.random.normal(ks[2], (d, kv * hd)) * s,
+        "wo": jax.random.normal(ks[3], (h * hd, d)) * ((h * hd) ** -0.5),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,))
+        p["bk"] = jnp.zeros((kv * hd,))
+        p["bv"] = jnp.zeros((kv * hd,))
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,))
+        p["k_norm"] = jnp.ones((hd,))
+    return p
+
+
+# ---------------------------------------------------------------------------
+# masking helpers
+# ---------------------------------------------------------------------------
+
+def _mask(q_pos, k_pos, window):
+    """(..., Sq, Skv) boolean: causal (+ sliding window) visibility."""
+    m = k_pos[..., None, :] <= q_pos[..., :, None]
+    if window:
+        m &= k_pos[..., None, :] > (q_pos[..., :, None] - window)
+    return m
+
+
+# ---------------------------------------------------------------------------
+# dense path
+# ---------------------------------------------------------------------------
+
+def _attend_dense(q, k, v, q_pos, k_pos, window, scale):
+    """q (B,Sq,H,D), k/v (B,Skv,Kv,D); q_pos (Sq,), k_pos (Skv,)."""
+    B, Sq, H, D = q.shape
+    Kv = k.shape[2]
+    G = H // Kv
+    qg = q.reshape(B, Sq, Kv, G, D)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32) * scale
+    mask = _mask(q_pos, k_pos, window)                       # (Sq, Skv)
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, v)
+    return out.reshape(B, Sq, H, D)
+
+
+# ---------------------------------------------------------------------------
+# blocked online-softmax path (flash-style, pure jnp)
+# ---------------------------------------------------------------------------
+
+def _attend_blocked(q, k, v, window, scale, q_chunk, kv_chunk):
+    """Causal self-attention, q_pos == k_pos == arange(S).
+
+    Scans KV chunks with running (max, denom, acc); scans Q chunks outside.
+    Skips fully-masked KV chunks' contribution via masking (the scan itself
+    still visits them; XLA removes the FLOPs only on TPU via the Pallas
+    kernel -- here correctness + memory are what matter).
+    """
+    B, S, H, D = q.shape
+    Kv = k.shape[2]
+    G = H // Kv
+    q_chunk = min(q_chunk, S)
+    kv_chunk = min(kv_chunk, S)
+    nq, nk = S // q_chunk, S // kv_chunk
+    assert S % q_chunk == 0 and S % kv_chunk == 0, (S, q_chunk, kv_chunk)
+
+    qg = q.reshape(B, nq, q_chunk, Kv, G, D).transpose(1, 0, 2, 3, 4, 5)
+    kc = k.reshape(B, nk, kv_chunk, Kv, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nk, kv_chunk, Kv, D).transpose(1, 0, 2, 3, 4)
+
+    @jax.checkpoint
+    def q_step(_, qi_qblk):
+        qi, qblk = qi_qblk                                   # qblk (B,qc,Kv,G,D)
+        q_pos = qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, kj_kv):
+            m_run, l_run, acc = carry
+            kj, kblk, vblk = kj_kv
+            k_pos = kj * kv_chunk + jnp.arange(kv_chunk)
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qblk, kblk).astype(jnp.float32) * scale
+            msk = _mask(q_pos, k_pos, window)                # (qc, kc)
+            s = jnp.where(msk[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_run, s.max(-1))
+            alpha = jnp.exp(m_run - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l_run * alpha + p.sum(-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd", p.astype(vblk.dtype), vblk).astype(jnp.float32)
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((B, Kv, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Kv, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, Kv, G, q_chunk, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nk), kc, vc))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(q.dtype)                     # (B,Kv,G,qc,D)
+
+    _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq), qg))
+    # outs: (nq, B, Kv, G, qc, D) -> (B, S, H, D)
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, S, H, D)
+    return out
+
+
+def sdpa_causal(q, k, v, window=0, rt: Optional[Runtime] = None):
+    """Self-attention where q/k/v cover the same positions 0..S-1."""
+    rt = rt or Runtime()
+    S = q.shape[1]
+    scale = q.shape[-1] ** -0.5
+    if rt.attn_impl == "pallas" and S >= 128 and q.shape[-1] % 64 == 0:
+        # TPU hot path: Pallas flash kernel (interpret-mode on CPU)
+        from repro.kernels import ops as kernel_ops
+        return kernel_ops.attention(q, k, v, window=window)
+    if S <= rt.attn_min_chunked_len:
+        pos = jnp.arange(S)
+        return _attend_dense(q, k, v, pos, pos, window, scale)
+    return _attend_blocked(q, k, v, window, scale, rt.attn_q_chunk, rt.attn_kv_chunk)
+
+
+def sdpa_decode(q, k_cache, v_cache, k_pos, cur_pos, window=0):
+    """One-token decode: q (B,1,H,D) against cache (B,Sc,Kv,D).
+
+    k_pos: (Sc,) absolute position held in each cache slot (-1 = empty);
+    cur_pos: scalar position of the query token.
+    """
+    scale = q.shape[-1] ** -0.5
+    B, Sq, H, D = q.shape
+    Kv = k_cache.shape[2]
+    G = H // Kv
+    qg = q.reshape(B, Sq, Kv, G, D)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k_cache).astype(jnp.float32) * scale
+    valid = (k_pos >= 0) & (k_pos <= cur_pos)
+    if window:
+        valid &= k_pos > (cur_pos - window)
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, v_cache)
+    return out.reshape(B, Sq, H, D)
+
+
+# ---------------------------------------------------------------------------
+# full attention block (projections + rope + cache plumbing)
+# ---------------------------------------------------------------------------
+
+def _project_qkv(cfg, p, x, rt: Runtime):
+    B, S, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.kv_heads, cfg.head_dim_
+    dt = x.dtype
+    q = jnp.einsum("bsd,de->bse", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,de->bse", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,de->bse", x, p["wv"].astype(dt))
+    if "bq" in p:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    q = q.reshape(B, S, h, hd)
+    k = k.reshape(B, S, kv, hd)
+    v = v.reshape(B, S, kv, hd)
+    if cfg.qk_norm:
+        q = rms_norm_headwise(p["q_norm"], q, cfg.norm_eps)
+        k = rms_norm_headwise(p["k_norm"], k, cfg.norm_eps)
+    return q, k, v
+
+
+def attention_block(cfg, p, x, rope_ang, rt: Runtime, cache=None,
+                    want_cache: bool = False):
+    """Full attention sublayer.
+
+    Train/prefill: x (B,S,d), cache None -> (out, new_cache | None).
+    Decode:        x (B,1,d), cache dict  -> (out, updated cache).
+    """
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(cfg, p, x, rt)
+    if rope_ang is not None:
+        q = apply_rope(q, rope_ang)
+        k = apply_rope(k, rope_ang)
+    q = rt.c("heads_q", q)
+    k = rt.c("heads_kv", k)
+    v = rt.c("heads_kv", v)
+
+    if cache is None:
+        out = sdpa_causal(q, k, v, cfg.sliding_window, rt)
+        new_cache = None
+        if want_cache:
+            new_cache = make_kv_cache(cfg, B, S, k.dtype, rt)
+            new_cache = prefill_kv_cache(new_cache, k, v, rt)
+    elif S > 1:
+        # prefill into a pre-allocated decode cache
+        out = sdpa_causal(q, k, v, cfg.sliding_window, rt)
+        new_cache = prefill_kv_cache(cache, k, v, rt)
+    else:
+        idx = cache["idx"]                                   # scalar int32
+        Sc = cache["k"].shape[1]
+        # ring arithmetic: position p lives at slot p % Sc.  For full-attn
+        # caches Sc == max seq so this is the identity.
+        slot = idx % Sc
+        k_cache = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+        k_pos = jax.lax.dynamic_update_slice(
+            cache["kpos"], idx[None].astype(cache["kpos"].dtype), (slot,))
+        k_cache = rt.c("kv_cache", k_cache)
+        v_cache = rt.c("kv_cache", v_cache)
+        out = sdpa_decode(q, k_cache, v_cache, k_pos, idx, cfg.sliding_window)
+        new_cache = {"k": k_cache, "v": v_cache, "kpos": k_pos, "idx": idx + 1}
+
+    out = out.reshape(B, S, -1)
+    out = jnp.einsum("bse,ed->bsd", out, p["wo"].astype(out.dtype))
+    return rt.c("act_btd", out), new_cache
+
+
+def make_kv_cache(cfg, batch, seq_len, dtype, rt: Runtime):
+    """Empty cache. SWA archs keep a window-sized ring buffer."""
+    size = min(seq_len, cfg.sliding_window) if cfg.sliding_window else seq_len
+    kv, hd = cfg.kv_heads, cfg.head_dim_
+    return {
+        "k": rt.c("kv_cache", jnp.zeros((batch, size, kv, hd), dtype)),
+        "v": rt.c("kv_cache", jnp.zeros((batch, size, kv, hd), dtype)),
+        "kpos": jnp.full((size,), -1, jnp.int32),
+        "idx": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill_kv_cache(cache, k, v, rt: Runtime):
+    """Write a full prefix of k/v (B,S,Kv,D) into a fresh cache."""
+    S = k.shape[1]
+    Sc = cache["k"].shape[1]
+    if S >= Sc:          # SWA: keep last Sc positions, ring-consistent layout
+        shift = (S - Sc) % Sc
+        ks = jnp.roll(k[:, S - Sc:], shift, axis=1)
+        vs = jnp.roll(v[:, S - Sc:], shift, axis=1)
+        kpos = jnp.roll(jnp.arange(S - Sc, S, dtype=jnp.int32), shift)
+        kc = rt.c("kv_cache", ks.astype(cache["k"].dtype))
+        vc = rt.c("kv_cache", vs.astype(cache["v"].dtype))
+    else:
+        kc = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0))
+        vc = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0))
+        kpos = jnp.where(jnp.arange(Sc) < S, jnp.arange(Sc), -1).astype(jnp.int32)
+        kc, vc = rt.c("kv_cache", kc), rt.c("kv_cache", vc)
+    return {"k": kc, "v": vc, "kpos": kpos,
+            "idx": jnp.asarray(S, jnp.int32)}

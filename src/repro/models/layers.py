@@ -1,0 +1,192 @@
+"""Shared building blocks: norms, positional encodings, FFNs, embeddings.
+
+Everything is a pure function over explicit parameter pytrees (dicts of
+jnp arrays); initialization lives next to the apply function.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# runtime knobs (orthogonal to ModelConfig: numerics / impl selection)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Runtime:
+    param_dtype: jnp.dtype = jnp.float32
+    compute_dtype: jnp.dtype = jnp.float32
+    remat: bool = False                 # checkpoint each scanned layer-block
+    attn_q_chunk: int = 1024            # query chunk for blocked attention
+    attn_kv_chunk: int = 1024           # kv chunk for blocked attention
+    attn_min_chunked_len: int = 2048    # below this, plain masked attention
+    rwkv_chunk: int = 64
+    mamba_chunk: int = 256
+    moe_impl: str = "auto"              # 'dense' | 'dropping' | 'auto'
+    moe_groups: int = 1                 # data shards = dispatch groups
+    remat_inner: bool = False           # additionally checkpoint each layer
+                                        # inside a scanned block (hybrids)
+    gather_params: Optional[Callable] = None
+                                        # per-block-iteration FSDP de-gather
+                                        # constraint (keeps the all-gather
+                                        # inside the layer loop instead of
+                                        # letting XLA hoist the whole stack)
+    attn_impl: str = "jnp"              # 'jnp' | 'pallas' (TPU hot path)
+    constrain: Optional[Callable] = None  # (name, x) -> x sharding constraint
+
+    def c(self, name: str, x):
+        """Apply a named sharding constraint if a parallel plan is active."""
+        if self.constrain is None:
+            return x
+        return self.constrain(name, x)
+
+
+DEFAULT_RUNTIME = Runtime()
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg, key, d=None):
+    d = d or cfg.d_model
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((d,)), "bias": jnp.zeros((d,))}
+    return {"scale": jnp.ones((d,))}
+
+
+def apply_norm(p, x, eps):
+    xf = x.astype(jnp.float32)
+    if "bias" in p:  # layernorm
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:            # rmsnorm
+        ms = (xf * xf).mean(-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_norm_headwise(scale, x, eps):
+    """Per-head q/k RMSNorm (Qwen3). x: (..., head_dim)."""
+    xf = x.astype(jnp.float32)
+    ms = (xf * xf).mean(-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary / positional embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def rope_angles(positions, head_dim, theta):
+    """positions: (..., S) int -> angles (..., S, head_dim//2) fp32."""
+    inv = rope_freqs(head_dim, theta)
+    return positions.astype(jnp.float32)[..., None] * inv
+
+
+def apply_rope(x, angles):
+    """x: (B, S, H, D); angles: (B, S, D//2). Rotates pairs (x[2i], x[2i+1])
+    laid out as two halves (llama convention)."""
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    # angles: (B, S, d2) -> (B, S, 1, d2) to broadcast over heads
+    cos = jnp.cos(angles)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(angles)[:, :, None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def mrope_angles(position_ids, head_dim, theta, sections):
+    """Qwen2-VL M-RoPE. position_ids: (3, B, S) for (t, h, w).
+
+    Returns angles (B, S, head_dim//2) where frequency slots are split into
+    three contiguous sections driven by the t/h/w position streams.
+    """
+    inv = rope_freqs(head_dim, theta)                      # (d2,)
+    ang = position_ids.astype(jnp.float32)[..., None] * inv  # (3, B, S, d2)
+    d2 = head_dim // 2
+    assert sum(sections) == d2, (sections, d2)
+    idx = np.zeros((d2,), dtype=np.int32)
+    off = 0
+    for s_i, sec in enumerate(sections):
+        idx[off:off + sec] = s_i
+        off += sec
+    sel = jnp.asarray(idx)                                 # (d2,)
+    # pick, per frequency slot, the angle stream named by `sel`
+    return jnp.einsum("sbtd,ds->btd", ang, jax.nn.one_hot(sel, 3, axis=-1))
+
+
+def sinusoidal_table(max_len: int, d_model: int) -> jnp.ndarray:
+    pos = np.arange(max_len)[:, None]
+    dim = np.arange(0, d_model, 2)[None, :]
+    ang = pos / np.power(10000.0, dim / d_model)
+    out = np.zeros((max_len, d_model), dtype=np.float32)
+    out[:, 0::2] = np.sin(ang)
+    out[:, 1::2] = np.cos(ang)
+    return jnp.asarray(out)
+
+
+# ---------------------------------------------------------------------------
+# embeddings
+# ---------------------------------------------------------------------------
+
+def init_embed(cfg, key):
+    k1, k2 = jax.random.split(key)
+    p = {"tok": jax.random.normal(k1, (cfg.vocab_size, cfg.d_model)) * 0.02}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = jax.random.normal(k2, (cfg.d_model, cfg.vocab_size)) \
+            * (cfg.d_model ** -0.5)
+    return p
+
+
+def embed_tokens(p, tokens, rt: Runtime):
+    w = p["tok"].astype(rt.compute_dtype)
+    return rt.c("act_btd", jnp.take(w, tokens, axis=0))
+
+
+def lm_logits(p, h, rt: Runtime):
+    if "lm_head" in p:
+        w = p["lm_head"].astype(rt.compute_dtype)
+    else:
+        w = p["tok"].astype(rt.compute_dtype).T
+    return rt.c("logits", jnp.einsum("bsd,dv->bsv", h, w))
+
+
+# ---------------------------------------------------------------------------
+# dense FFN (SwiGLU / GELU / relu^2)
+# ---------------------------------------------------------------------------
+
+def _act(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "relu2": lambda x: jnp.square(jax.nn.relu(x))}[name]
+
+
+def init_mlp(cfg, key, d_ff=None):
+    d, dff = cfg.d_model, d_ff or (cfg.dense_d_ff or cfg.d_ff)
+    ks = jax.random.split(key, 3)
+    scale_in, scale_out = d ** -0.5, dff ** -0.5
+    p = {"w_up": jax.random.normal(ks[0], (d, dff)) * scale_in,
+         "w_down": jax.random.normal(ks[1], (dff, d)) * scale_out}
+    if cfg.glu:
+        p["w_gate"] = jax.random.normal(ks[2], (d, dff)) * scale_in
+    return p
+
+
+def apply_mlp(cfg, p, x, rt: Runtime):
+    act = _act(cfg.act)
+    up = rt.c("act_btf", jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(x.dtype)))
+    if "w_gate" in p:
+        gate = rt.c("act_btf", jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(x.dtype)))
+        h = act(gate) * up
+    else:
+        h = act(up)
+    return rt.c("act_btd", jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(x.dtype)))

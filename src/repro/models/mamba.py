@@ -1,0 +1,148 @@
+"""Mamba-1 selective SSM block (for Jamba, arXiv:2403.19887 style).
+
+  x, z = in_proj(h)                        # (B,T,di) each, di = expand*d
+  x    = silu(causal_conv1d(x))            # depthwise, width d_conv
+  dt   = softplus(dt_proj(x_proj_dt(x)))   # (B,T,di)
+  B_t, C_t = x_proj(x)                     # (B,T,ds) each
+  h_t  = exp(dt_t * A) . h_{t-1} + (dt_t * x_t) outer B_t
+  y_t  = C_t . h_t + D * x_t
+  out  = out_proj(y * silu(z))
+
+The scan runs chunked: an outer ``lax.scan`` over sequence chunks carries
+the (B, di, ds) state; the inner per-chunk scan is wrapped in
+``jax.checkpoint`` so the backward pass recomputes intra-chunk states
+instead of storing (B, T, di, ds) activations (the standard Mamba-kernel
+memory trade adapted to XLA).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Runtime
+
+
+def _dt_rank(cfg):
+    return cfg.mamba.dt_rank or -(-cfg.d_model // 16)
+
+
+def init_mamba(cfg, key):
+    d = cfg.d_model
+    mc = cfg.mamba
+    di = mc.expand * d
+    dtr = _dt_rank(cfg)
+    ks = jax.random.split(key, 6)
+    s = d ** -0.5
+    A = jnp.tile(jnp.arange(1, mc.d_state + 1, dtype=jnp.float32)[None], (di, 1))
+    k_in1, k_in2 = jax.random.split(ks[0])
+    return {
+        # x/z projections kept separate so each shards cleanly on the
+        # model axis (a fused (d, 2*di) matrix would straddle the split)
+        "w_x_in": jax.random.normal(k_in1, (d, di)) * s,
+        "w_z_in": jax.random.normal(k_in2, (d, di)) * s,
+        "conv_w": jax.random.normal(ks[1], (mc.d_conv, di)) * (mc.d_conv ** -0.5),
+        "conv_b": jnp.zeros((di,)),
+        "w_x": jax.random.normal(ks[2], (di, dtr + 2 * mc.d_state)) * (di ** -0.5),
+        "w_dt": jax.random.normal(ks[3], (dtr, di)) * (dtr ** -0.5),
+        "b_dt": jnp.log(jnp.expm1(  # softplus^-1 of dt in [1e-3, 1e-1]
+            10 ** (jax.random.uniform(ks[4], (di,)) * 2.0 - 3.0))),
+        "A_log": jnp.log(A),
+        "D": jnp.ones((di,)),
+        "w_out": jax.random.normal(ks[5], (di, d)) * (di ** -0.5),
+    }
+
+
+def _causal_conv(x, w, b, conv_state=None):
+    """Depthwise causal conv. x (B,T,di), w (K,di). Returns (y, new_state).
+
+    conv_state: (B, K-1, di) trailing inputs from the previous segment."""
+    B, T, di = x.shape
+    K = w.shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((B, K - 1, di), x.dtype)
+    xp = jnp.concatenate([conv_state, x], axis=1)            # (B, T+K-1, di)
+    y = sum(xp[:, i:i + T] * w[i].astype(x.dtype) for i in range(K))
+    new_state = xp[:, T:]                                    # last K-1 inputs
+    return y + b.astype(x.dtype), new_state
+
+
+def _selective_scan_chunk(dt, Bt, Ct, x, A, h0):
+    """Sequential scan over one chunk. dt/x (B,C,di), Bt/Ct (B,C,ds),
+    A (di,ds), h0 (B,di,ds) fp32. Returns (y (B,C,di), hC)."""
+    def step(h, inp):
+        dt_t, B_t, C_t, x_t = inp                            # (B,di),(B,ds)...
+        da = jnp.exp(dt_t[..., None] * A)                    # (B,di,ds)
+        dbx = (dt_t * x_t)[..., None] * B_t[:, None, :]      # (B,di,ds)
+        h = da * h + dbx
+        y = jnp.einsum("bds,bs->bd", h, C_t)
+        return h, y
+
+    xs = tuple(jnp.moveaxis(a.astype(jnp.float32), 1, 0) for a in (dt, Bt, Ct, x))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), h
+
+
+def selective_scan(dt, Bt, Ct, x, A, h0, chunk):
+    """Chunked selective scan. Shapes as above with T = n_chunks * chunk."""
+    B, T, di = x.shape
+    ds = Bt.shape[-1]
+    chunk = min(chunk, T)
+    Tp = -(-T // chunk) * chunk
+    if Tp != T:
+        # pad with identity steps: dt=0 -> da=1, dbx=0 (state untouched)
+        pad = [(0, 0), (0, Tp - T), (0, 0)]
+        dt, Bt, Ct, x = (jnp.pad(a, pad) for a in (dt, Bt, Ct, x))
+    nc = Tp // chunk
+
+    def to_chunks(a):
+        return a.reshape(B, nc, chunk, -1).transpose(1, 0, 2, 3)
+
+    inner = jax.checkpoint(lambda h, d_, b_, c_, x_:
+                           _selective_scan_chunk(d_, b_, c_, x_, A, h))
+
+    def outer(h, inp):
+        d_, b_, c_, x_ = inp
+        y, h = inner(h, d_, b_, c_, x_)
+        return h, y
+
+    h, ys = jax.lax.scan(outer, h0, tuple(map(to_chunks, (dt, Bt, Ct, x))))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, Tp, di)[:, :T]
+    return y, h
+
+
+def mamba_block(cfg, p, h, rt: Runtime, state=None):
+    """state: None (train) or {'conv': (B,K-1,di), 'ssm': (B,di,ds)}."""
+    B, T, d = h.shape
+    mc = cfg.mamba
+    di = mc.expand * d
+    dtr = _dt_rank(cfg)
+    dt_ = h.dtype
+
+    x = rt.c("mamba_inner", jnp.einsum("btd,de->bte", h, p["w_x_in"].astype(dt_)))
+    z = rt.c("mamba_inner", jnp.einsum("btd,de->bte", h, p["w_z_in"].astype(dt_)))
+    conv_state = state["conv"] if state is not None else None
+    x, new_conv = _causal_conv(x, p["conv_w"], p["conv_b"], conv_state)
+    x = jax.nn.silu(x)
+    x = rt.c("mamba_inner", x)
+
+    proj = jnp.einsum("bte,ef->btf", x, p["w_x"].astype(dt_))
+    dt_lr, B_t, C_t = jnp.split(proj, [dtr, dtr + mc.d_state], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("btr,re->bte", dt_lr, p["w_dt"].astype(dt_))
+        + p["b_dt"].astype(dt_))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))             # (di, ds)
+
+    h0 = (state["ssm"] if state is not None
+          else jnp.zeros((B, di, mc.d_state), jnp.float32))
+    if T == 1 and state is not None:
+        y, hN = _selective_scan_chunk(dt, B_t, C_t, x, A, h0)
+    else:
+        y, hN = selective_scan(dt, B_t, C_t, x, A, h0, rt.mamba_chunk)
+    y = y.astype(dt_) + p["D"].astype(dt_) * x
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bte,ed->btd", y, p["w_out"].astype(dt_))
+
+    new_state = None
+    if state is not None:
+        new_state = {"conv": new_conv, "ssm": hN}
+    return rt.c("act_btd", out), new_state

@@ -1,0 +1,216 @@
+"""Mixture-of-Experts FFN: shared + routed top-k experts.
+
+Two dispatch implementations:
+  * ``dense``    — every expert computes every token, combined by router
+                   weights.  Exact (no dropping); O(E/k) extra FLOPs.  Used
+                   as the numerical oracle and for tiny smoke configs.
+  * ``dropping`` — GShard-style fixed-capacity dispatch, but built with an
+                   argsort over expert ids instead of a (T, E, C) one-hot
+                   tensor, so memory is O(T·k·d + E·C·d).  This is the
+                   production path: the (E, C, d) expert buffer shards as
+                   (model=experts, data=capacity) and the scatter/gather
+                   lowers to the all-to-all-like exchange the paper accounts
+                   for in expert-parallel training.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Runtime, _act
+
+
+def init_moe(cfg, key):
+    m = cfg.moe
+    d, f = cfg.d_model, m.expert_d_ff
+    ks = jax.random.split(key, 5)
+    s_in, s_out = d ** -0.5, f ** -0.5
+    p = {
+        "router": jax.random.normal(ks[0], (d, m.n_experts)) * s_in,
+        "w_up": jax.random.normal(ks[1], (m.n_experts, d, f)) * s_in,
+        "w_down": jax.random.normal(ks[2], (m.n_experts, f, d)) * s_out,
+    }
+    if cfg.glu:
+        p["w_gate"] = jax.random.normal(ks[3], (m.n_experts, d, f)) * s_in
+    if m.n_shared_experts:
+        fs = m.n_shared_experts * f
+        kk = jax.random.split(ks[4], 3)
+        p["shared"] = {"w_up": jax.random.normal(kk[0], (d, fs)) * s_in,
+                       "w_down": jax.random.normal(kk[1], (fs, d)) * (fs ** -0.5)}
+        if cfg.glu:
+            p["shared"]["w_gate"] = jax.random.normal(kk[2], (d, fs)) * s_in
+    return p
+
+
+def _router(cfg, p, xf):
+    """xf (T, d) -> probs (T, E) fp32, weights/ids (T, k), aux loss."""
+    m = cfg.moe
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, ids = jax.lax.top_k(probs, m.top_k)             # (T, k)
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+    # switch-style load-balance loss
+    T = xf.shape[0]
+    occupancy = jnp.zeros((m.n_experts,), jnp.float32).at[ids.reshape(-1)].add(1.0)
+    frac_tokens = occupancy / (T * m.top_k)
+    frac_probs = probs.mean(0)
+    aux = m.n_experts * jnp.sum(frac_tokens * frac_probs) * m.aux_loss_coef
+    return probs, weights, ids, aux
+
+
+def _expert_ffn(cfg, p, buf, rt: Runtime):
+    """buf (E, C, d) -> (E, C, d) through each expert's FFN."""
+    act = _act(cfg.act)
+    dt = buf.dtype
+    up = rt.c("expert_hidden", jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(dt)))
+    if "w_gate" in p:
+        gate = rt.c("expert_hidden",
+                    jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(dt)))
+        h = act(gate) * up
+    else:
+        h = act(up)
+    return rt.c("expert_buf", jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(dt)))
+
+
+def _moe_dense(cfg, p, xf, rt: Runtime):
+    """Oracle: all experts on all tokens."""
+    m = cfg.moe
+    probs, weights, ids, aux = _router(cfg, p, xf)
+    act = _act(cfg.act)
+    dt = xf.dtype
+    up = jnp.einsum("td,edf->etf", xf, p["w_up"].astype(dt))
+    if "w_gate" in p:
+        h = act(jnp.einsum("td,edf->etf", xf, p["w_gate"].astype(dt))) * up
+    else:
+        h = act(up)
+    y_e = jnp.einsum("etf,efd->etd", h, p["w_down"].astype(dt))  # (E, T, d)
+    w_full = jnp.zeros((xf.shape[0], m.n_experts), jnp.float32)
+    w_full = w_full.at[jnp.arange(xf.shape[0])[:, None], ids].add(weights)
+    y = jnp.einsum("etd,te->td", y_e, w_full.astype(dt))
+    return y, aux
+
+
+@jax.custom_vjp
+def _routed_take(x, idx, inv_idx):
+    """y[i] = x[idx[i]] (idx < 0 -> zero row).
+
+    ``idx`` is an injective partial map and ``inv_idx`` its inverse, so the
+    VJP is *also* a gather — no d-wide scatter ever reaches XLA (whose
+    scatter lowering materializes huge u32 staging buffers, the dominant
+    term in the baseline MoE memory profile; see EXPERIMENTS.md §Perf).
+    """
+    mask = (idx >= 0)[:, None].astype(x.dtype)
+    return x[jnp.maximum(idx, 0)] * mask
+
+
+def _routed_take_fwd(x, idx, inv_idx):
+    return _routed_take(x, idx, inv_idx), (idx, inv_idx, x.shape[0])
+
+
+def _routed_take_bwd(res, dy):
+    idx, inv_idx, n = res
+    mask = (inv_idx >= 0)[:, None].astype(dy.dtype)
+    dx = dy[jnp.maximum(inv_idx, 0)] * mask
+    return dx, None, None
+
+
+_routed_take.defvjp(_routed_take_fwd, _routed_take_bwd)
+
+
+def _moe_dropping(cfg, p, xf, rt: Runtime):
+    """Fixed-capacity dispatch with an explicit *group* dimension.
+
+    Tokens are reshaped to (G, Tg, d) where G = number of data shards
+    (``rt.moe_groups``); all routing index math (argsort, positions,
+    capacity) is then purely per-group — GSPMD keeps it local to each data
+    shard — and the only communication is the (E, G·Cg, d) expert-buffer
+    reshard from group-sharded to expert-sharded layout: the expert-parallel
+    all-to-all the paper's cost model accounts for.
+
+    The d-wide data movement (items -> expert slots and back) is expressed
+    with ``_routed_take``: gathers in both directions, scatter-free.
+    """
+    m = cfg.moe
+    T, d = xf.shape
+    k, E = m.top_k, m.n_experts
+    probs, weights, ids, aux = _router(cfg, p, xf)
+
+    G = max(1, min(rt.moe_groups, T))
+    while T % G:
+        G //= 2
+    Tg = T // G
+    Cg = int(math.ceil(Tg * k * m.capacity_factor / E))
+    Cg = max(8, -(-Cg // 8) * 8)                             # pad to 8
+
+    xg = rt.c("moe_group_tokens", xf.reshape(G, Tg, d))
+    idg = ids.reshape(G, Tg * k)                             # token-major
+    wg = weights.reshape(G, Tg, k)
+
+    def route_one(fids):
+        """Index plumbing only (1-wide int ops): slot<->item maps."""
+        n_items = Tg * k
+        order = jnp.argsort(fids, stable=True)
+        sorted_ids = fids[order]
+        counts = jnp.zeros((E,), jnp.int32).at[fids].add(1)
+        starts = jnp.cumsum(counts) - counts
+        pos_sorted = jnp.arange(n_items, dtype=jnp.int32) - starts[sorted_ids]
+        keep_sorted = pos_sorted < Cg
+        slot_sorted = sorted_ids * Cg + jnp.minimum(pos_sorted, Cg - 1)
+        # item -> slot (dropped items -> -1)
+        dest = jnp.full((n_items,), -1, jnp.int32).at[order].set(
+            jnp.where(keep_sorted, slot_sorted, -1))
+        # slot -> item (empty slots -> -1); dropped items scatter out of
+        # bounds and are discarded by mode="drop"
+        inv = jnp.full((E * Cg,), -1, jnp.int32).at[
+            jnp.where(keep_sorted, slot_sorted, E * Cg)].set(
+            order, mode="drop")
+        return dest, inv
+
+    dest_g, inv_g = jax.vmap(route_one)(idg)                 # (G, Tg*k), (G, E*Cg)
+
+    def dispatch_one(x_g, dest, inv):
+        # token -> items without a gather (broadcast is scatter-free in bwd)
+        x_items = jnp.broadcast_to(x_g[:, None], (Tg, k, d)).reshape(Tg * k, d)
+        buf = _routed_take(x_items, inv, dest)               # (E*Cg, d)
+        return buf.reshape(E, Cg, d)
+
+    buf_g = jax.vmap(dispatch_one)(xg, dest_g, inv_g)        # (G, E, Cg, d)
+    buf = buf_g.transpose(1, 0, 2, 3).reshape(E, G * Cg, d)
+    buf = rt.c("expert_buf", buf)                            # all-to-all here
+
+    out = _expert_ffn(cfg, p, buf, rt)                       # (E, G*Cg, d)
+    out_g = rt.c("moe_group_buf",
+                 out.reshape(E, G, Cg, d).transpose(1, 0, 2, 3))
+
+    def combine_one(out_b, dest, inv, w_g):
+        rows = _routed_take(out_b.reshape(E * Cg, d), dest, inv)  # (Tg*k, d)
+        return (rows.reshape(Tg, k, d) * w_g[..., None].astype(rows.dtype)
+                ).sum(axis=1)
+
+    y = jax.vmap(combine_one)(out_g, dest_g, inv_g, wg)      # (G, Tg, d)
+    return y.reshape(T, d), aux
+
+
+def apply_moe(cfg, p, x, rt: Runtime):
+    """x (B, S, d) -> (out (B, S, d), aux_loss scalar)."""
+    B, S, d = x.shape
+    xf = x.reshape(B * S, d)
+    impl = rt.moe_impl
+    if impl == "auto":
+        impl = "dense" if B * S * cfg.moe.n_experts <= (1 << 22) else "dropping"
+    y, aux = (_moe_dense if impl == "dense" else _moe_dropping)(cfg, p, xf, rt)
+    y = y.reshape(B, S, d)
+    if "shared" in p:
+        sp = p["shared"]
+        act = _act(cfg.act)
+        dt = x.dtype
+        up = jnp.einsum("bsd,df->bsf", x, sp["w_up"].astype(dt))
+        if "w_gate" in sp:
+            h = act(jnp.einsum("bsd,df->bsf", x, sp["w_gate"].astype(dt))) * up
+        else:
+            h = act(up)
+        y = y + jnp.einsum("bsf,fd->bsd", h, sp["w_down"].astype(dt))
+    return rt.c("act_btd", y), aux

@@ -1,0 +1,343 @@
+"""Unified decoder-only model over all assigned architecture families.
+
+A model is a stack of layers; each layer = (norm -> mixer -> residual,
+norm -> ffn -> residual) where the mixer is attention / RWKV-6 / Mamba and
+the ffn is dense MLP / MoE / RWKV channel-mix, both chosen per-layer by the
+``ModelConfig`` (hybrids like Jamba interleave).
+
+To keep compiled HLO small at 28-80 layers, layers are executed with
+``lax.scan`` over *blocks*: ``layer_plan`` finds the shortest
+(prefix, period) decomposition such that layers [start:] repeat a fixed
+signature pattern of length ``period``; per-position parameters are stacked
+over the ``n_blocks`` repeats and scanned (MaxText-style), with optional
+remat per block.  KV/recurrent caches are stacked the same way and threaded
+through the scan as xs/ys.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_lib
+from repro.models import mamba as mamba_lib
+from repro.models import moe as moe_lib
+from repro.models import rwkv6 as rwkv_lib
+from repro.models.layers import (Runtime, apply_norm, embed_tokens,
+                                 init_embed, init_mlp, init_norm, apply_mlp,
+                                 lm_logits, mrope_angles, rope_angles)
+
+
+# ---------------------------------------------------------------------------
+# layer planning
+# ---------------------------------------------------------------------------
+
+def _sig(cfg: ModelConfig, i: int) -> Tuple[str, bool]:
+    return (cfg.layer_kind(i), cfg.is_moe_layer(i))
+
+
+def layer_plan(cfg: ModelConfig):
+    """-> (prefix_layer_ids, start, period, n_blocks) minimizing unrolled size."""
+    L = cfg.n_layers
+    sigs = [_sig(cfg, i) for i in range(L)]
+    for total in range(1, L + 1):
+        for start in range(total):
+            period = total - start
+            if (L - start) % period:
+                continue
+            if all(sigs[start + j] == sigs[start + (j % period)]
+                   for j in range(L - start)):
+                return list(range(start)), start, period, (L - start) // period
+    return list(range(L)), L, 1, 0
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_layer(cfg: ModelConfig, i: int, key) -> Dict[str, Any]:
+    kind, is_moe = _sig(cfg, i)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {"norm1": init_norm(cfg, k1), "norm2": init_norm(cfg, k2)}
+    if kind == "attn":
+        p["mixer"] = attn_lib.init_attention(cfg, k3)
+    elif kind == "rwkv6":
+        p["mixer"] = rwkv_lib.init_rwkv_time_mix(cfg, k3)
+    elif kind == "mamba":
+        p["mixer"] = mamba_lib.init_mamba(cfg, k3)
+    else:
+        raise ValueError(kind)
+    if kind == "rwkv6":
+        p["ffn"] = rwkv_lib.init_rwkv_channel_mix(cfg, k4)
+    elif is_moe:
+        p["ffn"] = moe_lib.init_moe(cfg, k4)
+    else:
+        p["ffn"] = init_mlp(cfg, k4)
+    return p
+
+
+def _tree_stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    prefix, start, period, n_blocks = layer_plan(cfg)
+    keys = jax.random.split(key, cfg.n_layers + 2)
+    params = {
+        "embed": init_embed(cfg, keys[-1]),
+        "final_norm": init_norm(cfg, keys[-2]),
+        "prefix": [_init_layer(cfg, i, keys[i]) for i in prefix],
+        "blocks": [
+            _tree_stack([_init_layer(cfg, start + b * period + pos,
+                                     keys[start + b * period + pos])
+                         for b in range(n_blocks)])
+            for pos in range(period)
+        ] if n_blocks else [],
+    }
+    return params
+
+
+def param_count_actual(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def _init_layer_cache(cfg, i, batch, max_len, dtype, rt: Runtime):
+    kind, _ = _sig(cfg, i)
+    d = cfg.d_model
+    if kind == "attn":
+        return {"kv": attn_lib.make_kv_cache(cfg, batch, max_len, dtype, rt)}
+    if kind == "rwkv6":
+        H, N = cfg.rwkv_heads, cfg.rwkv_head_dim
+        return {
+            "att": {"x_prev": jnp.zeros((batch, d), dtype),
+                    "wkv": rt.c("rwkv_state",
+                                jnp.zeros((batch, H, N, N), jnp.float32))},
+            "ffn": {"x_prev": jnp.zeros((batch, d), dtype)},
+        }
+    if kind == "mamba":
+        mc = cfg.mamba
+        di = mc.expand * d
+        return {"conv": jnp.zeros((batch, mc.d_conv - 1, di), dtype),
+                "ssm": rt.c("mamba_state",
+                            jnp.zeros((batch, di, mc.d_state), jnp.float32))}
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype, rt: Runtime):
+    prefix, start, period, n_blocks = layer_plan(cfg)
+    return {
+        "prefix": [_init_layer_cache(cfg, i, batch, max_len, dtype, rt)
+                   for i in prefix],
+        "blocks": [
+            _tree_stack([_init_layer_cache(cfg, start + b * period + pos,
+                                           batch, max_len, dtype, rt)
+                         for b in range(n_blocks)])
+            for pos in range(period)
+        ] if n_blocks else [],
+    }
+
+
+# ---------------------------------------------------------------------------
+# layer application
+# ---------------------------------------------------------------------------
+
+def _apply_layer(cfg, sig, lp, h, rope_ang, rt: Runtime, cache=None):
+    """-> (h, new_cache, aux_loss)."""
+    kind, is_moe = sig
+    aux = jnp.zeros((), jnp.float32)
+
+    x = apply_norm(lp["norm1"], h, cfg.norm_eps)
+    if kind == "attn":
+        mix, new_mix_cache = attn_lib.attention_block(
+            cfg, lp["mixer"], x, rope_ang, rt,
+            cache=None if cache is None else cache["kv"])
+        new_cache = None if cache is None else {"kv": new_mix_cache}
+    elif kind == "rwkv6":
+        mix, new_att = rwkv_lib.rwkv_time_mix(
+            cfg, lp["mixer"], x, rt,
+            state=None if cache is None else cache["att"])
+        new_cache = None if cache is None else {"att": new_att}
+    else:  # mamba
+        mix, new_state = mamba_lib.mamba_block(
+            cfg, lp["mixer"], x, rt,
+            state=None if cache is None else cache)
+        new_cache = new_state
+    h = h + mix
+
+    x = apply_norm(lp["norm2"], h, cfg.norm_eps)
+    if kind == "rwkv6":
+        ffn, new_ffn = rwkv_lib.rwkv_channel_mix(
+            cfg, lp["ffn"], x, rt,
+            state=None if cache is None else cache["ffn"])
+        if new_cache is not None:
+            new_cache["ffn"] = new_ffn
+    elif is_moe:
+        ffn, aux = moe_lib.apply_moe(cfg, lp["ffn"], x, rt)
+    else:
+        ffn = apply_mlp(cfg, lp["ffn"], x, rt)
+    h = h + ffn
+    return h, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _sinusoidal_from_positions(positions, d_model, dtype):
+    """positions (B,S) -> (B,S,d_model) classic sin/cos embedding."""
+    half = d_model // 2
+    freq = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    emb = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+    return emb.astype(dtype)
+
+
+def _embed_inputs(cfg, params, batch, rt: Runtime, positions):
+    if "embeds" in batch:
+        # audio-frontend stub: precomputed frame embeddings (train/prefill);
+        # decode steps feed generated codec *tokens* through the embedding
+        h = batch["embeds"].astype(rt.compute_dtype)
+    else:
+        h = embed_tokens(params["embed"], batch["tokens"], rt)
+        if cfg.input_mode == "tokens+vision" and "vision_embeds" in batch:
+            v = batch["vision_embeds"].astype(h.dtype)
+            # fixed layout: the first V positions of the stream are patches
+            v = v[:, :h.shape[1]]
+            h = jnp.concatenate([v, h[:, v.shape[1]:]], axis=1)
+    if cfg.pos_embed == "sinusoidal":
+        h = h + _sinusoidal_from_positions(positions, cfg.d_model, h.dtype)
+    return rt.c("act_btd", h)
+
+
+def _rope_for(cfg, batch, positions):
+    hd = cfg.head_dim_
+    if cfg.rope == "none":
+        return None
+    if cfg.rope == "mrope":
+        pos_ids = batch.get("position_ids")
+        if pos_ids is None:                     # text-only fallback: t=h=w
+            pos_ids = jnp.broadcast_to(positions[None], (3,) + positions.shape)
+        return mrope_angles(pos_ids, hd, cfg.rope_theta, cfg.mrope_sections)
+    return rope_angles(positions, hd, cfg.rope_theta)
+
+
+def forward(cfg: ModelConfig, params, batch, rt: Runtime,
+            cache=None) -> Tuple[jnp.ndarray, Optional[Any], jnp.ndarray]:
+    """-> (logits, new_cache | None, aux_loss).
+
+    batch: tokens (B,S) [or embeds (B,S,d)], optional position_ids (3,B,S),
+    optional pos (scalar absolute offset, decode/continuation).
+    """
+    if "embeds" in batch:
+        B, S = batch["embeds"].shape[:2]
+    else:
+        B, S = batch["tokens"].shape
+    offset = batch.get("pos", jnp.zeros((), jnp.int32))
+    positions = offset + jnp.arange(S, dtype=jnp.int32)[None]
+    positions = jnp.broadcast_to(positions, (B, S))
+
+    h = _embed_inputs(cfg, params, batch, rt, positions)
+    rope_ang = _rope_for(cfg, batch, positions)
+
+    prefix, start, period, n_blocks = layer_plan(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    new_prefix_caches = []
+    for j, i in enumerate(prefix):
+        c = None if cache is None else cache["prefix"][j]
+        h, nc, aux = _apply_layer(cfg, _sig(cfg, i), params["prefix"][j],
+                                  h, rope_ang, rt, c)
+        aux_total += aux
+        new_prefix_caches.append(nc)
+
+    new_block_caches = None
+    if n_blocks:
+        sigs = [_sig(cfg, start + pos) for pos in range(period)]
+
+        apply = _apply_layer
+        if rt.remat_inner:
+            # cfg, sig and rt are static (hashable frozen dataclasses)
+            apply = jax.checkpoint(_apply_layer, static_argnums=(0, 1, 5))
+
+        def block_fn(carry, xs):
+            h_, aux_ = carry
+            lps = xs[:period]
+            caches = xs[period:] if cache is not None else [None] * period
+            new_caches = []
+            for pos in range(period):
+                lp = lps[pos]
+                if rt.gather_params is not None:
+                    # re-assert the de-gathered (replicated-over-fsdp) layout
+                    # on the *per-iteration* slice: the all-gather is loop-
+                    # variant and stays inside the scan (per-layer FSDP
+                    # gather) instead of being hoisted over the whole stack.
+                    lp = rt.gather_params(lp)
+                h_, nc, a = apply(cfg, sigs[pos], lp, h_,
+                                  rope_ang, rt, caches[pos])
+                aux_ += a
+                new_caches.append(nc)
+            ys = tuple(new_caches) if cache is not None else None
+            return (h_, aux_), ys
+
+        if rt.remat:
+            block_fn = jax.checkpoint(block_fn)
+
+        xs = tuple(params["blocks"])
+        if cache is not None:
+            xs = xs + tuple(cache["blocks"])
+        (h, aux_total), ys = jax.lax.scan(block_fn, (h, aux_total), xs)
+        if cache is not None:
+            new_block_caches = list(ys)
+
+    h = apply_norm(params["final_norm"], h, cfg.norm_eps)
+    logits = lm_logits(params["embed"], h, rt)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"prefix": new_prefix_caches, "blocks": new_block_caches or []}
+    return logits, new_cache, aux_total
+
+
+# ---------------------------------------------------------------------------
+# losses / steps
+# ---------------------------------------------------------------------------
+
+def loss_fn(cfg: ModelConfig, params, batch, rt: Runtime):
+    """Next-token cross entropy; labels < 0 are masked."""
+    logits, _, aux = forward(cfg, params, batch, rt)
+    labels = batch["labels"]
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(
+        lf, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    nll = ((lse - ll) * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll + aux, {"nll": nll, "aux": aux, "ntok": mask.sum()}
+
+
+def prefill(cfg, params, batch, rt: Runtime, max_len: int):
+    """Run the prompt through the model, building a decode cache."""
+    if "tokens" in batch:
+        B = batch["tokens"].shape[0]
+    else:
+        B = batch["embeds"].shape[0]
+    cache = init_cache(cfg, B, max_len, rt.compute_dtype, rt)
+    logits, cache, _ = forward(cfg, params, batch, rt, cache=cache)
+    return logits, cache
+
+
+def decode_step(cfg, params, cache, tokens, pos, rt: Runtime,
+                extra: Optional[dict] = None):
+    """tokens (B,1); pos scalar absolute position. -> (logits, cache)."""
+    batch = {"tokens": tokens, "pos": pos}
+    if extra:
+        batch.update(extra)
+    logits, cache, _ = forward(cfg, params, batch, rt, cache=cache)
+    return logits, cache

@@ -1,0 +1,5 @@
+from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state, global_norm
+from repro.optim.schedule import linear_warmup_cosine, constant
+
+__all__ = ["AdamWConfig", "adamw_update", "init_opt_state", "global_norm",
+           "linear_warmup_cosine", "constant"]

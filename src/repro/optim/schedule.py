@@ -1,0 +1,16 @@
+"""LR schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup_cosine(step, warmup: int, total: int, min_ratio: float = 0.1):
+    t = step.astype(jnp.float32)
+    warm = (t + 1.0) / jnp.maximum(warmup, 1)   # first step lr > 0
+    prog = jnp.clip((t - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(t < warmup, warm, cos)
+
+
+def constant(step):
+    return jnp.ones_like(step, jnp.float32)

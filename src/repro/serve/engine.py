@@ -1,0 +1,68 @@
+"""Batched serving engine: prefill + step-wise decode over sharded caches.
+
+``make_serve_step`` is the function the decode-shape dry-runs lower:
+(params, cache, tokens, pos) -> (logits, cache'), one new token per request
+against a seq_len-sized KV/state cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import parallel as par
+from repro.models import transformer as tfm
+from repro.models.layers import Runtime
+
+
+def make_serve_step(cfg: ModelConfig, rt: Runtime):
+    def serve_step(params, cache, tokens, pos):
+        logits, cache = tfm.decode_step(cfg, params, cache, tokens, pos, rt)
+        return logits, cache
+    return serve_step
+
+
+def make_prefill(cfg: ModelConfig, rt: Runtime, max_len: int):
+    def prefill_fn(params, batch):
+        return tfm.prefill(cfg, params, batch, rt, max_len)
+    return prefill_fn
+
+
+@dataclasses.dataclass
+class ServeEngine:
+    """Greedy/temperature batched generation over the public model API."""
+    cfg: ModelConfig
+    params: Any
+    rt: Runtime
+    max_len: int
+    plan: Optional[par.ParallelPlan] = None
+
+    def __post_init__(self):
+        self._prefill = jax.jit(make_prefill(self.cfg, self.rt, self.max_len))
+        self._step = jax.jit(make_serve_step(self.cfg, self.rt))
+
+    def generate(self, prompts: jnp.ndarray, n_new: int,
+                 temperature: float = 0.0, key=None) -> jnp.ndarray:
+        """prompts: (B, S0) int32 -> (B, S0 + n_new)."""
+        B, S0 = prompts.shape
+        assert S0 + n_new <= self.max_len
+        logits, cache = self._prefill(self.params, {"tokens": prompts})
+        out = [prompts]
+        last = logits[:, -1]
+        key = key if key is not None else jax.random.PRNGKey(0)
+        for t in range(n_new):
+            if temperature > 0:
+                key, sub = jax.random.split(key)
+                nxt = jax.random.categorical(sub, last / temperature, axis=-1)
+            else:
+                nxt = jnp.argmax(last, axis=-1)
+            nxt = nxt[:, None].astype(jnp.int32)
+            out.append(nxt)
+            logits, cache = self._step(self.params, cache, nxt,
+                                       jnp.asarray(S0 + t, jnp.int32))
+            last = logits[:, 0]
+        return jnp.concatenate(out, axis=1)

@@ -1,0 +1,132 @@
+"""Training loop: jitted sharded train step, gradient accumulation,
+metrics, checkpoint hooks.
+
+``make_train_step`` is also what the multi-pod dry-run lowers: it closes
+over (cfg, plan, runtime) and maps (params, opt_state, batch) ->
+(params, opt_state, metrics) with every input/output sharded per the plan.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import parallel as par
+from repro.models import transformer as tfm
+from repro.models.layers import Runtime
+from repro.optim import AdamWConfig, adamw_update, init_opt_state
+from repro.optim.schedule import linear_warmup_cosine
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    warmup: int = 10
+    log_every: int = 10
+    ckpt_every: int = 0
+    ckpt_dir: str = ""
+    grad_accum: int = 1
+    opt: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+
+
+def make_train_step(cfg: ModelConfig, rt: Runtime, tc: TrainConfig,
+                    total_steps: Optional[int] = None):
+    """Pure (params, opt_state, batch) -> (params, opt_state, metrics)."""
+    total = total_steps or tc.steps
+
+    def train_step(params, opt_state, batch):
+        def loss(p):
+            return tfm.loss_fn(cfg, p, batch, rt)
+
+        if tc.grad_accum > 1:
+            # split the local batch into microbatches along dim 0
+            def micro(i, acc):
+                g_acc, l_acc = acc
+                mb = jax.tree.map(
+                    lambda x: jax.lax.dynamic_slice_in_dim(
+                        x, i * (x.shape[0] // tc.grad_accum),
+                        x.shape[0] // tc.grad_accum, 0)
+                    if getattr(x, "ndim", 0) > 0 else x, batch)
+                (l, _), g = jax.value_and_grad(
+                    lambda p: tfm.loss_fn(cfg, p, mb, rt), has_aux=True)(params)
+                return (jax.tree.map(jnp.add, g_acc, g), l_acc + l)
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, lsum = jax.lax.fori_loop(
+                0, tc.grad_accum, micro, (g0, jnp.zeros((), jnp.float32)))
+            grads = jax.tree.map(lambda g: g / tc.grad_accum, grads)
+            loss_val = lsum / tc.grad_accum
+            metrics: Dict[str, Any] = {}
+        else:
+            (loss_val, metrics), grads = jax.value_and_grad(
+                loss, has_aux=True)(params)
+
+        lr_scale = linear_warmup_cosine(opt_state["step"], tc.warmup, total)
+        params, opt_state, opt_metrics = adamw_update(
+            tc.opt, params, grads, opt_state, lr_scale)
+        out = {"loss": loss_val, **metrics, **opt_metrics}
+        return params, opt_state, out
+
+    return train_step
+
+
+def shard_train_state(cfg: ModelConfig, plan: par.ParallelPlan, key,
+                      rt: Runtime):
+    """Initialize params + opt state directly into their shardings."""
+    pshapes = jax.eval_shape(functools.partial(tfm.init_params, cfg), key)
+    pshard = par.param_shardings(cfg, plan, pshapes)
+
+    params = jax.jit(functools.partial(tfm.init_params, cfg),
+                     out_shardings=pshard)(key)
+    oshapes = jax.eval_shape(init_opt_state, pshapes)
+    oshard = {"m": pshard, "v": pshard,
+              "step": par.fitted(plan, par.P(), ())}
+    opt_state = jax.jit(init_opt_state, out_shardings=oshard)(params)
+    return params, opt_state, pshard, oshard
+
+
+def train_loop(cfg: ModelConfig, plan: par.ParallelPlan, rt: Runtime,
+               tc: TrainConfig, batches, key=None,
+               hooks: Optional[Callable] = None):
+    """Full driver: init, jit with shardings, iterate, log, checkpoint."""
+    from repro.checkpointing import save_checkpoint
+
+    key = key if key is not None else jax.random.PRNGKey(0)
+    with jax.set_mesh(plan.mesh):
+        params, opt_state, pshard, oshard = shard_train_state(cfg, plan, key, rt)
+        step_fn = make_train_step(cfg, rt, tc)
+        first = next(iter(batches))
+        bshard = par.batch_specs(cfg, plan, first)
+        jstep = jax.jit(step_fn,
+                        in_shardings=(pshard, oshard, bshard),
+                        out_shardings=(pshard, oshard, None),
+                        donate_argnums=(0, 1))
+
+        history = []
+        t0 = time.time()
+        it = iter(batches)
+        batch = first
+        for step in range(tc.steps):
+            params, opt_state, metrics = jstep(params, opt_state, batch)
+            if step + 1 < tc.steps:
+                batch = next(it)
+            if (step + 1) % tc.log_every == 0 or step == 0:
+                m = {k: float(v) for k, v in metrics.items()
+                     if getattr(v, "ndim", 0) == 0}
+                dt = time.time() - t0
+                m["steps_per_s"] = (step + 1) / dt
+                history.append({"step": step + 1, **m})
+                print(f"step {step+1:5d}  loss {m.get('loss', float('nan')):.4f}"
+                      f"  gnorm {m.get('grad_norm', float('nan')):.3f}"
+                      f"  {m['steps_per_s']:.2f} it/s", flush=True)
+                if hooks:
+                    hooks(step + 1, params, m)
+            if tc.ckpt_every and (step + 1) % tc.ckpt_every == 0:
+                save_checkpoint(tc.ckpt_dir, step + 1,
+                                {"params": params, "opt": opt_state})
+        return params, opt_state, history

@@ -1,0 +1,129 @@
+"""Multi-device SPMD equivalence checks — run in a subprocess with
+XLA_FLAGS=--xla_force_host_platform_device_count=8 (see test_spmd.py).
+
+Asserts that the sharded train step (FSDP x TP / context-parallel plans on
+a (2, 4) mesh) produces the same loss/gradients as the single-device step,
+and that a sharded decode step matches the unsharded one.
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=8").strip()
+
+import functools
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ShapeConfig, get_config, reduced
+from repro.core import parallel as par
+from repro.launch.mesh import make_host_mesh
+from repro.launch.specs import concrete_train_batch
+from repro.models import transformer as tfm
+from repro.models.layers import Runtime
+from repro.optim import init_opt_state
+from repro.train.trainer import TrainConfig, make_train_step
+
+TOL = 5e-3
+
+
+def check_train(arch: str, attn_override=None):
+    cfg = reduced(get_config(arch), d_model=256)
+    mesh = make_host_mesh(data=2, model=4)
+    shape = ShapeConfig("t", 64, 4, "train")
+    plan = par.choose_plan(cfg, mesh, shape, attn_override=attn_override)
+    rt_single = Runtime(rwkv_chunk=8, mamba_chunk=8, moe_impl="dropping",
+                        moe_groups=1, attn_min_chunked_len=32,
+                        attn_q_chunk=16, attn_kv_chunk=16)
+    rt_shard = par.make_runtime(
+        cfg, plan, shape, param_dtype=jnp.float32, compute_dtype=jnp.float32,
+        remat=False, rwkv_chunk=8, mamba_chunk=8,
+        attn_min_chunked_len=32, attn_q_chunk=64 if plan.attn == "context" else 16,
+        attn_kv_chunk=16, moe_impl="dropping")
+
+    key = jax.random.PRNGKey(0)
+    params = tfm.init_params(cfg, key)
+    batch = concrete_train_batch(cfg, shape.global_batch, shape.seq_len, key)
+    tc = TrainConfig()
+
+    # single device
+    p1, o1, m1 = make_train_step(cfg, rt_single, tc)(
+        params, init_opt_state(params), batch)
+
+    # sharded
+    pshard = par.param_shardings(cfg, plan, jax.eval_shape(lambda: params))
+    with jax.set_mesh(mesh):
+        params_s = jax.device_put(params, pshard)
+        opt_s = jax.device_put(init_opt_state(params),
+                               {"m": pshard, "v": pshard,
+                                "step": par.fitted(plan, par.P(), ())})
+        batch_s = jax.device_put(batch, par.batch_specs(cfg, plan, batch))
+        step = jax.jit(make_train_step(cfg, rt_shard, tc),
+                       out_shardings=(pshard, None, None))
+        p2, o2, m2 = step(params_s, opt_s, batch_s)
+
+    dl = abs(float(m1["loss"]) - float(m2["loss"]))
+    dg = abs(float(m1["grad_norm"]) - float(m2["grad_norm"]))
+    rel_g = dg / max(float(m1["grad_norm"]), 1e-6)
+    # updated params agree
+    dp = max(float(jnp.max(jnp.abs(a - jax.device_get(b))))
+             for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)))
+    print(f"  {arch} ({plan.attn}): dloss={dl:.2e} dgrad_rel={rel_g:.2e} "
+          f"dparam={dp:.2e}")
+    assert dl < TOL, (arch, dl)
+    assert rel_g < TOL, (arch, rel_g)
+    assert dp < 5e-2, (arch, dp)
+
+
+def check_decode(arch: str):
+    cfg = reduced(get_config(arch), d_model=256)
+    mesh = make_host_mesh(data=2, model=4)
+    shape = ShapeConfig("d", 64, 4, "decode")
+    plan = par.choose_plan(cfg, mesh, shape)
+    rt0 = Runtime(rwkv_chunk=8, mamba_chunk=8, moe_impl="dense")
+    rt_s = par.make_runtime(cfg, plan, shape, param_dtype=jnp.float32,
+                            compute_dtype=jnp.float32, remat=False,
+                            rwkv_chunk=8, mamba_chunk=8, moe_impl="dense")
+
+    key = jax.random.PRNGKey(1)
+    params = tfm.init_params(cfg, key)
+    B, S0 = shape.global_batch, 17
+    tokens = jax.random.randint(key, (B, S0 + 1), 0, cfg.vocab_size)
+
+    _, cache0 = tfm.prefill(cfg, params, {"tokens": tokens[:, :S0]}, rt0,
+                            max_len=shape.seq_len)
+    logits0, _ = tfm.decode_step(cfg, params, cache0, tokens[:, S0:],
+                                 jnp.asarray(S0, jnp.int32), rt0)
+
+    with jax.set_mesh(mesh):
+        pshard = par.param_shardings(cfg, plan, jax.eval_shape(lambda: params))
+        params_s = jax.device_put(params, pshard)
+        cshapes = jax.eval_shape(lambda: cache0)
+        cshard = par.cache_shardings(cfg, plan, cshapes)
+        cache_s = jax.device_put(cache0, cshard)
+        step = jax.jit(functools.partial(tfm.decode_step, cfg, rt=rt_s),
+                       static_argnames=())
+        logits_s, _ = jax.jit(
+            lambda p, c, t, pos: tfm.decode_step(cfg, p, c, t, pos, rt_s),
+            out_shardings=(None, cshard))(
+                params_s, cache_s, tokens[:, S0:], jnp.asarray(S0, jnp.int32))
+
+    err = float(jnp.max(jnp.abs(logits0 - jax.device_get(logits_s))))
+    print(f"  {arch} decode ({plan.decode_cache_axes}): err={err:.2e}")
+    assert err < TOL, (arch, err)
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    print(f"devices: {len(jax.devices())}")
+    if which in ("all", "train"):
+        check_train("qwen3-0.6b")                      # head_tp
+        check_train("qwen2-1.5b", attn_override="context")  # CP
+        check_train("rwkv6-1.6b")
+        check_train("jamba-v0.1-52b")
+        check_train("deepseek-moe-16b")
+    if which in ("all", "decode"):
+        check_decode("qwen3-0.6b")
+        check_decode("h2o-danube-1.8b")
+        check_decode("jamba-v0.1-52b")
+    print("SPMD checks passed")

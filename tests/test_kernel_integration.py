@@ -1,0 +1,23 @@
+"""End-to-end: forward pass with Runtime(attn_impl='pallas') (Pallas
+kernels in interpret mode) matches the pure-jnp path."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.launch.specs import concrete_train_batch
+from repro.models import Runtime, forward, init_params
+
+
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "h2o-danube-1.8b", "rwkv6-1.6b"])
+def test_pallas_path_matches_jnp(arch):
+    cfg = reduced(get_config(arch))
+    key = jax.random.PRNGKey(5)
+    params = init_params(cfg, key)
+    batch = concrete_train_batch(cfg, 1, 128, key)
+    rt_jnp = Runtime(rwkv_chunk=16, attn_min_chunked_len=4096)
+    rt_pls = Runtime(rwkv_chunk=16, attn_impl="pallas")
+    l1, _, _ = forward(cfg, params, batch, rt_jnp)
+    l2, _, _ = forward(cfg, params, batch, rt_pls)
+    err = float(jnp.max(jnp.abs(l1 - l2)))
+    assert err < 5e-3, (arch, err)

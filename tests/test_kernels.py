@@ -1,0 +1,101 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles in
+``repro.kernels.ref`` (interpret=True executes kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rmsnorm import rmsnorm
+from repro.kernels.rwkv6 import wkv6
+
+KEY = jax.random.PRNGKey(42)
+
+
+@pytest.mark.parametrize("B,S,H,Kv,D", [
+    (2, 128, 4, 2, 64),     # GQA
+    (1, 256, 4, 4, 64),     # MHA
+    (1, 384, 8, 1, 128),    # MQA (granite)
+    (2, 96, 6, 2, 64),      # ragged (pad path)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_shapes(B, S, H, Kv, D, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, S, Kv, D), dtype)
+    v = jax.random.normal(ks[2], (B, S, Kv, D), dtype)
+    out = flash_attention(q, k, v, block_q=64, block_kv=64, interpret=True)
+    expect = ref.attention_ref(q, k, v)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    assert out.shape == q.shape and out.dtype == dtype
+    assert float(jnp.max(jnp.abs(out.astype(jnp.float32)
+                                 - expect.astype(jnp.float32)))) < tol
+
+
+@pytest.mark.parametrize("window", [32, 64, 100])
+def test_flash_attention_sliding_window(window):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 256, 4, 64))
+    k = jax.random.normal(ks[1], (1, 256, 2, 64))
+    v = jax.random.normal(ks[2], (1, 256, 2, 64))
+    out = flash_attention(q, k, v, window=window, block_q=64, block_kv=64,
+                          interpret=True)
+    expect = ref.attention_ref(q, k, v, window=window)
+    assert float(jnp.max(jnp.abs(out - expect))) < 2e-5
+
+
+@pytest.mark.parametrize("blocks", [(64, 64), (128, 64), (64, 128), (128, 128)])
+def test_flash_attention_block_shapes(blocks):
+    bq, bk = blocks
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 256, 2, 64))
+    k = jax.random.normal(ks[1], (1, 256, 2, 64))
+    v = jax.random.normal(ks[2], (1, 256, 2, 64))
+    out = flash_attention(q, k, v, block_q=bq, block_kv=bk, interpret=True)
+    expect = ref.attention_ref(q, k, v)
+    assert float(jnp.max(jnp.abs(out - expect))) < 2e-5
+
+
+@pytest.mark.parametrize("shape", [(4, 7, 256), (2, 128, 512), (3, 384),
+                                   (1, 1, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm(shape, dtype):
+    x = jax.random.normal(KEY, shape, dtype)
+    scale = jax.random.normal(KEY, shape[-1:], dtype)
+    out = rmsnorm(x, scale, interpret=True)
+    expect = ref.rmsnorm_ref(x, scale)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    assert out.dtype == dtype
+    assert float(jnp.max(jnp.abs(out.astype(jnp.float32)
+                                 - expect.astype(jnp.float32)))) < tol
+
+
+@pytest.mark.parametrize("B,T,H,N,chunk", [
+    (2, 64, 2, 32, 16),
+    (1, 100, 3, 64, 32),    # ragged pad
+    (2, 33, 2, 16, 8),
+    (1, 128, 1, 64, 64),
+])
+def test_wkv6_vs_recurrent(B, T, H, N, chunk):
+    ks = jax.random.split(KEY, 5)
+    r, k, v = (jax.random.normal(ks[i], (B, T, H, N)) * 0.5 for i in range(3))
+    w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (B, T, H, N)) * 0.5 - 2.5))
+    u = jax.random.normal(ks[4], (H, N)) * 0.3
+    y, s = wkv6(r, k, v, w, u, chunk=chunk, interpret=True)
+    yr, sr = ref.wkv6_ref(r, k, v, w, u, jnp.zeros((B, H, N, N)))
+    assert float(jnp.max(jnp.abs(y - yr))) < 1e-3
+    assert float(jnp.max(jnp.abs(s - sr))) < 1e-3
+
+
+def test_wkv6_matches_model_chunked_path():
+    """The model's jnp chunked WKV and the Pallas kernel agree."""
+    from repro.models.rwkv6 import wkv_chunked
+    ks = jax.random.split(KEY, 5)
+    B, T, H, N = 2, 64, 2, 32
+    r, k, v = (jax.random.normal(ks[i], (B, T, H, N)) * 0.5 for i in range(3))
+    w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (B, T, H, N)) * 0.5 - 2.5))
+    u = jax.random.normal(ks[4], (H, N)) * 0.3
+    y1, s1 = wkv6(r, k, v, w, u, chunk=16, interpret=True)
+    y2, s2 = wkv_chunked(r, k, v, w, u, jnp.zeros((B, H, N, N)), 16)
+    assert float(jnp.max(jnp.abs(y1 - y2))) < 1e-4
+    assert float(jnp.max(jnp.abs(s1 - s2))) < 1e-4

@@ -1,0 +1,87 @@
+"""Property tests for the analytic FLOP / HBM-traffic / roofline models."""
+import dataclasses
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import SHAPES, get_config, list_archs
+from repro.configs.base import ShapeConfig
+from repro.perf import bytes as bytes_lib
+from repro.perf import flops as flops_lib
+
+ARCHS = list_archs(assigned_only=True)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_flops_close_to_2nd(arch):
+    """Forward FLOPs should be within ~3x of the 2·N_active·D floor
+    (attention quadratic terms, routing and capacity slop on top)."""
+    cfg = get_config(arch)
+    shape = SHAPES["train_4k"]
+    fwd = flops_lib.forward_flops(cfg, shape)
+    floor = flops_lib.model_flops(cfg, shape) / 3.0     # 2ND
+    assert fwd > 0.5 * floor, (fwd, floor)
+    assert fwd < 4.0 * floor, (fwd, floor)
+
+
+@given(seq=st.sampled_from([512, 2048, 8192, 32768]),
+       arch=st.sampled_from(ARCHS))
+@settings(max_examples=40, deadline=None)
+def test_flops_monotone_in_seq(seq, arch):
+    cfg = get_config(arch)
+    a = flops_lib.forward_flops(cfg, ShapeConfig("a", seq, 8, "train"))
+    b = flops_lib.forward_flops(cfg, ShapeConfig("b", 2 * seq, 8, "train"))
+    assert b > a
+
+
+@given(arch=st.sampled_from(ARCHS))
+@settings(max_examples=10, deadline=None)
+def test_decode_flops_independent_of_cache_len_for_ssm(arch):
+    cfg = get_config(arch)
+    a = flops_lib.forward_flops(cfg, ShapeConfig("a", 32768, 8, "decode"))
+    b = flops_lib.forward_flops(cfg, ShapeConfig("b", 524288, 8, "decode"))
+    if cfg.mixer == "rwkv6" and cfg.attn_every <= 1:
+        assert a == b                      # attention-free: O(1) per token
+    else:
+        assert b >= a
+
+
+@given(n1=st.sampled_from([64, 256]), arch=st.sampled_from(ARCHS))
+@settings(max_examples=20, deadline=None)
+def test_hbm_bytes_decrease_with_devices_for_decode(n1, arch):
+    cfg = get_config(arch)
+    shape = SHAPES["decode_32k"]
+    a = bytes_lib.hbm_bytes_per_device(cfg, shape, n1)
+    b = bytes_lib.hbm_bytes_per_device(cfg, shape, 4 * n1)
+    assert b <= a * 1.01
+
+
+def test_train_traffic_includes_optimizer():
+    cfg = get_config("qwen3-0.6b")
+    t = bytes_lib.hbm_bytes_per_device(cfg, SHAPES["train_4k"], 256)
+    p = bytes_lib.hbm_bytes_per_device(cfg, SHAPES["prefill_32k"], 256)
+    # per-token-normalized train traffic exceeds inference traffic
+    assert t / (256 * 4096) > p / (32 * 32768) * 0.5
+
+
+def test_remat_adds_flops():
+    cfg = get_config("granite-20b")
+    shape = SHAPES["train_4k"]
+    assert flops_lib.compiled_flops(cfg, shape, remat=True) > \
+        flops_lib.compiled_flops(cfg, shape, remat=False)
+
+
+def test_moe_flops_use_active_params():
+    cfg = get_config("dbrx-132b")
+    shape = SHAPES["train_4k"]
+    m = flops_lib.model_flops(cfg, shape)
+    dense_equiv = 6.0 * cfg.param_count() * shape.global_batch * shape.seq_len
+    assert m < 0.5 * dense_equiv          # 36B active of 132B
+
+
+def test_swa_caps_decode_attention_flops():
+    cfg = get_config("h2o-danube-1.8b")
+    nosw = dataclasses.replace(cfg, sliding_window=0)
+    f_sw = flops_lib.forward_flops(cfg, SHAPES["decode_32k"])
+    f_full = flops_lib.forward_flops(nosw, SHAPES["decode_32k"])
+    assert f_sw < f_full

@@ -1,0 +1,48 @@
+"""Multi-device SPMD equivalence, run in a subprocess so the main pytest
+process keeps a single visible device (the brief forbids a global
+--xla_force_host_platform_device_count)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = os.path.join(os.path.dirname(__file__), "spmd_check.py")
+SRC = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+
+
+def _run(which):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, SCRIPT, which],
+                         capture_output=True, text=True, timeout=1200,
+                         env=env)
+    if res.returncode != 0:
+        raise AssertionError(
+            f"spmd_check {which} failed:\n{res.stdout[-4000:]}\n{res.stderr[-4000:]}")
+    assert "SPMD checks passed" in res.stdout
+
+
+@pytest.mark.slow
+def test_sharded_train_equivalence():
+    _run("train")
+
+
+@pytest.mark.slow
+def test_sharded_decode_equivalence():
+    _run("decode")
+
+
+@pytest.mark.slow
+def test_pipeline_parallel_equivalence():
+    script = os.path.join(os.path.dirname(__file__), "pipeline_check.py")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, script], capture_output=True,
+                         text=True, timeout=1200, env=env)
+    if res.returncode != 0:
+        raise AssertionError(
+            f"pipeline_check failed:\n{res.stdout[-4000:]}\n{res.stderr[-4000:]}")
+    assert "PIPELINE checks passed" in res.stdout

@@ -1,0 +1,176 @@
+"""Optimizer / data / checkpoint / HLO-parser / schedule unit tests."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpointing import latest_step, restore_checkpoint, save_checkpoint
+from repro.data import Batcher, BinTokenSource, SyntheticSource
+from repro.optim import (AdamWConfig, adamw_update, global_norm,
+                         init_opt_state, linear_warmup_cosine)
+from repro.perf.hlo import collective_stats, collective_stats_flat
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def test_adamw_converges_on_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0]), "scale": jnp.ones((2,))}
+    target = jnp.asarray([1.0, 2.0])
+    opt = init_opt_state(params)
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0)
+    for _ in range(200):
+        g = jax.grad(lambda p: jnp.sum((p["w"] - target) ** 2)
+                     + 0 * jnp.sum(p["scale"]))(params)
+        params, opt, _ = adamw_update(cfg, params, g, opt)
+    assert float(jnp.max(jnp.abs(params["w"] - target))) < 1e-2
+
+
+def test_adamw_grad_clipping():
+    params = {"w": jnp.zeros((4,))}
+    opt = init_opt_state(params)
+    g = {"w": jnp.full((4,), 100.0)}
+    _, _, m = adamw_update(AdamWConfig(grad_clip=1.0), params, g, opt)
+    assert float(m["grad_norm"]) == pytest.approx(200.0)
+
+
+def test_adamw_no_decay_on_norm_scales():
+    params = {"scale": jnp.ones((8,)), "w": jnp.ones((8, 8))}
+    opt = init_opt_state(params)
+    g = {"scale": jnp.zeros((8,)), "w": jnp.zeros((8, 8))}
+    p2, _, _ = adamw_update(AdamWConfig(lr=1.0, weight_decay=0.5), params, g, opt)
+    assert jnp.allclose(p2["scale"], 1.0)        # untouched (no grad, no decay)
+    assert not jnp.allclose(p2["w"], 1.0)        # decayed
+
+
+@given(step=st.integers(0, 10000))
+@settings(max_examples=100, deadline=None)
+def test_schedule_bounded(step):
+    v = float(linear_warmup_cosine(jnp.asarray(step), 100, 10000))
+    assert 0.0 <= v <= 1.0
+
+
+def test_schedule_warmup_then_decay():
+    s = lambda t: float(linear_warmup_cosine(jnp.asarray(t), 100, 1000))
+    assert s(10) < s(99) <= 1.0
+    assert s(100) >= s(500) >= s(999)
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_synthetic_batcher_shapes_and_determinism():
+    b1 = next(iter(Batcher(SyntheticSource(512, seed=7), 64, 4)))
+    b2 = next(iter(Batcher(SyntheticSource(512, seed=7), 64, 4)))
+    assert b1["tokens"].shape == (4, 64) and b1["labels"].shape == (4, 64)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    # labels are next-token shifted
+    np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])
+    assert b1["tokens"].max() < 512 and b1["tokens"].min() >= 0
+
+
+def test_bin_token_source(tmp_path):
+    data = np.arange(1000, dtype=np.uint16) % 256
+    path = tmp_path / "toks.bin"
+    data.tofile(path)
+    batch = next(iter(Batcher(BinTokenSource(str(path), chunk=128), 16, 2)))
+    assert batch["tokens"].shape == (2, 16)
+    np.testing.assert_array_equal(batch["tokens"][0], np.arange(16))
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "nested": {"b": jnp.ones((4,), jnp.bfloat16)},
+            "lst": [jnp.zeros((2,)), jnp.full((3,), 7.0)]}
+    save_checkpoint(str(tmp_path), 5, tree)
+    assert latest_step(str(tmp_path)) == 5
+    restored = restore_checkpoint(str(tmp_path), 5, jax.eval_shape(lambda: tree))
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+
+SYNTHETIC_HLO = """
+HloModule test
+
+%body.1 (arg: (s32[], f32[128])) -> (s32[], f32[128]) {
+  %ag = f32[256]{0} all-gather(f32[128] %x), replica_groups={}
+  ROOT %t = tuple(...)
+}
+
+ENTRY %main (p: f32[128]) -> f32[256] {
+  %w = (s32[], f32[128]) while(%init), condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"10"}}
+  %ar = f32[64]{0} all-reduce(f32[64] %y), to_apply=%add
+  ROOT %out = f32[256] get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_collective_stats_scales_while_bodies():
+    stats = collective_stats(SYNTHETIC_HLO)
+    assert stats["all-gather"]["bytes"] == 10 * 256 * 4
+    assert stats["all-gather"]["count"] == 10
+    assert stats["all-reduce"]["bytes"] == 64 * 4
+
+
+def test_collective_stats_flat_counts_once():
+    stats = collective_stats_flat(SYNTHETIC_HLO)
+    assert stats["all-gather"]["bytes"] == 256 * 4
+
+
+def test_collective_stats_on_real_lowering():
+    """8-fake-device lowering in a subprocess-free way is not possible here
+    (1 visible device), so check a dot-sharded module lowers parse-clean."""
+    import subprocess, sys, textwrap
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+        import sys; sys.path.insert(0, "src")
+        from repro.perf.hlo import collective_stats
+        mesh = jax.make_mesh((4,), ("x",))
+        def f(a):
+            b = jax.lax.with_sharding_constraint(a, jax.NamedSharding(mesh, P("x")))
+            def body(c, x): return c + (b * x).sum(), None
+            return jax.lax.scan(body, 0.0, jnp.arange(5.0))[0]
+        with jax.set_mesh(mesh):
+            sds = jax.ShapeDtypeStruct((16,), jnp.float32,
+                                       sharding=jax.NamedSharding(mesh, P(None)))
+            txt = jax.jit(f).lower(sds).compile().as_text()
+        s = collective_stats(txt)
+        print("PARSED", sum(v["count"] for v in s.values()))
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=300, env=env, cwd=os.path.join(
+                             os.path.dirname(__file__), os.pardir))
+    assert res.returncode == 0, res.stderr[-2000:]
+    assert "PARSED" in res.stdout
+
+
+# ---------------------------------------------------------------------------
+# global norm property
+# ---------------------------------------------------------------------------
+
+@given(st.lists(st.floats(-100, 100), min_size=1, max_size=16))
+@settings(max_examples=50, deadline=None)
+def test_global_norm_matches_numpy(vals):
+    tree = {"x": jnp.asarray(vals, jnp.float32)}
+    assert float(global_norm(tree)) == pytest.approx(
+        float(np.linalg.norm(np.asarray(vals, np.float32))), rel=1e-4, abs=1e-5)

@@ -19,8 +19,25 @@ Figure map:
 """
 from __future__ import annotations
 
+from repro import strategy as strategy_lib
+from repro.configs.base import ShapeConfig
 from repro.configs.llama2 import LLAMA2_1B, LLAMA2_7B, LLAMA2_13B, LLAMA2_70B
 from repro.core import costmodel as cm
+
+
+def _topo(hw: cm.Hardware, n: int, hbm: float = 80e9) -> strategy_lib.Topology:
+    return strategy_lib.Topology(hw.name, n, island=hw.island,
+                                 hardware=hw.name, hbm=hbm)
+
+
+def _search(model, hw, n, global_batch, seq_len, zero_stage=2,
+            pps=(1, 2, 4, 8, 16), cps=(1, 2, 4, 8), **kw):
+    """Planner sweep used by the figure benchmarks (tp x pp x cp)."""
+    shape = ShapeConfig("fig", seq_len, global_batch, "train")
+    return strategy_lib.search(
+        model, _topo(hw, n), shape, dp_modes=("fsdp",),
+        zero_stages=(zero_stage,), pps=pps, cps=cps,
+        require_fits=False, require_lowerable=False, **kw)
 
 
 def fig2_collectives():
@@ -67,14 +84,14 @@ def fig4_collective_time():
 
 
 def fig5_strong_scaling():
-    header = ["nodes", "gpus", "best_tp", "best_pp", "mfu", "wps_global",
-              "wps_per_dev", "power_W", "tokens_per_J"]
+    header = ["nodes", "gpus", "best_spec", "best_tp", "best_pp", "best_cp",
+              "mfu", "wps_global", "wps_per_dev", "power_W", "tokens_per_J"]
     rows = []
     for nodes in (2, 4, 8, 16, 32):
         n = nodes * 8
-        b = cm.best_strategy(cm.sweep_strategies(
-            LLAMA2_7B, cm.H100, n, 32, 4096, zero_stage=2), require_fits=False)
-        rows.append([nodes, n, b.strategy.tp, b.strategy.pp, round(b.mfu, 4),
+        p = _search(LLAMA2_7B, cm.H100, n, 32, 4096)[0]
+        b, s = p.report, p.strategy
+        rows.append([nodes, n, p.spec, s.tp, s.pp, s.cp, round(b.mfu, 4),
                      round(b.wps), round(b.wps_per_device),
                      round(b.power_per_device, 1),
                      round(b.tokens_per_joule, 2)])
@@ -82,14 +99,13 @@ def fig5_strong_scaling():
 
 
 def fig6_parallelism_sweep():
-    header = ["tp", "pp", "dp", "wps_global", "mfu", "exposed_ms",
-              "power_W", "fits_80GB"]
+    header = ["spec", "tp", "pp", "cp", "dp", "wps_global", "mfu",
+              "exposed_ms", "power_W", "fits_80GB"]
     rows = []
-    for r in cm.sweep_strategies(LLAMA2_7B, cm.H100, 256, 512, 4096,
-                                 zero_stage=2):
-        s = r.strategy
-        rows.append([s.tp, s.pp, s.dp, round(r.wps), round(r.mfu, 4),
-                     round(r.t_comm_exposed * 1e3, 1),
+    for p in _search(LLAMA2_7B, cm.H100, 256, 512, 4096):
+        r, s = p.report, p.strategy
+        rows.append([p.spec, s.tp, s.pp, s.cp, r.strategy.dp, round(r.wps),
+                     round(r.mfu, 4), round(r.t_comm_exposed * 1e3, 1),
                      round(r.power_per_device, 1), int(r.fits)])
     return header, rows
 
@@ -98,24 +114,23 @@ def fig7_hw_generations():
     header = ["hw", "tp", "pp", "wps_global", "mfu", "exposed_frac"]
     rows = []
     for hw in (cm.V100, cm.A100, cm.H100):
-        for r in cm.sweep_strategies(LLAMA2_7B, hw, 256, 512, 4096,
-                                     zero_stage=2, tps=(1, 2, 4, 8),
-                                     pps=(1, 2, 4)):
-            s = r.strategy
+        for p in _search(LLAMA2_7B, hw, 256, 512, 4096, tps=(1, 2, 4, 8),
+                         pps=(1, 2, 4), cps=(1,)):
+            r, s = p.report, p.strategy
             rows.append([hw.name, s.tp, s.pp, round(r.wps), round(r.mfu, 4),
                          round(r.t_comm_exposed / r.t_step, 4)])
     return header, rows
 
 
 def fig8_model_size():
-    header = ["model", "params_B", "best_tp", "best_pp", "mfu",
+    header = ["model", "params_B", "best_spec", "best_tp", "best_pp", "mfu",
               "exposed_frac", "wps_global"]
     rows = []
     for m in (LLAMA2_1B, LLAMA2_7B, LLAMA2_13B, LLAMA2_70B):
-        b = cm.best_strategy(cm.sweep_strategies(
-            m, cm.H100, 256, 512, 4096, zero_stage=2), require_fits=False)
-        rows.append([m.name, round(m.param_count() / 1e9, 2), b.strategy.tp,
-                     b.strategy.pp, round(b.mfu, 4),
+        p = _search(m, cm.H100, 256, 512, 4096)[0]
+        b = p.report
+        rows.append([m.name, round(m.param_count() / 1e9, 2), p.spec,
+                     p.strategy.tp, p.strategy.pp, round(b.mfu, 4),
                      round(b.t_comm_exposed / b.t_step, 4), round(b.wps)])
     return header, rows
 
@@ -134,27 +149,44 @@ def fig9_context_length():
 
 
 def fig11_pretrain_scale():
-    header = ["model", "gpus", "best_tp", "mfu", "wps_per_dev"]
+    header = ["model", "gpus", "best_spec", "best_tp", "mfu", "wps_per_dev"]
     rows = []
     for m, gb in ((LLAMA2_7B, 2048), (LLAMA2_70B, 1024)):
         for n in (512, 1024, 2048):
-            b = cm.best_strategy(cm.sweep_strategies(
-                m, cm.H100, n, gb, 4096, zero_stage=2), require_fits=False)
-            rows.append([m.name, n, b.strategy.tp, round(b.mfu, 4),
-                         round(b.wps_per_device)])
+            p = _search(m, cm.H100, n, gb, 4096)[0]
+            rows.append([m.name, n, p.spec, p.strategy.tp,
+                         round(p.report.mfu, 4),
+                         round(p.report.wps_per_device)])
     return header, rows
 
 
 def fig12_context_parallel():
-    header = ["strategy", "degree", "wps_global", "mfu"]
+    """TP vs CP at equal model-axis degree, priced from the same descriptor
+    the SPMD lowering uses (spec strings, not hand-built cost strategies)."""
+    header = ["spec", "mode", "degree", "wps_global", "mfu"]
+    topo = _topo(cm.H100, 256)
+    shape = ShapeConfig("fig12", 4096, 512, "train")
     rows = []
     for deg in (2, 4, 8):
-        r_tp = cm.step_time(LLAMA2_7B, cm.H100,
-                            cm.Strategy(256, tp=deg, zero_stage=2), 512, 4096)
-        r_cp = cm.step_time(LLAMA2_7B, cm.H100,
-                            cm.Strategy(256, cp=deg, zero_stage=2), 512, 4096)
-        rows.append(["tp", deg, round(r_tp.wps), round(r_tp.mfu, 4)])
-        rows.append(["cp", deg, round(r_cp.wps), round(r_cp.mfu, 4)])
+        for spec in (f"fsdp_tp{deg}_z2", f"fsdp_cp{deg}_z2"):
+            s = strategy_lib.parse(spec)
+            r = strategy_lib.evaluate(LLAMA2_7B, s, topo, shape)
+            rows.append([spec, "cp" if s.cp > 1 else "tp", deg,
+                         round(r.wps), round(r.mfu, 4)])
+    return header, rows
+
+
+def fig13_pareto():
+    """Planner value-add: throughput x energy Pareto front at 256 GPUs."""
+    header = ["spec", "wps_global", "tokens_per_J", "mfu", "on_front"]
+    ranked = _search(LLAMA2_7B, cm.H100, 256, 512, 4096)
+    front = {p.spec for p in strategy_lib.pareto_front(
+        ranked, objectives=("wps", "tokens_per_joule"))}
+    rows = []
+    for p in ranked:
+        rows.append([p.spec, round(p.report.wps),
+                     round(p.report.tokens_per_joule, 2),
+                     round(p.report.mfu, 4), int(p.spec in front)])
     return header, rows
 
 
@@ -186,15 +218,19 @@ def fig1_power():
 
 def tpu_v5e_transfer():
     """The paper's strategy sweep on the TPU v5e production mesh (DESIGN §2):
-    the island boundary moves from the 8-GPU node to the 256-chip pod."""
-    header = ["chips", "tp", "wps_global", "mfu", "exposed_frac"]
+    the island boundary moves from the 8-GPU node to the 256-chip pod.
+    Specs lower on the actual pod topology, so multi-pod rows charge the
+    HSDP cross-pod gradient all-reduce the (16,16)-era sweep ignored."""
+    header = ["chips", "spec", "wps_global", "mfu", "exposed_frac"]
     rows = []
-    for n in (256, 512):
+    for pods in (1, 2):
+        topo = strategy_lib.pod_topology(pods=pods)
+        shape = ShapeConfig("tpu", 4096, 256, "train")
         for tp in (1, 4, 16):
-            r = cm.step_time(LLAMA2_7B, cm.TPU_V5E,
-                             cm.Strategy(n, tp=tp, zero_stage=3),
-                             256, 4096, hbm_capacity=16e9)
-            rows.append([n, tp, round(r.wps), round(r.mfu, 4),
+            spec = f"hsdp_tp{tp}" if tp > 1 else "hsdp"
+            s = strategy_lib.parse(spec)
+            r = strategy_lib.evaluate(LLAMA2_7B, s, topo, shape)
+            rows.append([topo.n_devices, spec, round(r.wps), round(r.mfu, 4),
                          round(r.t_comm_exposed / r.t_step, 4)])
     return header, rows
 
@@ -211,6 +247,7 @@ ALL = {
     "fig9_context_length": fig9_context_length,
     "fig11_pretrain_scale": fig11_pretrain_scale,
     "fig12_context_parallel": fig12_context_parallel,
+    "fig13_pareto": fig13_pareto,
     "fig14_memory": fig14_memory,
     "tpu_v5e_transfer": tpu_v5e_transfer,
 }

@@ -10,6 +10,7 @@ regression signal, not a TPU performance claim.
 """
 from __future__ import annotations
 
+import argparse
 import csv
 import os
 import time
@@ -78,9 +79,41 @@ def _micro_benchmarks():
     return out
 
 
+def _strategy_benchmark(spec: str, hw_name: str, gpus: int, global_batch: int,
+                        seq_len: int):
+    """Price one spec (or the planner's 'auto' pick) via the unified API."""
+    from repro import strategy as strategy_lib
+    from repro.configs.base import ShapeConfig
+    from repro.configs.llama2 import LLAMA2_7B
+    from repro.core import costmodel as cm
+    hw = cm.HARDWARE[hw_name]
+    topo = strategy_lib.Topology(hw.name, gpus, island=hw.island,
+                                 hardware=hw.name, hbm=80e9)
+    shape = ShapeConfig("bench", seq_len, global_batch, "train")
+    t0 = time.perf_counter()
+    strat, planned = strategy_lib.resolve(spec, LLAMA2_7B, topo, shape)
+    r = (planned.report if planned is not None
+         else strategy_lib.evaluate(LLAMA2_7B, strat, topo, shape))
+    dt_us = (time.perf_counter() - t0) * 1e6
+    return [("strategy_" + strat.format(), dt_us,
+             f"{hw_name}x{gpus}_wps{r.wps:.0f}_mfu{r.mfu:.3f}")]
+
+
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--strategy", default="auto",
+                    help="'auto' (planner pick) or a spec string like "
+                         "hsdp_tp4 / fsdp_cp8 to price on --hw x --gpus")
+    ap.add_argument("--hw", default="H100")
+    ap.add_argument("--gpus", type=int, default=2048)
+    ap.add_argument("--global_batch", type=int, default=4096)
+    ap.add_argument("--seq_len", type=int, default=4096)
+    args = ap.parse_args()
+
     rows = _figure_benchmarks()
     rows += _micro_benchmarks()
+    rows += _strategy_benchmark(args.strategy, args.hw, args.gpus,
+                                args.global_batch, args.seq_len)
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")

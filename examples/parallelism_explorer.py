@@ -1,13 +1,16 @@
 """The paper's §5 recommendations as a tool: given a model, a cluster, and
-a batch, search the parallelization-strategy space with the calibrated cost
-model and print the ranked configurations.
+a batch, search the executable-strategy space with the cost-model-driven
+planner (repro.strategy) and print the ranked configurations — including
+context-parallel degrees and the throughput x energy Pareto front.
 
     PYTHONPATH=src python examples/parallelism_explorer.py \
         --model llama2-7b --hw H100 --gpus 256 --global_batch 512
 """
 import argparse
 
+from repro import strategy as strategy_lib
 from repro.configs import get_config
+from repro.configs.base import ShapeConfig
 from repro.core import costmodel as cm
 
 
@@ -20,29 +23,48 @@ def main():
     ap.add_argument("--seq_len", type=int, default=4096)
     ap.add_argument("--zero", type=int, default=2, choices=[0, 2, 3])
     ap.add_argument("--hbm_gb", type=float, default=80.0)
+    ap.add_argument("--objective", default="wps",
+                    choices=sorted(strategy_lib.OBJECTIVES))
     ap.add_argument("--top", type=int, default=10)
     args = ap.parse_args()
 
     cfg = get_config(args.model)
     hw = cm.HARDWARE[args.hw]
-    reports = cm.sweep_strategies(cfg, hw, args.gpus, args.global_batch,
-                                  args.seq_len, zero_stage=args.zero,
-                                  hbm_capacity=args.hbm_gb * 2**30)
-    reports.sort(key=lambda r: -r.wps)
+    topo = strategy_lib.Topology(hw.name, args.gpus, island=hw.island,
+                                 hardware=hw.name, hbm=args.hbm_gb * 2**30)
+    shape = ShapeConfig("explore", args.seq_len, args.global_batch, "train")
+    dp_mode = "ddp" if args.zero == 0 else "fsdp"
+    ranked = strategy_lib.search(
+        cfg, topo, shape, objective=args.objective, dp_modes=(dp_mode,),
+        zero_stages=(args.zero,), pps=(1, 2, 4, 8, 16), cps=(1, 2, 4, 8),
+        require_fits=False, require_lowerable=False)
+    front = {p.spec for p in strategy_lib.pareto_front(
+        ranked, objectives=("wps", "tokens_per_joule"))}
+
     print(f"{cfg.name} on {args.gpus}x {hw.name}, gb={args.global_batch}, "
-          f"seq={args.seq_len}, ZeRO-{args.zero}")
-    print(f"{'tp':>3} {'pp':>3} {'dp':>5} {'WPS':>12} {'MFU':>6} "
-          f"{'exposed':>8} {'W/gpu':>6} {'tok/J':>7} {'mem GB':>7} fits")
-    for r in reports[: args.top]:
-        s = r.strategy
-        print(f"{s.tp:>3} {s.pp:>3} {s.dp:>5} {r.wps:>12,.0f} {r.mfu:>6.3f} "
-              f"{r.t_comm_exposed / r.t_step:>8.1%} {r.power_per_device:>6.0f} "
-              f"{r.tokens_per_joule:>7.2f} {r.memory_per_device/2**30:>7.1f} "
-              f"{'y' if r.fits else 'n'}")
-    best = reports[0]
-    print(f"\nrecommendation: tp={best.strategy.tp} pp={best.strategy.pp} "
-          f"dp={best.strategy.dp}  (paper §5: at scale, small model-parallel "
-          f"degrees beat pure FSDP)")
+          f"seq={args.seq_len}, ZeRO-{args.zero}, objective={args.objective}")
+    print(f"{'spec':>18} {'tp':>3} {'pp':>3} {'cp':>3} {'dp':>5} {'WPS':>12} "
+          f"{'MFU':>6} {'exposed':>8} {'W/gpu':>6} {'tok/J':>7} "
+          f"{'mem GB':>7} fits runs pareto")
+    for p in ranked[: args.top]:
+        r, s = p.report, p.strategy
+        print(f"{p.spec:>18} {s.tp:>3} {s.pp:>3} {s.cp:>3} "
+              f"{r.strategy.dp:>5} {r.wps:>12,.0f} {r.mfu:>6.3f} "
+              f"{r.t_comm_exposed / r.t_step:>8.1%} "
+              f"{r.power_per_device:>6.0f} {r.tokens_per_joule:>7.2f} "
+              f"{r.memory_per_device / 2**30:>7.1f} "
+              f"{'y' if r.fits else 'n':>4} {'y' if p.lowers else 'n':>4} "
+              f"{'*' if p.spec in front else '':>6}")
+    # recommend only specs the SPMD lowering can execute (pp>1 is
+    # analytic-only, so the top-ranked point may not run)
+    best = next((p for p in ranked if p.lowers), None)
+    if best is None:
+        print("\nno ranked strategy lowers on this topology "
+              "(analytic-only table)")
+    else:
+        print(f"\nrecommendation: --strategy {best.spec}  (paper §5: at "
+              f"scale, small model-parallel degrees beat pure FSDP; the "
+              f"same spec string drives repro.launch.train / dryrun / serve)")
 
 
 if __name__ == "__main__":

@@ -145,16 +145,30 @@ def bus_bandwidth_allreduce(hw: Hardware, bytes_total: float, n: int) -> float:
 
 @dataclasses.dataclass(frozen=True)
 class Strategy:
+    """Analytic strategy degrees.
+
+    This is the cost model's internal view; the user-facing descriptor is
+    ``repro.strategy.Strategy``, whose ``to_cost_strategy`` produces one of
+    these with group sizes matching its SPMD lowering (HSDP sets
+    ``fsdp_group`` to the intra-island shard group).
+    """
     n_devices: int
     tp: int = 1                 # tensor-parallel degree
     pp: int = 1                 # pipeline-parallel degree
     cp: int = 1                 # context-parallel degree
     zero_stage: int = 3         # 0: DDP, 2/3: sharded (paper: FSDP ~ ZeRO-2/3)
     microbatches: int = 1       # pipeline microbatches per step
+    fsdp_group: int = 0         # param-shard group size; 0 -> full dp (FSDP).
+                                # HSDP: the island-local group, with the
+                                # cross-island grad AR charged separately.
 
     @property
     def dp(self) -> int:
         return self.n_devices // (self.tp * self.pp * self.cp)
+
+    @property
+    def fsdp_n(self) -> int:
+        return self.fsdp_group or self.dp
 
     @property
     def model_parallel(self) -> int:
@@ -162,7 +176,8 @@ class Strategy:
 
     def valid(self) -> bool:
         return (self.dp >= 1 and
-                self.dp * self.tp * self.pp * self.cp == self.n_devices)
+                self.dp * self.tp * self.pp * self.cp == self.n_devices and
+                self.dp % self.fsdp_n == 0)
 
 
 # ---------------------------------------------------------------------------
@@ -229,18 +244,19 @@ def step_time(cfg: ModelConfig, hw: Hardware, strat: Strategy,
     act_bytes_layer = local_batch * seq_len * d * 2 / strat.cp  # bf16
 
     comm: Dict[str, float] = {"fsdp_ag": 0.0, "fsdp_rs": 0.0, "ddp_ar": 0.0,
-                              "tp_ar": 0.0, "pp_p2p": 0.0, "cp": 0.0,
-                              "moe_a2a": 0.0}
+                              "hsdp_ar": 0.0, "tp_ar": 0.0, "pp_p2p": 0.0,
+                              "cp": 0.0, "moe_a2a": 0.0}
 
     # ---- sharded data parallel collectives (per layer) ---------------------
     layer_param_bytes = P_bytes / L / (strat.tp * strat.pp)
     n_dp = strat.dp
-    if strat.zero_stage >= 2 and n_dp > 1:
+    n_fsdp = strat.fsdp_n       # param-shard group (== dp unless HSDP)
+    if strat.zero_stage >= 2 and n_fsdp > 1:
         # AllGather params fwd (+ bwd re-gather for ZeRO-3), ReduceScatter grads
-        ag_per_layer = t_all_gather(hw, layer_param_bytes, n_dp)
+        ag_per_layer = t_all_gather(hw, layer_param_bytes, n_fsdp)
         n_ag = 2 if strat.zero_stage == 3 else 1
         rs_per_layer = t_reduce_scatter(
-            hw, layer_param_bytes * GRAD_DTYPE_BYTES / 2, n_dp)
+            hw, layer_param_bytes * GRAD_DTYPE_BYTES / 2, n_fsdp)
         comm["fsdp_ag"] = L * n_ag * ag_per_layer
         comm["fsdp_rs"] = (L * rs_per_layer) if train else 0.0
         win_fwd = PREFETCH_EFF * t_layer_fwd
@@ -250,6 +266,22 @@ def step_time(cfg: ModelConfig, hw: Hardware, strat: Strategy,
             exposed_fsdp += L * max(0.0, ag_per_layer - win_bwd)
         if train:
             exposed_fsdp += L * max(0.0, rs_per_layer - win_bwd)
+        if train and n_fsdp < n_dp:
+            # HSDP: gradient shards all-reduced across the dp//n_fsdp
+            # replicas once per step, ring over the slow inter-island
+            # fabric shared by the island's n_fsdp concurrent rings.
+            replicas = n_dp // n_fsdp
+            grad_shard = layer_param_bytes * L * GRAD_DTYPE_BYTES / 2 / n_fsdp
+            # every chip in the island — n_fsdp data ranks x tp*cp model
+            # ranks — holds a distinct shard and rings concurrently over
+            # the shared cross-island fabric (same sharing as _bw_alpha)
+            island_ranks = n_fsdp * strat.tp * strat.cp
+            bw = hw.inter_bw / island_ranks * (
+                hw.rings if hw.fabric == "ici" else 1)
+            comm["hsdp_ar"] = 2 * (replicas - 1) * max(
+                grad_shard / (replicas * bw), hw.alpha_inter)
+            # overlaps the backward tail like DDP, but spans fewer layers
+            exposed_fsdp += 0.5 * comm["hsdp_ar"]
     elif n_dp > 1 and train:
         comm["ddp_ar"] = t_all_reduce(hw, P_bytes * GRAD_DTYPE_BYTES / 2, n_dp)
         # DDP grad all-reduce overlaps with backward (non-blocking, §2.1)
@@ -306,11 +338,11 @@ def step_time(cfg: ModelConfig, hw: Hardware, strat: Strategy,
     t_step = (t_compute + t_exposed) / max(1e-9, (1 - bubble))
 
     # ---- memory ---------------------------------------------------------------
-    shard = strat.tp * strat.pp * (n_dp if strat.zero_stage >= 3 else
-                                   (n_dp if strat.zero_stage == 2 else 1))
-    opt_shard = strat.tp * strat.pp * (n_dp if strat.zero_stage >= 2 else 1)
-    mem = (P_bytes / (strat.tp * strat.pp)) / (n_dp if strat.zero_stage >= 3 else 1)
-    mem += 2 * P_bytes / (strat.tp * strat.pp) / (n_dp if strat.zero_stage >= 2 else 1)  # grads(bf16)+..
+    # ZeRO shards over the param-shard group (n_fsdp == dp unless HSDP,
+    # where replicas across islands each hold a full shard set).
+    opt_shard = strat.tp * strat.pp * (n_fsdp if strat.zero_stage >= 2 else 1)
+    mem = (P_bytes / (strat.tp * strat.pp)) / (n_fsdp if strat.zero_stage >= 3 else 1)
+    mem += 2 * P_bytes / (strat.tp * strat.pp) / (n_fsdp if strat.zero_stage >= 2 else 1)  # grads(bf16)+..
     mem += 8 * cfg.param_count() / opt_shard       # adam m+v fp32
     if train:
         mem += L / strat.pp * act_bytes_layer      # remat boundaries
@@ -340,29 +372,29 @@ def sweep_strategies(cfg: ModelConfig, hw: Hardware, n_devices: int,
                      tps: Iterable[int] = (1, 2, 4, 8, 16),
                      pps: Iterable[int] = (1, 2, 4, 8, 16),
                      zero_stage: int = 3,
-                     hbm_capacity: float = 80e9) -> List[StepReport]:
-    """Fig 6: search viable (tp, pp) combinations."""
-    out = []
-    for tp in tps:
-        for pp in pps:
-            if tp * pp > n_devices:
-                continue
-            if n_devices % (tp * pp):
-                continue
-            strat = Strategy(n_devices, tp=tp, pp=pp, zero_stage=zero_stage,
-                             microbatches=max(8, pp))
-            if not strat.valid() or strat.dp < 1:
-                continue
-            if global_batch % (strat.dp) and global_batch >= strat.dp:
-                continue
-            if strat.dp > global_batch:
-                continue
-            out.append(step_time(cfg, hw, strat, global_batch, seq_len,
-                                 hbm_capacity))
-    return out
+                     hbm_capacity: float = 80e9,
+                     cps: Iterable[int] = (1,)) -> List[StepReport]:
+    """Deprecated shim — use ``repro.strategy.search``.
+
+    Kept for the Fig 6 (tp, pp) sweep callers; delegates to the planner so
+    the candidate set and pricing stay in one place.  The planner also
+    sweeps context-parallel degrees (pass ``cps``), which this legacy
+    entry point historically ignored.
+    """
+    from repro.strategy import Topology, planner
+    topo = Topology(hw.name, n_devices, island=hw.island, hardware=hw.name,
+                    hbm=hbm_capacity, hw_obj=hw)
+    shape = ShapeConfig("sweep", seq_len, global_batch, "train")
+    dp_mode = "ddp" if zero_stage == 0 else "fsdp"
+    ranked = planner.search(cfg, topo, shape, dp_modes=(dp_mode,), tps=tps,
+                            cps=cps, pps=pps, zero_stages=(zero_stage,),
+                            microbatches=8, require_fits=False,
+                            require_lowerable=False)
+    return [p.report for p in ranked]
 
 
 def best_strategy(reports: List[StepReport],
                   require_fits: bool = True) -> Optional[StepReport]:
+    """Deprecated shim — use ``repro.strategy.best`` / ``search``[0]."""
     cand = [r for r in reports if (r.fits or not require_fits)]
     return max(cand, key=lambda r: r.wps) if cand else None

@@ -25,7 +25,9 @@ both (data, model).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import functools
 import math
 from typing import Dict, Optional, Tuple
 
@@ -34,6 +36,24 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def use_mesh(mesh: Mesh):
+    """Context manager making ``mesh`` the ambient mesh for jit/constraints.
+
+    jax renamed this entry point across releases (``jax.set_mesh`` /
+    ``jax.sharding.use_mesh``); on older versions the Mesh object itself is
+    the context manager.  All repo code goes through this helper.
+    """
+    fn = getattr(jax, "set_mesh", None)
+    if fn is not None:
+        return fn(mesh)
+    fn = getattr(jax.sharding, "use_mesh", None)
+    if fn is not None:
+        return fn(mesh)
+    if hasattr(mesh, "__enter__"):
+        return mesh
+    return contextlib.nullcontext(mesh)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -59,7 +79,14 @@ class ParallelPlan:
 def choose_plan(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig,
                 dp_mode: str = "hsdp", attn_override: Optional[str] = None,
                 seq_parallel: bool = True) -> ParallelPlan:
-    """Pick the paper-recommended strategy for (arch, shape, mesh)."""
+    """Deprecated shim — build plans via ``repro.strategy`` instead.
+
+    ``repro.strategy.Strategy(...).to_plan(cfg, topology, shape)`` is the
+    supported path: the same descriptor feeds the cost model, so planner
+    rankings and SPMD lowerings cannot drift apart.  This entry point
+    derives a plan from an *already built* mesh and is kept only for
+    callers that construct meshes by hand.
+    """
     axes = mesh.axis_names
     assert "data" in axes and "model" in axes, axes
     has_pod = "pod" in axes
@@ -124,6 +151,37 @@ def fitted(plan: ParallelPlan, spec: P, x_or_shape):
 # parameter shardings
 # ---------------------------------------------------------------------------
 
+@functools.lru_cache(maxsize=None)
+def _layer_plan_cached(cfg: ModelConfig):
+    # layer_plan is an O(L^3) signature search; _mixer_kind calls it once
+    # per parameter leaf of a hybrid model, so cache on the frozen config
+    from repro.models.transformer import layer_plan
+    return layer_plan(cfg)
+
+
+def _mixer_kind(cfg: ModelConfig, path) -> str:
+    """Mixer kind ('attn' | 'rwkv6' | 'mamba') of the layer owning a leaf.
+
+    Attention and rwkv time-mix share leaf names (wk/wv/wo/wr), so specs
+    must discriminate on the layer's kind, not the leaf name.  Pure stacks
+    are unambiguous; hybrids recover the layer id from the prefix/blocks
+    position in the tree path (each scanned block position holds layers of
+    a single kind by construction — see transformer.layer_plan).
+    """
+    if cfg.mixer == "attn" or cfg.attn_every <= 1:
+        return cfg.mixer
+    _prefix, start, _period, _n_blocks = _layer_plan_cached(cfg)
+    for j, p in enumerate(path[:-1]):
+        name = getattr(p, "key", getattr(p, "name", str(p)))
+        if name in ("prefix", "blocks"):
+            idx = getattr(path[j + 1], "idx", None)
+            if idx is None:
+                break
+            layer = idx if name == "prefix" else start + idx
+            return cfg.layer_kind(layer)
+    return cfg.mixer
+
+
 def _param_spec(cfg: ModelConfig, plan: ParallelPlan, path: Tuple[str, ...],
                 ndim: int) -> P:
     """PartitionSpec for one parameter leaf, identified by its tree path.
@@ -159,50 +217,54 @@ def _param_spec(cfg: ModelConfig, plan: ParallelPlan, path: Tuple[str, ...],
         return spec(m, f if leaf != "w_down" else None,
                     f if leaf == "w_down" else None)
     if in_attention:
-        head_m = m if plan.attn == "head_tp" else None
-        kv_m = m if plan.kv_tp else None
-        if leaf == "wq":
-            return spec(f, head_m)
-        if leaf in ("wk", "wv"):
-            return spec(f, kv_m)
-        if leaf == "wo":
-            return spec(head_m, f)
-        if leaf == "bq":
-            return spec(head_m)
-        if leaf in ("bk", "bv"):
-            return spec(kv_m)
-        # rwkv time-mix
-        if leaf in ("wr", "wk", "wv", "wg"):
-            return spec(f, m)
-        if leaf == "u":
-            return spec(m, None)
-        if leaf in ("tm_w1", "td_w1"):
-            return spec(f, None)
-        if leaf == "td_w2":
-            return spec(None, f)
-        if leaf == "tm_w2":
-            return spec(None, None, f)
-        # mamba
-        if leaf in ("w_x_in", "w_z_in"):
-            return spec(f, m)
-        if leaf == "conv_w":
-            return spec(None, m)
-        if leaf in ("conv_b", "b_dt", "D"):
-            return spec(m)
-        if leaf == "w_x":
-            return spec(m, None)
-        if leaf == "w_dt":
-            return spec(None, m)
-        if leaf == "A_log":
-            return spec(m, None)
-        if leaf == "w_out":
-            return spec(m, f)
-        if leaf in ("maa_x",):
-            return spec()
-        if leaf == "maa_rkvwg":
-            return spec(None, None)
-        if leaf == "w0":
-            return spec()
+        kind = _mixer_kind(cfg, path)
+        if kind == "attn":
+            head_m = m if plan.attn == "head_tp" else None
+            kv_m = m if plan.kv_tp else None
+            if leaf == "wq":
+                return spec(f, head_m)
+            if leaf in ("wk", "wv"):
+                return spec(f, kv_m)
+            if leaf == "wo":
+                return spec(head_m, f)
+            if leaf == "bq":
+                return spec(head_m)
+            if leaf in ("bk", "bv"):
+                return spec(kv_m)
+        elif kind == "rwkv6":
+            if leaf in ("wr", "wk", "wv", "wg"):
+                return spec(f, m)
+            if leaf == "wo":
+                return spec(m, f)
+            if leaf == "u":
+                return spec(m, None)
+            if leaf in ("tm_w1", "td_w1"):
+                return spec(f, None)
+            if leaf == "td_w2":
+                return spec(None, f)
+            if leaf == "tm_w2":
+                return spec(None, None, f)
+            if leaf == "maa_x":
+                return spec()
+            if leaf == "maa_rkvwg":
+                return spec(None, None)
+            if leaf == "w0":
+                return spec()
+        elif kind == "mamba":
+            if leaf in ("w_x_in", "w_z_in"):
+                return spec(f, m)
+            if leaf == "conv_w":
+                return spec(None, m)
+            if leaf in ("conv_b", "b_dt", "D"):
+                return spec(m)
+            if leaf == "w_x":
+                return spec(m, None)
+            if leaf == "w_dt":
+                return spec(None, m)
+            if leaf == "A_log":
+                return spec(m, None)
+            if leaf == "w_out":
+                return spec(m, f)
     # dense / shared-expert / rwkv channel-mix FFN (2D)
     ffn_m = m if plan.attn == "head_tp" else None
     if leaf in ("w_up", "w_gate"):
@@ -373,9 +435,8 @@ def cache_shardings(cfg: ModelConfig, plan: ParallelPlan, cache_shape):
         if leaf_name in ("k", "v"):
             spec = specs["kv_cache"]
         elif leaf_name == "wkv":
+            # (B, H, N, N) head-sharded state; 2-D fallback for legacy carries
             spec = specs["rwkv_state"] if nd == 4 else P(plan.dp, plan.tp)
-            if nd == 4:
-                spec = P(plan.dp, plan.tp, None, None)
         elif leaf_name == "ssm":
             spec = specs["mamba_state"]
         elif leaf_name == "conv":

@@ -22,6 +22,17 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+if hasattr(jax, "shard_map"):          # jax >= 0.6
+    def _shard_map(f, mesh, in_specs, out_specs):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+else:                                   # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _sm
+
+    def _shard_map(f, mesh, in_specs, out_specs):
+        return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_rep=False)
+
 
 def pipeline_apply(stage_fn: Callable, params_stacked, x_microbatches,
                    mesh, axis: str = "pipe"):
@@ -69,10 +80,7 @@ def pipeline_apply(stage_fn: Callable, params_stacked, x_microbatches,
         return jax.lax.psum(outputs * mask, axis)
 
     pspec = jax.tree.map(lambda _: P(axis), params_stacked)
-    fn = jax.shard_map(
-        per_stage, mesh=mesh,
-        in_specs=(pspec, P()), out_specs=P(),
-        check_vma=False)
+    fn = _shard_map(per_stage, mesh, in_specs=(pspec, P()), out_specs=P())
     return fn(params_stacked, x_microbatches)
 
 

@@ -27,10 +27,10 @@ import jax.numpy as jnp
 jax.config.update("jax_compilation_cache_dir", "/tmp/jax_cache")
 jax.config.update("jax_persistent_cache_min_compile_time_secs", 2.0)
 
+from repro import strategy as strategy_lib
 from repro.configs import SHAPES, get_config, list_archs, supports_shape
 from repro.core import parallel as par
 from repro.launch import specs as specs_lib
-from repro.launch.mesh import make_production_mesh
 from repro.models import transformer as tfm
 from repro.optim import init_opt_state
 from repro.perf import flops as flops_lib
@@ -53,16 +53,42 @@ def _attach(shapes, shardings):
                         shapes, shardings)
 
 
+def resolve_strategy(cfg, shape, topo, strategy: str, dp_mode: str = "hsdp",
+                     attn_override=None, seq_parallel: bool = True):
+    """Map (--strategy, legacy flags) to a Strategy descriptor.
+
+    '' (default) keeps the paper's pod layout — model axis 16 — with the
+    legacy dp_mode/attn/sp flags folded in; 'auto' asks the planner;
+    anything else is a spec string (legacy flags still apply on top unless
+    the spec sets them itself).
+    """
+    if strategy == "auto":
+        s, _ = strategy_lib.resolve("auto", cfg, topo, shape)
+    elif not strategy:
+        s = strategy_lib.Strategy(
+            dp_mode="fsdp" if dp_mode == "fsdp2d" else "hsdp", tp=16)
+    else:
+        s = strategy_lib.parse(strategy)
+    if attn_override and s.attn is None:
+        s = dataclasses.replace(s, attn=attn_override)
+    if not seq_parallel:
+        s = dataclasses.replace(s, seq_parallel=False)
+    if dp_mode == "fsdp2d" and s.dp_mode == "hsdp":
+        s = dataclasses.replace(s, dp_mode="fsdp")
+    return s
+
+
 def lower_one(arch: str, shape_name: str, multi_pod: bool,
               dp_mode: str = "hsdp", attn_override=None, rt_overrides=None,
               donate: bool = False, seq_parallel: bool = True,
-              grad_accum: int = 1):
+              grad_accum: int = 1, strategy: str = ""):
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
-    mesh = make_production_mesh(multi_pod=multi_pod)
-    plan = par.choose_plan(cfg, mesh, shape, dp_mode=dp_mode,
-                           attn_override=attn_override,
-                           seq_parallel=seq_parallel)
+    topo = strategy_lib.pod_topology(pods=2 if multi_pod else 1)
+    strat = resolve_strategy(cfg, shape, topo, strategy, dp_mode,
+                             attn_override, seq_parallel)
+    plan = strat.to_plan(cfg, topo, shape)
+    mesh = plan.mesh
     rt = par.make_runtime(cfg, plan, shape, **(rt_overrides or {}))
 
     key = jax.random.PRNGKey(0)
@@ -70,7 +96,7 @@ def lower_one(arch: str, shape_name: str, multi_pod: bool,
     pshard = par.param_shardings(cfg, plan, pshapes)
     params_sds = _to_dtype_sds(pshapes, pshard, jnp.bfloat16)
 
-    with jax.set_mesh(mesh):
+    with par.use_mesh(mesh):
         if shape.mode == "train":
             batch = specs_lib.train_batch_specs(cfg, shape)
             bshard = par.batch_specs(cfg, plan, batch)
@@ -79,7 +105,10 @@ def lower_one(arch: str, shape_name: str, multi_pod: bool,
             oshard = {"m": pshard, "v": pshard,
                       "step": par.fitted(plan, par.P(), ())}
             opt_sds = _attach(oshapes, oshard)
-            step = make_train_step(cfg, rt, TrainConfig(grad_accum=grad_accum))
+            # the ga<k> spec token wins unless --grad_accum was set explicitly
+            # (train.py applies the same precedence)
+            ga = grad_accum if grad_accum > 1 else strat.grad_accum
+            step = make_train_step(cfg, rt, TrainConfig(grad_accum=ga))
             lowered = jax.jit(step, out_shardings=(pshard, oshard, None),
                               donate_argnums=(0, 1) if donate else ()) \
                 .lower(params_sds, opt_sds, batch_sds)
@@ -111,15 +140,26 @@ def lower_one(arch: str, shape_name: str, multi_pod: bool,
             step = make_serve_step(cfg, rt)
             lowered = jax.jit(step, out_shardings=(None, cshard)) \
                 .lower(params_sds, cache_sds, tok_sds, pos_sds)
-    return cfg, shape, plan, lowered
+    return cfg, shape, strat, plan, lowered
+
+
+def run_label(arch: str, shape_name: str, multi_pod: bool,
+              strategy: str = "", tag: str = ""):
+    """(mesh_name, label) naming one sweep point — also its artifact path,
+    so main()'s skip-if-existing check and run_one()'s writer must agree."""
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    if strategy:
+        mesh_name += f"_{strategy}"
+    label = f"{arch}_{shape_name}_{mesh_name}" + (f"_{tag}" if tag else "")
+    return mesh_name, label
 
 
 def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
             dp_mode: str = "hsdp", attn_override=None, tag: str = "",
             rt_overrides=None, donate: bool = False,
-            seq_parallel: bool = True, grad_accum: int = 1):
-    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
-    label = f"{arch}_{shape_name}_{mesh_name}" + (f"_{tag}" if tag else "")
+            seq_parallel: bool = True, grad_accum: int = 1,
+            strategy: str = ""):
+    mesh_name, label = run_label(arch, shape_name, multi_pod, strategy, tag)
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
     if not supports_shape(cfg, shape):
@@ -132,10 +172,9 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
 
     t0 = time.time()
     try:
-        cfg, shape, plan, lowered = lower_one(arch, shape_name, multi_pod,
-                                              dp_mode, attn_override,
-                                              rt_overrides, donate,
-                                              seq_parallel, grad_accum)
+        cfg, shape, strat, plan, lowered = lower_one(
+            arch, shape_name, multi_pod, dp_mode, attn_override,
+            rt_overrides, donate, seq_parallel, grad_accum, strategy)
         t_lower = time.time() - t0
         t0 = time.time()
         compiled = lowered.compile()
@@ -143,14 +182,19 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
 
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):   # older jax returns [dict]
+            cost = cost[0] if cost else {}
         # trip-count-scaled: while bodies multiplied by known_trip_count
         coll = collective_stats(compiled.as_text())
         n_dev = plan.mesh.devices.size          # chips in THIS mesh
         rec = {
             "arch": arch, "shape": shape_name, "mesh": mesh_name,
-            "status": "ok", "plan": {
+            "status": "ok", "strategy": strat.format(),
+            "strategy_arg": strategy or "legacy-default",
+            "plan": {
                 "attn": plan.attn, "kv_tp": plan.kv_tp, "dp": list(plan.dp),
                 "fsdp": list(plan.fsdp),
+                "mesh": {k: int(v) for k, v in plan.mesh.shape.items()},
                 "decode_cache_axes": list(plan.decode_cache_axes)},
             "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
             "n_devices": n_dev,
@@ -200,6 +244,10 @@ def main():
     ap.add_argument("--shape", default="all")
     ap.add_argument("--multi_pod", action="store_true")
     ap.add_argument("--both_meshes", action="store_true")
+    ap.add_argument("--strategy", default="",
+                    help="'' = legacy pod layout (model axis 16), 'auto' = "
+                         "planner, else a spec string like hsdp_tp4 / "
+                         "fsdp_cp8")
     ap.add_argument("--dp_mode", default="hsdp", choices=["hsdp", "fsdp2d"])
     ap.add_argument("--attn", default=None, choices=[None, "head_tp", "context"])
     ap.add_argument("--tag", default="")
@@ -237,9 +285,7 @@ def main():
     for arch in archs:
         for shape in shapes:
             for mp in meshes:
-                mesh_name = "pod2x16x16" if mp else "pod16x16"
-                label = f"{arch}_{shape}_{mesh_name}" + \
-                    (f"_{args.tag}" if args.tag else "")
+                _, label = run_label(arch, shape, mp, args.strategy, args.tag)
                 path = os.path.join(args.out, label + ".json")
                 if args.skip_existing and os.path.exists(path):
                     with open(path) as f:
@@ -248,7 +294,7 @@ def main():
                             continue
                 rec = run_one(arch, shape, mp, args.out, args.dp_mode,
                               args.attn, args.tag, rt_overrides, args.donate,
-                              not args.no_sp, args.grad_accum)
+                              not args.no_sp, args.grad_accum, args.strategy)
                 n_fail += rec["status"] == "error"
     raise SystemExit(1 if n_fail else 0)
 

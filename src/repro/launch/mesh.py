@@ -1,23 +1,41 @@
-"""Production mesh builders.
+"""Mesh builders, parameterized by topology.
 
-TPU v5e target: one pod = 256 chips as a (16, 16) (data, model) mesh;
-multi-pod = 2 pods = 512 chips with a leading 'pod' axis (DCN-connected).
+The supported path is ``repro.strategy``: a ``Topology`` names the cluster
+and ``Strategy.to_plan`` builds the mesh from it (``strategy.build_mesh``
+underneath) — no hard-coded shapes.  The two legacy entry points below are
+thin shims over that path, kept for callers that predate the strategy API.
 Functions, not module constants: importing this module must never touch
 jax device state.
 """
 from __future__ import annotations
 
-import jax
+from repro.strategy.topology import (Topology, build_mesh, get_topology,
+                                     host_topology, pod_topology)
+
+__all__ = ["Topology", "build_mesh", "get_topology", "host_topology",
+           "pod_topology", "make_production_mesh", "make_host_mesh"]
 
 
-def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
+def make_production_mesh(*, multi_pod: bool = False, model: int = 16):
+    """Deprecated shim — the TPU v5e target via the topology API.
+
+    One pod = 256 chips as (data, model); multi-pod adds a leading 'pod'
+    axis (DCN-connected).  Equivalent to
+    ``build_mesh(pod_topology(pods), model=16, pods=pods)``.
+    """
+    pods = 2 if multi_pod else 1
+    return build_mesh(pod_topology(pods=pods), model=model,
+                      pods=pods if multi_pod else 1)
 
 
 def make_host_mesh(data: int = 1, model: int = 1, pod: int = 0):
-    """Small mesh over however many (fake) devices are present (tests)."""
+    """Deprecated shim — small mesh over local (fake) devices (tests).
+
+    Contract kept from the pre-strategy API: any ``pod >= 1`` adds a
+    leading 'pod' axis (even of size 1), ``pod=0`` omits it.
+    """
     if pod:
+        import jax
         return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
-    return jax.make_mesh((data, model), ("data", "model"))
+    topo = host_topology(n_devices=data * model)
+    return build_mesh(topo, model=model)

@@ -1,6 +1,12 @@
 """Serving driver: batched generation with prefill + KV-cache decode.
 
 ``python -m repro.launch.serve --arch qwen3-0.6b --reduced --n_new 32``
+
+``--strategy`` routes through the unified strategy API: 'auto' asks the
+planner (decode shape, throughput objective), a spec string such as
+``fsdp_tp2`` lowers directly, and '' (default) keeps the single-device
+path.  Sharded serving places params per the plan and wires the Runtime's
+activation constraints, exactly like the dry-run's decode lowering.
 """
 from __future__ import annotations
 
@@ -10,7 +16,9 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.configs import get_config, reduced
+from repro import strategy as strategy_lib
+from repro.configs import ShapeConfig, get_config, reduced
+from repro.core import parallel as par
 from repro.models import Runtime, init_params
 from repro.serve import ServeEngine
 
@@ -23,17 +31,39 @@ def main():
     ap.add_argument("--prompt_len", type=int, default=32)
     ap.add_argument("--n_new", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--strategy", default="",
+                    help="'' = single-device; 'auto' = planner; else a spec "
+                         "string like fsdp_tp2")
+    ap.add_argument("--topology", default="host",
+                    help="host | pod | multipod[<k>]")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
-    rt = Runtime(rwkv_chunk=16, mamba_chunk=32, moe_impl="dense")
+    max_len = args.prompt_len + args.n_new
     key = jax.random.PRNGKey(args.seed)
-    params = init_params(cfg, key)
-    engine = ServeEngine(cfg, params, rt,
-                         max_len=args.prompt_len + args.n_new)
+
+    plan = None
+    if args.strategy:
+        topo = strategy_lib.get_topology(args.topology)
+        shape = ShapeConfig("serve", max_len, args.batch, "decode")
+        strat, planned = strategy_lib.resolve(args.strategy, cfg, topo, shape)
+        plan = strat.to_plan(cfg, topo, shape)
+        print(f"[strategy] {strat.format()} on {topo.name} "
+              f"(mesh {dict(plan.mesh.shape)}, attn={plan.attn})")
+        rt = par.make_runtime(cfg, plan, shape, remat=False,
+                              rwkv_chunk=16, mamba_chunk=32,
+                              moe_impl="dense")
+        params = init_params(cfg, key)
+        pshard = par.param_shardings(
+            cfg, plan, jax.eval_shape(lambda: params))
+        params = jax.device_put(params, pshard)
+    else:
+        rt = Runtime(rwkv_chunk=16, mamba_chunk=32, moe_impl="dense")
+        params = init_params(cfg, key)
+    engine = ServeEngine(cfg, params, rt, max_len=max_len, plan=plan)
 
     prompts = jax.random.randint(key, (args.batch, args.prompt_len),
                                  0, cfg.vocab_size)

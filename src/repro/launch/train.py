@@ -1,21 +1,55 @@
 """Training driver: ``python -m repro.launch.train --arch qwen3-0.6b ...``
 
 Runs real training on whatever devices exist (CPU here; the same code path
-lowers for the production TPU mesh — the mesh shape is the only delta).
+lowers for the production TPU mesh — the topology is the only delta).
+
+Strategy selection goes through the unified API (``repro.strategy``):
+
+  --strategy auto        planner picks the best executable strategy for
+                         (arch, topology, batch) with the calibrated cost
+                         model (throughput objective by default)
+  --strategy hsdp_tp4    explicit spec string, lowered directly
+
+On a CPU host, ``--host_devices`` (default 8) forces that many fake XLA
+host devices so multi-axis strategies exercise the real SPMD path; it is a
+no-op on real accelerators.
 """
 from __future__ import annotations
 
 import argparse
 import os
+import sys
+
+
+def _force_host_devices(argv):
+    """Set XLA host device count BEFORE jax import (CPU-only effect)."""
+    n = "8"
+    for i, a in enumerate(argv):
+        if a == "--host_devices" and i + 1 < len(argv):
+            n = argv[i + 1]
+        elif a.startswith("--host_devices="):
+            n = a.split("=", 1)[1]
+    try:
+        count = int(n)
+    except ValueError:
+        return                    # let argparse report the bad value
+    if count > 0 and "xla_force_host_platform_device_count" not in \
+            os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={count}").strip()
+
+
+if __name__ == "__main__":          # before jax import below
+    _force_host_devices(sys.argv)
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.configs import SHAPES, get_config, reduced, ShapeConfig
+from repro import strategy as strategy_lib
+from repro.configs import ShapeConfig, get_config, reduced
 from repro.core import parallel as par
 from repro.data import Batcher, BinTokenSource, SyntheticSource
-from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.optim import AdamWConfig
 from repro.train.trainer import TrainConfig, train_loop
 
@@ -29,17 +63,23 @@ def main():
     ap.add_argument("--seq_len", type=int, default=512)
     ap.add_argument("--global_batch", type=int, default=8)
     ap.add_argument("--lr", type=float, default=3e-4)
-    ap.add_argument("--grad_accum", type=int, default=1)
+    ap.add_argument("--grad_accum", type=int, default=0,
+                    help="0 -> take it from the strategy spec (ga<k>)")
     ap.add_argument("--data", default="synthetic",
                     help="'synthetic' or a path to a flat uint16 token file")
     ap.add_argument("--ckpt_dir", default="")
     ap.add_argument("--ckpt_every", type=int, default=0)
     ap.add_argument("--log_every", type=int, default=10)
-    ap.add_argument("--mesh", default="host",
-                    choices=["host", "pod", "multipod"],
-                    help="'host' = all local devices as (data,); 'pod'/"
-                         "'multipod' = production meshes (needs real chips)")
-    ap.add_argument("--dp_mode", default="hsdp", choices=["hsdp", "fsdp2d"])
+    ap.add_argument("--topology", "--mesh", dest="topology", default="host",
+                    help="host | pod | multipod[<k>] (pod meshes need real "
+                         "chips)")
+    ap.add_argument("--strategy", default="auto",
+                    help="'auto' (planner) or a spec string like hsdp_tp4 / "
+                         "fsdp_cp2 / ddp")
+    ap.add_argument("--objective", default="wps",
+                    choices=sorted(strategy_lib.OBJECTIVES))
+    ap.add_argument("--host_devices", type=int, default=8,
+                    help="fake XLA host devices on CPU (0 = leave alone)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -47,13 +87,21 @@ def main():
     if args.reduced:
         cfg = reduced(cfg)
 
-    if args.mesh == "host":
-        mesh = make_host_mesh(data=len(jax.devices()), model=1)
-    else:
-        mesh = make_production_mesh(multi_pod=args.mesh == "multipod")
-
+    topo = strategy_lib.get_topology(args.topology)
     shape = ShapeConfig("cli", args.seq_len, args.global_batch, "train")
-    plan = par.choose_plan(cfg, mesh, shape, dp_mode=args.dp_mode)
+    strat, planned = strategy_lib.resolve(args.strategy, cfg, topo, shape,
+                                          objective=args.objective)
+    plan = strat.to_plan(cfg, topo, shape)
+    if planned is not None:
+        r = planned.report
+        print(f"[planner] chose {strat.format()} on {topo.name} "
+              f"({topo.n_devices}x {topo.hardware}): predicted "
+              f"{r.wps:,.0f} tok/s, mfu {r.mfu:.3f}, "
+              f"{r.memory_per_device / 2**30:.2f} GiB/dev")
+    else:
+        print(f"[strategy] {strat.format()} on {topo.name} "
+              f"(mesh {dict(plan.mesh.shape)})")
+
     rt = par.make_runtime(cfg, plan, shape,
                           param_dtype=jnp.float32, compute_dtype=jnp.float32,
                           remat=False, rwkv_chunk=32, mamba_chunk=64,
@@ -66,11 +114,12 @@ def main():
         src = BinTokenSource(args.data)
     batches = Batcher(src, args.seq_len, args.global_batch)
 
+    grad_accum = args.grad_accum or strat.grad_accum
     tc = TrainConfig(steps=args.steps, warmup=max(args.steps // 20, 1),
                      log_every=args.log_every, ckpt_every=args.ckpt_every,
                      ckpt_dir=args.ckpt_dir or os.path.join("results", "ckpt",
                                                             cfg.name),
-                     grad_accum=args.grad_accum,
+                     grad_accum=grad_accum,
                      opt=AdamWConfig(lr=args.lr))
     params, opt_state, history = train_loop(
         cfg, plan, rt, tc, batches, key=jax.random.PRNGKey(args.seed))

@@ -1,0 +1,24 @@
+"""Unified executable-strategy API (see descriptor.py for the design).
+
+    from repro import strategy
+
+    s = strategy.parse("hsdp_tp4")            # or strategy.Strategy(tp=4)
+    topo = strategy.host_topology()
+    plan = s.to_plan(cfg, topo, shape)        # executable Mesh + specs
+    report = strategy.evaluate(cfg, s, topo, shape)   # analytic price
+    ranked = strategy.search(cfg, topo, shape)        # planner
+"""
+from repro.strategy.descriptor import (DP_MODES, Strategy, StrategyError,
+                                       format_spec, parse)
+from repro.strategy.planner import (OBJECTIVES, PlannedStrategy, best,
+                                    candidates, evaluate, pareto_front,
+                                    resolve, search)
+from repro.strategy.topology import (Topology, build_mesh, get_topology,
+                                     host_topology, pod_topology)
+
+__all__ = [
+    "DP_MODES", "OBJECTIVES", "PlannedStrategy", "Strategy", "StrategyError",
+    "Topology", "best", "build_mesh", "candidates", "evaluate", "format_spec",
+    "get_topology", "host_topology", "parse", "pareto_front", "pod_topology",
+    "resolve", "search",
+]

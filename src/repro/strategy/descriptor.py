@@ -1,0 +1,282 @@
+"""The executable-strategy descriptor: one object that predicts AND runs.
+
+Historically the repo had two disconnected strategy representations:
+``costmodel.Strategy`` (analytical tp/pp/cp degrees) and ``ParallelPlan``
+(executable mesh + PartitionSpecs).  The cost model could rank strategies
+the SPMD path cannot express and vice versa.  ``Strategy`` here is the
+single source of truth:
+
+  * ``to_plan(cfg, topology, shape)``  lowers to ``Mesh + ParallelPlan``;
+  * ``to_cost_strategy(cfg, topology)`` feeds ``costmodel.step_time`` with
+    collective group sizes derived from the *same* lowering rules;
+  * ``parse`` / ``format`` round-trip compact spec strings
+    (``"hsdp_tp4"``, ``"fsdp_cp8_ga2"``) for CLIs and sweep artifacts.
+
+Semantics of the degrees (mirrors DESIGN.md §4 / core/parallel.py):
+
+  * ``tp``  shards attention heads + FFN hidden on the mesh 'model' axis
+            (Megatron).  Falls back to context mode when head counts do
+            not divide — the spec still *lowers*, and the cost model is
+            told the truth (it charges ring-KV, not TP all-reduces).
+  * ``cp``  shards the sequence on the 'model' axis (ring/gathered-KV
+            attention).  tp and cp share the single model axis, so at most
+            one may exceed 1.
+  * ``pp``  is analytic-only for now (GPipe bubble in the cost model); the
+            SPMD lowering rejects pp > 1 until core/pipeline.py is wired
+            into the mesh path.
+  * ``dp_mode``  'hsdp' shards params inside an island and replicates
+            across islands (adds a 'pod' axis when the topology spans
+            more than one); 'fsdp' shards over the full data axis;
+            'ddp' replicates (ZeRO-0).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional, Tuple
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core import costmodel as cm
+from repro.core import parallel as par
+from repro.strategy.topology import Topology, build_mesh
+
+DP_MODES = ("hsdp", "fsdp", "ddp")
+_ATTN_TOKENS = {"headtp": "head_tp", "ctx": "context"}
+_ATTN_FORMAT = {v: k for k, v in _ATTN_TOKENS.items()}
+_INT_TOKEN = re.compile(r"^(tp|cp|pp|z|mb|ga)(\d+)$")
+
+
+class StrategyError(ValueError):
+    """A spec that cannot be parsed, or a strategy that cannot lower."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Strategy:
+    """Backend-agnostic parallelization strategy descriptor."""
+    dp_mode: str = "hsdp"            # 'hsdp' | 'fsdp' | 'ddp'
+    tp: int = 1                      # tensor-parallel degree (model axis)
+    cp: int = 1                      # context-parallel degree (model axis)
+    pp: int = 1                      # pipeline degree (cost model only)
+    zero_stage: Optional[int] = None  # None -> 0 for ddp, 3 otherwise
+    microbatches: int = 1            # pipeline microbatches per step
+    grad_accum: int = 1
+    attn: Optional[str] = None       # None=auto | 'head_tp' | 'context'
+    seq_parallel: bool = True        # Megatron-SP residual stream
+
+    def __post_init__(self):
+        if self.dp_mode not in DP_MODES:
+            raise StrategyError(f"dp_mode {self.dp_mode!r} not in {DP_MODES}")
+        for k in ("tp", "cp", "pp", "microbatches", "grad_accum"):
+            if getattr(self, k) < 1:
+                raise StrategyError(f"{k} must be >= 1, got {getattr(self, k)}")
+        if self.attn not in (None, "head_tp", "context"):
+            raise StrategyError(f"attn {self.attn!r} not in "
+                                "(None, 'head_tp', 'context')")
+        if self.zero_stage not in (None, 0, 2, 3):
+            # ZeRO-1 (opt-state-only sharding) is expressible by neither the
+            # SPMD lowering nor the cost model — rejecting it keeps the
+            # predict-and-run contract honest
+            raise StrategyError(
+                f"zero_stage {self.zero_stage!r} not in (None, 0, 2, 3)")
+
+    # ---- derived -----------------------------------------------------------
+
+    @property
+    def zero(self) -> int:
+        if self.zero_stage is not None:
+            return self.zero_stage
+        return 0 if self.dp_mode == "ddp" else 3
+
+    @property
+    def model_axis(self) -> int:
+        """Size of the SPMD 'model' mesh axis (tp and cp share it)."""
+        return self.tp * self.cp
+
+    @property
+    def model_parallel(self) -> int:
+        return self.tp * self.cp * self.pp
+
+    def dp_degree(self, topology: Topology) -> int:
+        return topology.n_devices // self.model_parallel
+
+    def n_pods(self, topology: Topology) -> int:
+        """Leading 'pod' axis size: HSDP across islands, else folded in."""
+        if self.dp_mode != "hsdp" or topology.n_devices <= topology.island:
+            return 1
+        return topology.n_islands
+
+    def resolved_attn(self, cfg: ModelConfig) -> str:
+        """Attention mode the lowering will actually use."""
+        if self.cp > 1:
+            return "context"
+        if self.attn is not None:
+            return self.attn
+        if self.tp == 1:
+            return "head_tp"
+        if cfg.mixer != "attn" and cfg.attn_every <= 1:
+            return "head_tp"          # no attention layers at all
+        return "head_tp" if cfg.n_heads % self.tp == 0 else "context"
+
+    # ---- validation --------------------------------------------------------
+
+    def check(self, topology: Topology) -> None:
+        """Raise StrategyError if this strategy cannot lower on topology."""
+        n = topology.n_devices
+        if self.tp > 1 and self.cp > 1:
+            raise StrategyError(
+                "tp and cp share the single 'model' mesh axis; at most one "
+                f"may exceed 1 (got tp={self.tp}, cp={self.cp})")
+        if self.pp > 1:
+            raise StrategyError(
+                "pipeline parallelism is analytic-only (cost model); the "
+                "SPMD lowering does not express pp > 1 yet")
+        if n % self.model_axis:
+            raise StrategyError(
+                f"model axis {self.model_axis} does not divide "
+                f"{n} devices")
+        pods = self.n_pods(topology)
+        if pods > 1 and n % (pods * self.model_axis):
+            raise StrategyError(
+                f"HSDP pods={pods} x model={self.model_axis} does not "
+                f"divide {n} devices")
+        if self.dp_degree(topology) < 1:
+            raise StrategyError(
+                f"model_parallel={self.model_parallel} exceeds "
+                f"{n} devices")
+
+    def lowerable(self, topology: Topology) -> bool:
+        try:
+            self.check(topology)
+            return True
+        except StrategyError:
+            return False
+
+    # ---- lowering: SPMD ----------------------------------------------------
+
+    def to_plan(self, cfg: ModelConfig, topology: Topology, shape: ShapeConfig,
+                abstract: bool = False) -> par.ParallelPlan:
+        """Lower to an executable ``ParallelPlan`` on this topology's mesh.
+
+        ``abstract=True`` builds an ``AbstractMesh`` (group-size /
+        PartitionSpec analysis without devices).
+        """
+        self.check(topology)
+        pods = self.n_pods(topology)
+        mesh = build_mesh(topology, model=self.model_axis, pods=pods,
+                          abstract=abstract)
+        attn = self.resolved_attn(cfg)
+        has_pod = pods > 1
+        dp: Tuple[str, ...] = ("pod", "data") if has_pod else ("data",)
+        if self.dp_mode == "ddp" or self.zero == 0:
+            fsdp: Tuple[str, ...] = ()
+        elif has_pod:                 # hsdp: shard inside the island only
+            fsdp = ("data",)
+        else:
+            fsdp = dp
+        kv_tp = attn == "head_tp" and cfg.kv_heads % self.model_axis == 0
+
+        # decode cache: shard sequence over model, and over data too when
+        # the batch cannot occupy the data axis (long-context, batch=1)
+        data_size = topology.n_devices // self.model_axis
+        if shape.mode == "decode" and shape.global_batch < data_size:
+            cache_axes = (("pod", "data", "model") if has_pod
+                          else ("data", "model"))
+        else:
+            cache_axes = ("model",)
+
+        return par.ParallelPlan(
+            mesh=mesh, dp=dp, fsdp=fsdp, tp="model", attn=attn, kv_tp=kv_tp,
+            shape_mode=shape.mode, decode_cache_axes=cache_axes,
+            seq_parallel_residuals=self.seq_parallel)
+
+    # ---- lowering: cost model ----------------------------------------------
+
+    def to_cost_strategy(self, cfg: ModelConfig,
+                         topology: Topology) -> cm.Strategy:
+        """The analytic view, with group sizes matching ``to_plan``.
+
+        When the resolved attention mode is 'context', the whole model axis
+        moves sequence, not heads — the cost model is charged ring-KV
+        context parallelism of degree tp*cp, not TP all-reduces.  HSDP
+        topologies additionally pin the FSDP collective group to the
+        island ('data' axis), with the cross-island gradient all-reduce
+        charged separately by ``step_time``.
+        """
+        attn = self.resolved_attn(cfg)
+        if attn == "context":
+            tp_c, cp_c = 1, self.model_axis
+        else:
+            tp_c, cp_c = self.model_axis, 1
+        pods = self.n_pods(topology)
+        dp = self.dp_degree(topology)
+        if pods > 1 and dp % pods:
+            raise StrategyError(
+                f"HSDP dp={dp} does not split across {pods} islands; the "
+                "descriptor cannot lower in this regime, so it has no "
+                "coherent analytic price either")
+        fsdp_group = dp // pods if pods > 1 else 0
+        return cm.Strategy(
+            n_devices=topology.n_devices, tp=tp_c, pp=self.pp, cp=cp_c,
+            zero_stage=self.zero,
+            microbatches=max(self.microbatches, self.pp),
+            fsdp_group=fsdp_group)
+
+    # ---- spec strings ------------------------------------------------------
+
+    def format(self) -> str:
+        """Canonical compact spec string; ``parse(format(s)) == s``."""
+        parts = [self.dp_mode]
+        for key, val in (("tp", self.tp), ("cp", self.cp), ("pp", self.pp)):
+            if val > 1:
+                parts.append(f"{key}{val}")
+        if self.zero_stage is not None:
+            parts.append(f"z{self.zero_stage}")
+        if self.microbatches > 1:
+            parts.append(f"mb{self.microbatches}")
+        if self.grad_accum > 1:
+            parts.append(f"ga{self.grad_accum}")
+        if self.attn is not None:
+            parts.append(_ATTN_FORMAT[self.attn])
+        if not self.seq_parallel:
+            parts.append("nosp")
+        return "_".join(parts)
+
+    def __str__(self) -> str:
+        return self.format()
+
+
+def parse(spec: str) -> Strategy:
+    """Parse a compact spec string into a ``Strategy``.
+
+    Grammar: ``<dp_mode>[_tp<k>][_cp<k>][_pp<k>][_z<stage>][_mb<m>]
+    [_ga<g>][_headtp|_ctx][_nosp]`` with dp_mode in {hsdp, fsdp, ddp}.
+    Examples: ``hsdp_tp4``, ``fsdp_cp8``, ``ddp``, ``hsdp_tp4_ga2_nosp``.
+    """
+    tokens = spec.strip().lower().split("_")
+    if not tokens or tokens[0] not in DP_MODES:
+        raise StrategyError(
+            f"spec {spec!r} must start with one of {DP_MODES}")
+    kw = {"dp_mode": tokens[0]}
+    names = {"tp": "tp", "cp": "cp", "pp": "pp", "z": "zero_stage",
+             "mb": "microbatches", "ga": "grad_accum"}
+    for tok in tokens[1:]:
+        if tok == "nosp":
+            kw["seq_parallel"] = False
+            continue
+        if tok in _ATTN_TOKENS:
+            kw["attn"] = _ATTN_TOKENS[tok]
+            continue
+        m = _INT_TOKEN.match(tok)
+        if not m:
+            raise StrategyError(
+                f"bad token {tok!r} in spec {spec!r} (expected "
+                "tp<k>/cp<k>/pp<k>/z<s>/mb<m>/ga<g>/headtp/ctx/nosp)")
+        field = names[m.group(1)]
+        if field in kw:
+            raise StrategyError(f"duplicate token {tok!r} in spec {spec!r}")
+        kw[field] = int(m.group(2))
+    return Strategy(**kw)
+
+
+def format_spec(strategy: Strategy) -> str:
+    return strategy.format()

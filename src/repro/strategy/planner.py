@@ -1,0 +1,188 @@
+"""Cost-model-driven strategy planner.
+
+``search(cfg, topology, shape)`` sweeps the executable-strategy space
+(dp_mode x tp x cp x pp x ZeRO stage), prices every candidate with the
+calibrated analytic model (``costmodel.step_time``), and returns ranked
+``PlannedStrategy`` records whose descriptors lower to real plans via
+``Strategy.to_plan``.  This replaces the old ``costmodel.sweep_strategies``
+/ ``best_strategy`` pair (kept as deprecated shims) and — unlike them —
+sweeps context-parallel degrees.
+
+Objectives: 'wps' (tokens/s, default), 'mfu', 'tokens_per_joule',
+'memory' (min bytes/device).  ``pareto_front`` keeps the strategies that
+are not dominated on a set of objectives (e.g. throughput vs energy).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core import costmodel as cm
+from repro.strategy.descriptor import Strategy, StrategyError, parse
+from repro.strategy.topology import Topology
+
+OBJECTIVES: Dict[str, Callable[[cm.StepReport], float]] = {
+    "wps": lambda r: r.wps,
+    "throughput": lambda r: r.wps,
+    "mfu": lambda r: r.mfu,
+    "tokens_per_joule": lambda r: r.tokens_per_joule,
+    "memory": lambda r: -r.memory_per_device,
+}
+
+
+@dataclasses.dataclass
+class PlannedStrategy:
+    """One ranked point: the descriptor, its spec string, and the price."""
+    strategy: Strategy
+    report: cm.StepReport
+    score: float
+    lowers: bool                     # Strategy.check passed on the topology
+
+    @property
+    def spec(self) -> str:
+        return self.strategy.format()
+
+    def row(self) -> Dict:
+        d = self.report.row()
+        d.update(spec=self.spec, score=self.score, lowers=self.lowers)
+        return d
+
+
+def evaluate(cfg: ModelConfig, strategy: Strategy, topology: Topology,
+             shape: ShapeConfig, train: Optional[bool] = None,
+             remat: bool = False) -> cm.StepReport:
+    """Price one strategy on one topology with the analytic model."""
+    cost = strategy.to_cost_strategy(cfg, topology)
+    return cm.step_time(cfg, topology.hw, cost, shape.global_batch,
+                        shape.seq_len, hbm_capacity=topology.hbm,
+                        train=shape.mode == "train" if train is None
+                        else train, remat=remat)
+
+
+def candidates(topology: Topology, global_batch: int,
+               dp_modes: Sequence[str] = ("hsdp",),
+               tps: Iterable[int] = (1, 2, 4, 8, 16),
+               cps: Iterable[int] = (1, 2, 4, 8),
+               pps: Iterable[int] = (1,),
+               zero_stages: Iterable[Optional[int]] = (None,),
+               microbatches: int = 8) -> List[Strategy]:
+    """Enumerate distinct strategy descriptors viable on ``topology``.
+
+    tp and cp share the model axis, so candidates use at most one of them
+    (the tp x cp cross product would double-count the same mesh).  The
+    batch filters mirror the original sweep: dp must divide the global
+    batch (or be smaller than it).
+    """
+    n = topology.n_devices
+    out: List[Strategy] = []
+    seen = set()
+    for dp_mode in dp_modes:
+        # below one island hsdp == fsdp: keep the canonical name
+        mode = ("fsdp" if dp_mode == "hsdp" and n <= topology.island
+                else dp_mode)
+        for zero in zero_stages:
+            for tp, cp in [(t, 1) for t in tps] + [(1, c) for c in cps
+                                                   if c > 1]:
+                for pp in pps:
+                    model = tp * cp * pp
+                    if model > n or n % model:
+                        continue
+                    dp = n // model
+                    if dp > global_batch:
+                        continue
+                    if global_batch % dp and global_batch >= dp:
+                        continue
+                    s = Strategy(dp_mode=mode, tp=tp, cp=cp, pp=pp,
+                                 zero_stage=zero,
+                                 microbatches=max(microbatches, pp)
+                                 if pp > 1 else 1)
+                    if s.format() in seen:
+                        continue
+                    seen.add(s.format())
+                    out.append(s)
+    return out
+
+
+def search(cfg: ModelConfig, topology: Topology, shape: ShapeConfig,
+           objective: str = "wps", require_fits: bool = True,
+           require_lowerable: bool = True,
+           dp_modes: Sequence[str] = ("hsdp",),
+           tps: Iterable[int] = (1, 2, 4, 8, 16),
+           cps: Iterable[int] = (1, 2, 4, 8),
+           pps: Iterable[int] = (1,),
+           zero_stages: Iterable[Optional[int]] = (None,),
+           microbatches: int = 8,
+           top: Optional[int] = None) -> List[PlannedStrategy]:
+    """Rank executable strategies for (model, topology, shape).
+
+    Returns PlannedStrategy records sorted by ``objective`` (best first).
+    ``require_lowerable`` keeps only descriptors whose ``to_plan``
+    succeeds on the topology; ``require_fits`` keeps only strategies whose
+    predicted memory fits per-chip HBM — if none fit, the non-fitting
+    ranking is returned anyway (callers can see *why* via .report.fits).
+    """
+    if objective not in OBJECTIVES:
+        raise StrategyError(
+            f"objective {objective!r} not in {sorted(OBJECTIVES)}")
+    score = OBJECTIVES[objective]
+    cands = candidates(topology, shape.global_batch, dp_modes=dp_modes,
+                       tps=tps, cps=cps, pps=pps, zero_stages=zero_stages,
+                       microbatches=microbatches)
+    out: List[PlannedStrategy] = []
+    for s in cands:
+        lowers = s.lowerable(topology)
+        if require_lowerable and not lowers:
+            continue
+        try:
+            r = evaluate(cfg, s, topology, shape)
+        except StrategyError:     # unlowerable AND unpriceable (hsdp split)
+            continue
+        out.append(PlannedStrategy(s, r, float(score(r)), lowers))
+    if require_fits and any(p.report.fits for p in out):
+        out = [p for p in out if p.report.fits]
+    out.sort(key=lambda p: -p.score)
+    return out[:top] if top else out
+
+
+def best(cfg: ModelConfig, topology: Topology, shape: ShapeConfig,
+         **kw) -> Optional[PlannedStrategy]:
+    ranked = search(cfg, topology, shape, **kw)
+    return ranked[0] if ranked else None
+
+
+def pareto_front(planned: Sequence[PlannedStrategy],
+                 objectives: Sequence[str] = ("wps", "tokens_per_joule"),
+                 ) -> List[PlannedStrategy]:
+    """Strategies not dominated on all of ``objectives`` simultaneously."""
+    fns = [OBJECTIVES[o] for o in objectives]
+    pts = [(p, tuple(f(p.report) for f in fns)) for p in planned]
+    front = []
+    for p, v in pts:
+        dominated = any(all(w[i] >= v[i] for i in range(len(v)))
+                        and any(w[i] > v[i] for i in range(len(v)))
+                        for q, w in pts if q is not p)
+        if not dominated:
+            front.append(p)
+    return front
+
+
+def resolve(spec: str, cfg: ModelConfig, topology: Topology,
+            shape: ShapeConfig, objective: str = "wps",
+            **search_kw) -> Tuple[Strategy, Optional[PlannedStrategy]]:
+    """CLI entry: '--strategy auto' plans, anything else parses.
+
+    Returns (strategy, planned) — ``planned`` carries the cost report when
+    the planner chose (spec == 'auto') or None for an explicit spec.
+    """
+    if spec == "auto":
+        planned = best(cfg, topology, shape, objective=objective, **search_kw)
+        if planned is None:
+            raise StrategyError(
+                f"planner found no viable strategy for {cfg.name} on "
+                f"{topology.name} ({topology.n_devices} devices, "
+                f"global_batch={shape.global_batch})")
+        return planned.strategy, planned
+    s = parse(spec)
+    s.check(topology)
+    return s, None

@@ -97,7 +97,7 @@ def train_loop(cfg: ModelConfig, plan: par.ParallelPlan, rt: Runtime,
     from repro.checkpointing import save_checkpoint
 
     key = key if key is not None else jax.random.PRNGKey(0)
-    with jax.set_mesh(plan.mesh):
+    with par.use_mesh(plan.mesh):
         params, opt_state, pshard, oshard = shard_train_state(cfg, plan, key, rt)
         step_fn = make_train_step(cfg, rt, tc)
         first = next(iter(batches))

@@ -9,6 +9,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config, reduced
+from repro.core.parallel import use_mesh
 from repro.core.pipeline import bubble_fraction, make_pipelined_block_fn, pipeline_apply
 from repro.models.layers import Runtime
 from repro.models.transformer import _apply_layer, _init_layer, _sig, _tree_stack
@@ -38,7 +39,7 @@ def main():
             h, _, _ = _apply_layer(cfg, _sig(cfg, 0), lp, h, None, rt)
         return h.reshape(M, mb, S, d)
 
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         out_p = jax.jit(pipelined)(stacked, x)
     out_s = sequential(layers, x)
     err = float(jnp.max(jnp.abs(out_p - out_s)))
@@ -52,7 +53,7 @@ def main():
     def loss_s(layers):
         return jnp.sum(sequential(layers, x) ** 2)
 
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         g_p = jax.jit(jax.grad(loss_p))(stacked)
     g_s = jax.grad(loss_s)(layers)
     g_s_stacked = {"layers": _tree_stack([_tree_stack([l]) for l in g_s])}

@@ -52,7 +52,7 @@ def check_train(arch: str, attn_override=None):
 
     # sharded
     pshard = par.param_shardings(cfg, plan, jax.eval_shape(lambda: params))
-    with jax.set_mesh(mesh):
+    with par.use_mesh(mesh):
         params_s = jax.device_put(params, pshard)
         opt_s = jax.device_put(init_opt_state(params),
                                {"m": pshard, "v": pshard,
@@ -95,7 +95,7 @@ def check_decode(arch: str):
     logits0, _ = tfm.decode_step(cfg, params, cache0, tokens[:, S0:],
                                  jnp.asarray(S0, jnp.int32), rt0)
 
-    with jax.set_mesh(mesh):
+    with par.use_mesh(mesh):
         pshard = par.param_shardings(cfg, plan, jax.eval_shape(lambda: params))
         params_s = jax.device_put(params, pshard)
         cshapes = jax.eval_shape(lambda: cache0)

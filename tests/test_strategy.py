@@ -1,0 +1,252 @@
+"""Unified strategy API tests (ISSUE 1): spec round-trips, cost-model /
+SPMD-lowering group-size agreement, and planner search contracts.
+
+Group-size agreement uses AbstractMesh lowering (no devices needed), so
+the 512-chip pod topology is exercised on any host; search-lowers tests
+run on the real host mesh (however many devices pytest sees).
+"""
+import dataclasses
+
+import jax
+import pytest
+
+from repro import strategy as strategy_lib
+from repro.configs import SHAPES, get_config, reduced
+from repro.configs.base import ShapeConfig
+from repro.configs.llama2 import LLAMA2_7B
+from repro.core import costmodel as cm
+from repro.core import parallel as par
+from repro.strategy import (Strategy, StrategyError, Topology, parse,
+                            pareto_front, search)
+
+TRAIN = ShapeConfig("t", 4096, 256, "train")
+POD2 = strategy_lib.pod_topology(pods=2)
+POD1 = strategy_lib.pod_topology(pods=1)
+
+
+# ---------------------------------------------------------------------------
+# spec strings
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("s", [
+    Strategy(),
+    Strategy(dp_mode="fsdp", tp=4),
+    Strategy(dp_mode="hsdp", cp=8),
+    Strategy(dp_mode="ddp"),
+    Strategy(dp_mode="fsdp", tp=2, zero_stage=2, grad_accum=4),
+    Strategy(dp_mode="hsdp", tp=4, microbatches=8, seq_parallel=False),
+    Strategy(dp_mode="fsdp", pp=4, microbatches=16),
+    Strategy(dp_mode="fsdp", tp=2, attn="context"),
+    Strategy(dp_mode="hsdp", tp=8, attn="head_tp", zero_stage=3),
+])
+def test_spec_round_trip(s):
+    assert parse(s.format()) == s
+
+
+def test_spec_defaults_and_aliases():
+    assert parse("hsdp_tp4_cp1") == parse("hsdp_tp4")
+    assert parse("hsdp") == Strategy()
+    assert parse("fsdp_cp8").cp == 8
+    assert parse("ddp").zero == 0
+    assert parse("hsdp_tp4").zero == 3
+    assert parse("fsdp_tp2_ctx").attn == "context"
+    assert not parse("hsdp_nosp").seq_parallel
+
+
+@pytest.mark.parametrize("bad", ["", "zorp_tp2", "hsdp_tp", "hsdp_xp4",
+                                 "hsdp_tp4_tp8", "tp4"])
+def test_spec_parse_rejects(bad):
+    with pytest.raises(StrategyError):
+        parse(bad)
+
+
+def test_descriptor_validation():
+    with pytest.raises(StrategyError):
+        Strategy(tp=0)
+    with pytest.raises(StrategyError):
+        Strategy(dp_mode="zorp")
+    # tp and cp share the model axis
+    with pytest.raises(StrategyError):
+        Strategy(tp=2, cp=2).check(POD1)
+    # pipeline is analytic-only
+    with pytest.raises(StrategyError):
+        Strategy(pp=2).check(POD1)
+    assert not Strategy(tp=5).lowerable(POD1)       # 5 does not divide 256
+    assert Strategy(tp=4).lowerable(POD1)
+
+
+# ---------------------------------------------------------------------------
+# cost model <-> SPMD lowering agreement (the acceptance criterion)
+# ---------------------------------------------------------------------------
+
+def _agreement(cfg, topo, shape=TRAIN, **search_kw):
+    ranked = search(cfg, topo, shape, require_fits=False, **search_kw)
+    assert ranked, "planner returned no strategies"
+    for p in ranked:
+        s = p.strategy
+        plan = s.to_plan(cfg, topo, shape, abstract=True)
+        cost = s.to_cost_strategy(cfg, topo)
+        # data-parallel group: batch axes of the mesh vs analytic dp
+        assert plan.axis_size(plan.dp) == cost.dp, s.format()
+        # model-parallel group: the mesh model axis vs tp*cp charged
+        assert plan.tp_size == cost.tp * cost.cp, s.format()
+        # FSDP collective group: the axes params shard over vs the group
+        # the cost model charges AllGather/ReduceScatter for
+        fsdp_size = plan.axis_size(plan.fsdp)
+        charged = cost.fsdp_n if cost.zero_stage >= 2 else 1
+        assert max(fsdp_size, 1) == max(charged, 1), s.format()
+        # and the cost report in the ranking priced this exact strategy
+        assert p.report.strategy == cost, s.format()
+
+
+def test_groups_agree_llama_pod():
+    _agreement(LLAMA2_7B, POD1, cps=(1, 2, 4, 8), tps=(1, 2, 4, 8, 16))
+
+
+def test_groups_agree_llama_multipod_hsdp():
+    # pods=2 exercises the 'pod' axis: dp spans (pod, data), fsdp only data
+    _agreement(LLAMA2_7B, POD2, dp_modes=("hsdp", "fsdp"),
+               cps=(1, 2, 4), tps=(1, 4, 16))
+
+
+def test_groups_agree_cp_gt_1_explicit():
+    for spec in ("fsdp_cp2", "fsdp_cp4", "hsdp_cp8"):
+        s = parse(spec)
+        plan = s.to_plan(LLAMA2_7B, POD2, TRAIN, abstract=True)
+        cost = s.to_cost_strategy(LLAMA2_7B, POD2)
+        assert plan.attn == "context"
+        assert cost.cp == s.cp and cost.tp == 1
+        assert plan.tp_size == cost.cp
+        assert plan.axis_size(plan.dp) == cost.dp
+
+
+def test_context_fallback_charged_as_cp():
+    """tp that can't shard heads lowers as context — and is priced as cp."""
+    cfg = get_config("rwkv6-1.6b")
+    hybrid = dataclasses.replace(cfg, attn_every=2)  # attention every 2nd
+    # pick a tp that divides devices but not heads
+    tp = 16
+    while hybrid.n_heads % tp == 0:
+        tp *= 2
+    s = Strategy(dp_mode="fsdp", tp=tp)
+    if not s.lowerable(POD1):
+        pytest.skip("no viable non-dividing tp on this topology")
+    assert s.resolved_attn(hybrid) == "context"
+    cost = s.to_cost_strategy(hybrid, POD1)
+    assert cost.cp == tp and cost.tp == 1
+
+
+def test_hsdp_charges_island_group_and_cross_pod_ar():
+    s = parse("hsdp_tp4")
+    cost = s.to_cost_strategy(LLAMA2_7B, POD2)
+    assert cost.fsdp_n == cost.dp // 2          # shard group inside the pod
+    r = cm.step_time(LLAMA2_7B, POD2.hw, cost, 256, 4096,
+                     hbm_capacity=POD2.hbm)
+    assert r.comm_breakdown["hsdp_ar"] > 0      # cross-pod grad all-reduce
+    fsdp_cost = parse("fsdp_tp4").to_cost_strategy(LLAMA2_7B, POD2)
+    assert fsdp_cost.fsdp_n == fsdp_cost.dp
+    r2 = cm.step_time(LLAMA2_7B, POD2.hw, fsdp_cost, 256, 4096,
+                      hbm_capacity=POD2.hbm)
+    assert r2.comm_breakdown["hsdp_ar"] == 0
+
+
+# ---------------------------------------------------------------------------
+# planner
+# ---------------------------------------------------------------------------
+
+def test_search_returns_lowerable_plans_on_host_mesh():
+    """Every ranked strategy must actually lower on the host topology."""
+    topo = strategy_lib.host_topology()
+    cfg = reduced(get_config("qwen3-0.6b"))
+    shape = ShapeConfig("host", 64, max(8, topo.n_devices), "train")
+    ranked = search(cfg, topo, shape, cps=(1, 2, 4), tps=(1, 2, 4, 8))
+    assert ranked
+    for p in ranked:
+        assert p.lowers
+        plan = p.strategy.to_plan(cfg, topo, shape)   # real mesh, must build
+        assert plan.mesh.devices.size == topo.n_devices
+        # params of the reduced model shard without error
+        pshapes = jax.eval_shape(
+            lambda: __import__("repro.models.transformer",
+                               fromlist=["init_params"]).init_params(
+                                   cfg, jax.random.PRNGKey(0)))
+        par.param_shardings(cfg, plan, pshapes)
+
+
+def test_search_rank_and_objectives():
+    ranked = search(LLAMA2_7B, POD1, TRAIN, cps=(1, 2, 4))
+    scores = [p.score for p in ranked]
+    assert scores == sorted(scores, reverse=True)
+    assert all(p.report.fits for p in ranked)    # fits-filter applied
+    by_energy = search(LLAMA2_7B, POD1, TRAIN, objective="tokens_per_joule")
+    assert by_energy[0].report.tokens_per_joule >= \
+        by_energy[-1].report.tokens_per_joule
+    with pytest.raises(StrategyError):
+        search(LLAMA2_7B, POD1, TRAIN, objective="vibes")
+
+
+def test_search_sweeps_cp_degrees():
+    ranked = search(LLAMA2_7B, POD1, TRAIN, cps=(1, 2, 4, 8),
+                    require_fits=False)
+    assert any(p.strategy.cp > 1 for p in ranked)
+
+
+def test_pareto_front_subset_and_contains_best():
+    ranked = search(LLAMA2_7B, POD1, TRAIN, require_fits=False)
+    front = pareto_front(ranked, objectives=("wps", "tokens_per_joule"))
+    specs = {p.spec for p in ranked}
+    assert front and {p.spec for p in front} <= specs
+    assert ranked[0].spec in {p.spec for p in front}  # wps-best not dominated
+
+
+def test_resolve_auto_and_spec():
+    s, planned = strategy_lib.resolve("auto", LLAMA2_7B, POD1, TRAIN)
+    assert planned is not None and planned.strategy == s
+    s2, planned2 = strategy_lib.resolve("hsdp_tp4", LLAMA2_7B, POD1, TRAIN)
+    assert planned2 is None and s2.tp == 4
+    with pytest.raises(StrategyError):
+        strategy_lib.resolve("hsdp_tp5", LLAMA2_7B, POD1, TRAIN)
+
+
+def test_deprecated_sweep_shim_matches_planner():
+    """costmodel.sweep_strategies now delegates to the planner."""
+    reports = cm.sweep_strategies(LLAMA2_7B, cm.H100, 256, 512, 4096,
+                                  zero_stage=2)
+    assert reports and all(isinstance(r, cm.StepReport) for r in reports)
+    best = cm.best_strategy(reports, require_fits=False)
+    topo = Topology("H100", 256, island=8, hardware="H100", hbm=80e9)
+    shape = ShapeConfig("s", 4096, 512, "train")
+    ranked = search(LLAMA2_7B, topo, shape, dp_modes=("fsdp",),
+                    zero_stages=(2,), pps=(1, 2, 4, 8, 16),
+                    cps=(1,), require_fits=False, require_lowerable=False)
+    assert best.wps == pytest.approx(ranked[0].report.wps)
+
+
+# ---------------------------------------------------------------------------
+# topology / mesh building
+# ---------------------------------------------------------------------------
+
+def test_build_mesh_topology_parameterized():
+    topo = Topology("t", 512, island=256, hardware="TPUv5e", hbm=16e9)
+    m = strategy_lib.build_mesh(topo, model=16, pods=2, abstract=True)
+    assert dict(m.shape) == {"pod": 2, "data": 16, "model": 16}
+    m1 = strategy_lib.build_mesh(POD1, model=16, abstract=True)
+    assert dict(m1.shape) == {"data": 16, "model": 16}
+    with pytest.raises(ValueError):
+        strategy_lib.build_mesh(POD1, model=5)
+
+
+def test_get_topology_names():
+    assert strategy_lib.get_topology("pod").n_devices == 256
+    assert strategy_lib.get_topology("multipod").n_devices == 512
+    assert strategy_lib.get_topology("multipod4").n_devices == 1024
+    assert strategy_lib.get_topology("host").n_devices == len(jax.devices())
+    with pytest.raises(ValueError):
+        strategy_lib.get_topology("cluster9000")
+
+
+def test_decode_cache_axes_long_context():
+    s = parse("hsdp_tp16")
+    plan = s.to_plan(get_config("qwen3-0.6b"), POD1, SHAPES["long_500k"],
+                     abstract=True)
+    assert plan.decode_cache_axes == ("data", "model")

@@ -142,12 +142,13 @@ def test_collective_stats_on_real_lowering():
         from jax.sharding import PartitionSpec as P
         import sys; sys.path.insert(0, "src")
         from repro.perf.hlo import collective_stats
+        from repro.core.parallel import use_mesh
         mesh = jax.make_mesh((4,), ("x",))
         def f(a):
             b = jax.lax.with_sharding_constraint(a, jax.NamedSharding(mesh, P("x")))
             def body(c, x): return c + (b * x).sum(), None
             return jax.lax.scan(body, 0.0, jnp.arange(5.0))[0]
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             sds = jax.ShapeDtypeStruct((16,), jnp.float32,
                                        sharding=jax.NamedSharding(mesh, P(None)))
             txt = jax.jit(f).lower(sds).compile().as_text()

@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import argparse
 import csv
+import json
 import os
 import time
 
@@ -51,18 +52,21 @@ def _micro_benchmarks():
             jax.block_until_ready(fn(*args))
         out.append((name, (time.perf_counter() - t0) / n * 1e6, derived))
 
-    q = jax.random.normal(key, (2, 1024, 4, 64))
-    k = jax.random.normal(key, (2, 1024, 2, 64))
-    v = jax.random.normal(key, (2, 1024, 2, 64))
+    # independent keys per tensor: correlated q/k/v make softmax rows
+    # degenerate (one dominant logit) and flatter the timings
+    kq, kk_, kv_, kr, kw, ku, kx = jax.random.split(key, 7)
+    q = jax.random.normal(kq, (2, 1024, 4, 64))
+    k = jax.random.normal(kk_, (2, 1024, 2, 64))
+    v = jax.random.normal(kv_, (2, 1024, 2, 64))
     f = jax.jit(lambda q, k, v: _attend_blocked(q, k, v, 0, 0.125, 256, 256))
     timeit("micro_blocked_attention_1k", f, q, k, v,
            derived="B2S1024H4GQA2D64_cpu")
 
-    r = jax.random.normal(key, (2, 512, 4, 64)) * 0.5
-    kk = jax.random.normal(key, (2, 512, 4, 64)) * 0.5
-    vv = jax.random.normal(key, (2, 512, 4, 64)) * 0.5
-    w = jnp.exp(-jnp.exp(jax.random.normal(key, (2, 512, 4, 64)) - 2.5))
-    u = jax.random.normal(key, (4, 64)) * 0.3
+    r = jax.random.normal(kr, (2, 512, 4, 64)) * 0.5
+    kk = jax.random.normal(kk_, (2, 512, 4, 64)) * 0.5
+    vv = jax.random.normal(kv_, (2, 512, 4, 64)) * 0.5
+    w = jnp.exp(-jnp.exp(jax.random.normal(kw, (2, 512, 4, 64)) - 2.5))
+    u = jax.random.normal(ku, (4, 64)) * 0.3
     s0 = jnp.zeros((2, 4, 64, 64))
     g = jax.jit(lambda *a: wkv_chunked(*a, 64))
     timeit("micro_wkv6_chunked_512", g, r, kk, vv, w, u, s0,
@@ -72,11 +76,100 @@ def _micro_benchmarks():
     from repro.configs import get_config, reduced
     cfg = reduced(get_config("deepseek-moe-16b"))
     p = moe_lib.init_moe(cfg, key)
-    x = jax.random.normal(key, (4, 128, cfg.d_model))
+    x = jax.random.normal(kx, (4, 128, cfg.d_model))
     rt = Runtime(moe_impl="dropping", moe_groups=4)
     h = jax.jit(lambda x: moe_lib.apply_moe(cfg, p, x, rt)[0])
     timeit("micro_moe_dispatch", h, x, derived="T512E4k2_cpu")
     return out
+
+
+# (name, dims) sweep for the kernel fwd / fwd+bwd microbenchmarks: varies
+# sequence length, head dim, GQA ratio, and sliding window
+KERNEL_SHAPES = [
+    ("mha_s256_d64", dict(B=1, S=256, H=4, Kv=4, D=64, window=0)),
+    ("gqa4_s512_d64", dict(B=1, S=512, H=8, Kv=2, D=64, window=0)),
+    ("mha_s256_d128", dict(B=1, S=256, H=4, Kv=4, D=128, window=0)),
+    ("swa128_s512_d64", dict(B=1, S=512, H=4, Kv=2, D=64, window=128)),
+]
+NORM_SHAPES = [
+    ("rows2048_d256", (2048, 256)),
+    ("rows4096_d1024", (4096, 1024)),
+]
+
+
+def _kernel_microbenchmarks(out_path: str = "results/benchmarks/BENCH_kernels.json",
+                            n_iter: int = 3):
+    """Time fwd and fwd+bwd of the attention/rmsnorm hot path for both impls
+    (pure-jnp fallback vs Pallas kernels; interpret mode off-TPU) and write
+    the perf-trajectory artifact BENCH_kernels.json."""
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops as kernel_ops
+    from repro.kernels import ref
+    from repro.models.attention import _attend_blocked
+
+    def bench(fn, *args):
+        fn(*args)                                  # compile / first trace
+        jax.block_until_ready(fn(*args))
+        t0 = time.perf_counter()
+        for _ in range(n_iter):
+            jax.block_until_ready(fn(*args))
+        return (time.perf_counter() - t0) / n_iter * 1e6
+
+    records, summary = [], []
+    for idx, (name, sh) in enumerate(KERNEL_SHAPES):
+        B, S, H, Kv, D, w = (sh[k] for k in ("B", "S", "H", "Kv", "D",
+                                             "window"))
+        kq, kk, kv = jax.random.split(jax.random.PRNGKey(idx), 3)
+        q = jax.random.normal(kq, (B, S, H, D))
+        k = jax.random.normal(kk, (B, S, Kv, D))
+        v = jax.random.normal(kv, (B, S, Kv, D))
+        impls = {
+            "jnp": jax.jit(lambda q, k, v, w=w, D=D: _attend_blocked(
+                q, k, v, w, D ** -0.5, 128, 128)),
+            "pallas": jax.jit(lambda q, k, v, w=w: kernel_ops.attention(
+                q, k, v, window=w, block_q=128, block_kv=128)),
+        }
+        for impl, fwd in impls.items():
+            fwd_bwd = jax.jit(jax.grad(
+                lambda q, k, v, fwd=fwd: jnp.sum(fwd(q, k, v)),
+                argnums=(0, 1, 2)))
+            t_fwd = bench(fwd, q, k, v)
+            t_bwd = bench(fwd_bwd, q, k, v)
+            records.append({"kernel": "attention", "shape": name, **sh,
+                            "impl": impl, "fwd_us": round(t_fwd, 1),
+                            "fwd_bwd_us": round(t_bwd, 1)})
+            summary.append((f"kern_attn_{name}_{impl}", t_fwd,
+                            f"fwdbwd{t_bwd:.0f}us"))
+    for idx, (name, (n, d)) in enumerate(NORM_SHAPES):
+        kx, ks = jax.random.split(jax.random.PRNGKey(100 + idx))
+        x = jax.random.normal(kx, (n, d))
+        scale = jax.random.normal(ks, (d,))
+        impls = {
+            "jnp": jax.jit(ref.rmsnorm_ref),
+            "pallas": jax.jit(lambda x, s: kernel_ops.rmsnorm(x, s)),
+        }
+        for impl, fwd in impls.items():
+            fwd_bwd = jax.jit(jax.grad(
+                lambda x, s, fwd=fwd: jnp.sum(fwd(x, s)), argnums=(0, 1)))
+            t_fwd = bench(fwd, x, scale)
+            t_bwd = bench(fwd_bwd, x, scale)
+            records.append({"kernel": "rmsnorm", "shape": name,
+                            "rows": n, "d": d, "impl": impl,
+                            "fwd_us": round(t_fwd, 1),
+                            "fwd_bwd_us": round(t_bwd, 1)})
+            summary.append((f"kern_rmsnorm_{name}_{impl}", t_fwd,
+                            f"fwdbwd{t_bwd:.0f}us"))
+
+    out_dir = os.path.dirname(out_path)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump({"backend": jax.default_backend(),
+                   "interpret_mode": jax.default_backend() != "tpu",
+                   "n_iter": n_iter, "rows": records}, f, indent=1)
+    print(f"[bench] wrote {out_path} ({len(records)} rows)")
+    return summary
 
 
 def _strategy_benchmark(spec: str, hw_name: str, gpus: int, global_batch: int,
@@ -108,7 +201,20 @@ def main() -> None:
     ap.add_argument("--gpus", type=int, default=2048)
     ap.add_argument("--global_batch", type=int, default=4096)
     ap.add_argument("--seq_len", type=int, default=4096)
+    ap.add_argument("--micro-kernels", dest="micro_kernels",
+                    action="store_true",
+                    help="only run the fwd/fwd+bwd kernel microbenchmarks "
+                         "(jnp vs pallas) and write BENCH_kernels.json")
+    ap.add_argument("--kernel_json",
+                    default="results/benchmarks/BENCH_kernels.json")
     args = ap.parse_args()
+
+    if args.micro_kernels:
+        rows = _kernel_microbenchmarks(args.kernel_json)
+        print("name,us_per_call,derived")
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},{derived}")
+        return
 
     rows = _figure_benchmarks()
     rows += _micro_benchmarks()

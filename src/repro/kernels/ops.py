@@ -1,8 +1,12 @@
 """Jit'd public wrappers for the Pallas kernels.
 
 ``interpret='auto'`` executes the kernel bodies in Python on CPU (the
-validation substrate) and compiles them for real on TPU.  Model code calls
-these through ``Runtime.attn_impl == 'pallas'``.
+validation substrate) and compiles them for real on TPU; the backend probe
+is memoized at module level so the hot path never re-queries XLA.  Model
+code calls these through ``Runtime.attn_impl == 'pallas'`` /
+``Runtime.norm_impl == 'pallas'`` — both forward and backward run as Pallas
+kernels (``custom_vjp``), so ``jax.grad`` through a train step stays on the
+kernel path.
 """
 from __future__ import annotations
 
@@ -12,10 +16,15 @@ from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.rmsnorm import rmsnorm as _rmsnorm
 from repro.kernels.rwkv6 import wkv6 as _wkv6
 
+_IS_TPU = None      # memoized jax.default_backend() == 'tpu' probe
+
 
 def _interp(interpret):
     if interpret == "auto":
-        return jax.default_backend() != "tpu"
+        global _IS_TPU
+        if _IS_TPU is None:
+            _IS_TPU = jax.default_backend() == "tpu"
+        return not _IS_TPU
     return bool(interpret)
 
 

@@ -63,13 +63,46 @@ def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, sout_ref, s_scr,
         sout_ref[0] = s_new.astype(sout_ref.dtype)
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def _wkv6(r, k, v, w, u, chunk, interpret):
+    return _wkv6_forward(r, k, v, w, u, chunk, interpret)
+
+
+def _wkv6_fwd_rule(r, k, v, w, u, chunk, interpret):
+    return _wkv6_forward(r, k, v, w, u, chunk, interpret), (r, k, v, w, u)
+
+
+def _wkv6_bwd_rule(chunk, interpret, res, cts):
+    # gradient bridge: the WKV backward is not a Pallas kernel yet, so
+    # differentiate the jnp chunked-parallel oracle instead — training with
+    # Runtime(attn_impl='pallas') stays end-to-end differentiable and the
+    # forward still runs on the kernel.
+    from repro.models.rwkv6 import wkv_chunked
+    r, k, v, w, u = res
+    B, _, H, N = r.shape
+    s0 = jnp.zeros((B, H, N, N), jnp.float32)
+    _, pullback = jax.vjp(
+        lambda r, k, v, w, u: wkv_chunked(r, k, v, w, u, s0, chunk),
+        r, k, v, w, u)
+    return pullback(cts)
+
+
+_wkv6.defvjp(_wkv6_fwd_rule, _wkv6_bwd_rule)
+
+
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def wkv6(r, k, v, w, u, *, chunk=64, interpret=False):
     """r/k/v/w (B,T,H,N), u (H,N) -> (y (B,T,H,N), state (B,H,N,N)).
 
     Zero initial state (the fused-training entry point; decode keeps the
     recurrent step in plain jnp — it is a single (N,N) mat-vec).
+    Differentiable: the backward currently replays the jnp chunked oracle
+    (see ``_wkv6_bwd_rule``); a fused Pallas WKV backward is future work.
     """
+    return _wkv6(r, k, v, w, u, chunk, interpret)
+
+
+def _wkv6_forward(r, k, v, w, u, chunk, interpret):
     B, T, H, N = r.shape
     chunk = min(chunk, T)
     Tp = -(-T // chunk) * chunk

@@ -267,8 +267,14 @@ def main():
     ap.add_argument("--no_sp", action="store_true",
                     help="disable sequence-parallel residual stream")
     ap.add_argument("--grad_accum", type=int, default=1)
+    ap.add_argument("--kernels", default="", choices=["", "jnp", "pallas"],
+                    help="attention/norm impl override ('' keeps Runtime "
+                         "defaults)")
     args = ap.parse_args()
     rt_overrides = {}
+    if args.kernels:
+        rt_overrides["attn_impl"] = args.kernels
+        rt_overrides["norm_impl"] = args.kernels
     if args.remat_inner:
         rt_overrides["remat_inner"] = True
     if args.gather_per_block:

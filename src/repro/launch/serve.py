@@ -36,6 +36,9 @@ def main():
                          "string like fsdp_tp2")
     ap.add_argument("--topology", default="host",
                     help="host | pod | multipod[<k>]")
+    ap.add_argument("--kernels", default="jnp", choices=["jnp", "pallas"],
+                    help="attention/norm impl for prefill (decode steps use "
+                         "the dense cache path either way)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -55,13 +58,15 @@ def main():
               f"(mesh {dict(plan.mesh.shape)}, attn={plan.attn})")
         rt = par.make_runtime(cfg, plan, shape, remat=False,
                               rwkv_chunk=16, mamba_chunk=32,
-                              moe_impl="dense")
+                              moe_impl="dense",
+                              attn_impl=args.kernels, norm_impl=args.kernels)
         params = init_params(cfg, key)
         pshard = par.param_shardings(
             cfg, plan, jax.eval_shape(lambda: params))
         params = jax.device_put(params, pshard)
     else:
-        rt = Runtime(rwkv_chunk=16, mamba_chunk=32, moe_impl="dense")
+        rt = Runtime(rwkv_chunk=16, mamba_chunk=32, moe_impl="dense",
+                     attn_impl=args.kernels, norm_impl=args.kernels)
         params = init_params(cfg, key)
     engine = ServeEngine(cfg, params, rt, max_len=max_len, plan=plan)
 

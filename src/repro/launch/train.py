@@ -80,6 +80,9 @@ def main():
                     choices=sorted(strategy_lib.OBJECTIVES))
     ap.add_argument("--host_devices", type=int, default=8,
                     help="fake XLA host devices on CPU (0 = leave alone)")
+    ap.add_argument("--kernels", default="jnp", choices=["jnp", "pallas"],
+                    help="attention/norm impl: 'pallas' runs the fwd+bwd "
+                         "Pallas kernels (interpret mode off-TPU)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -105,6 +108,7 @@ def main():
     rt = par.make_runtime(cfg, plan, shape,
                           param_dtype=jnp.float32, compute_dtype=jnp.float32,
                           remat=False, rwkv_chunk=32, mamba_chunk=64,
+                          attn_impl=args.kernels, norm_impl=args.kernels,
                           attn_min_chunked_len=max(2048, args.seq_len + 1)
                           if args.seq_len <= 2048 else 2048)
 

@@ -11,6 +11,7 @@ All functions are batch-first: q (B, Sq, H, D), k/v (B, Skv, Kv, D).
 """
 from __future__ import annotations
 
+import math
 from typing import Optional
 
 import jax
@@ -82,14 +83,22 @@ def _attend_blocked(q, k, v, window, scale, q_chunk, kv_chunk):
     Skips fully-masked KV chunks' contribution via masking (the scan itself
     still visits them; XLA removes the FLOPs only on TPU via the Pallas
     kernel -- here correctness + memory are what matter).
+
+    Sequence lengths that are not a multiple of the chunk sizes are padded
+    to the next common multiple; the causal mask excludes padded kv
+    positions (k_pos > every real q_pos) and padded q rows are sliced off.
     """
     B, S, H, D = q.shape
     Kv = k.shape[2]
     G = H // Kv
     q_chunk = min(q_chunk, S)
     kv_chunk = min(kv_chunk, S)
-    nq, nk = S // q_chunk, S // kv_chunk
-    assert S % q_chunk == 0 and S % kv_chunk == 0, (S, q_chunk, kv_chunk)
+    mult = math.lcm(q_chunk, kv_chunk)
+    Sp = -(-S // mult) * mult
+    if Sp != S:
+        pad = [(0, 0), (0, Sp - S), (0, 0), (0, 0)]
+        q, k, v = jnp.pad(q, pad), jnp.pad(k, pad), jnp.pad(v, pad)
+    nq, nk = Sp // q_chunk, Sp // kv_chunk
 
     qg = q.reshape(B, nq, q_chunk, Kv, G, D).transpose(1, 0, 2, 3, 4, 5)
     kc = k.reshape(B, nk, kv_chunk, Kv, D).transpose(1, 0, 2, 3, 4)
@@ -124,9 +133,9 @@ def _attend_blocked(q, k, v, window, scale, q_chunk, kv_chunk):
         return None, out.astype(q.dtype)                     # (B,Kv,G,qc,D)
 
     _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq), qg))
-    # outs: (nq, B, Kv, G, qc, D) -> (B, S, H, D)
-    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, S, H, D)
-    return out
+    # outs: (nq, B, Kv, G, qc, D) -> (B, Sp, H, D) -> drop padded rows
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sp, H, D)
+    return out[:, :S]
 
 
 def sdpa_causal(q, k, v, window=0, rt: Optional[Runtime] = None):

@@ -37,6 +37,7 @@ class Runtime:
                                         # inside the layer loop instead of
                                         # letting XLA hoist the whole stack)
     attn_impl: str = "jnp"              # 'jnp' | 'pallas' (TPU hot path)
+    norm_impl: str = "jnp"              # 'jnp' | 'pallas' (fused rmsnorm VJP)
     constrain: Optional[Callable] = None  # (name, x) -> x sharding constraint
 
     def c(self, name: str, x):
@@ -60,7 +61,13 @@ def init_norm(cfg, key, d=None):
     return {"scale": jnp.ones((d,))}
 
 
-def apply_norm(p, x, eps):
+def apply_norm(p, x, eps, rt: Optional["Runtime"] = None):
+    if (rt is not None and rt.norm_impl == "pallas" and "bias" not in p
+            and x.shape[-1] % 128 == 0):
+        # fused Pallas rmsnorm (custom_vjp: backward is a kernel too);
+        # layernorm and non-lane-aligned dims stay on the jnp path
+        from repro.kernels import ops as kernel_ops
+        return kernel_ops.rmsnorm(x, p["scale"], eps=eps)
     xf = x.astype(jnp.float32)
     if "bias" in p:  # layernorm
         mu = xf.mean(-1, keepdims=True)

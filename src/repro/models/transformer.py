@@ -153,7 +153,7 @@ def _apply_layer(cfg, sig, lp, h, rope_ang, rt: Runtime, cache=None):
     kind, is_moe = sig
     aux = jnp.zeros((), jnp.float32)
 
-    x = apply_norm(lp["norm1"], h, cfg.norm_eps)
+    x = apply_norm(lp["norm1"], h, cfg.norm_eps, rt)
     if kind == "attn":
         mix, new_mix_cache = attn_lib.attention_block(
             cfg, lp["mixer"], x, rope_ang, rt,
@@ -171,7 +171,7 @@ def _apply_layer(cfg, sig, lp, h, rope_ang, rt: Runtime, cache=None):
         new_cache = new_state
     h = h + mix
 
-    x = apply_norm(lp["norm2"], h, cfg.norm_eps)
+    x = apply_norm(lp["norm2"], h, cfg.norm_eps, rt)
     if kind == "rwkv6":
         ffn, new_ffn = rwkv_lib.rwkv_channel_mix(
             cfg, lp["ffn"], x, rt,
@@ -296,7 +296,7 @@ def forward(cfg: ModelConfig, params, batch, rt: Runtime,
         if cache is not None:
             new_block_caches = list(ys)
 
-    h = apply_norm(params["final_norm"], h, cfg.norm_eps)
+    h = apply_norm(params["final_norm"], h, cfg.norm_eps, rt)
     logits = lm_logits(params["embed"], h, rt)
 
     new_cache = None

@@ -56,6 +56,91 @@ def test_flash_attention_block_shapes(blocks):
     assert float(jnp.max(jnp.abs(out - expect))) < 2e-5
 
 
+# ---------------------------------------------------------------------------
+# custom_vjp grad consistency: pallas backward kernels vs jax.grad of the
+# jnp oracle (fp32, interpret mode on CPU)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,H,Kv,D,window", [
+    (2, 128, 4, 2, 64, 0),      # GQA causal
+    (1, 256, 4, 4, 64, 64),     # sliding window
+    (1, 160, 4, 2, 64, 0),      # non-block-multiple S (pad path)
+    (1, 128, 8, 1, 64, 0),      # MQA
+])
+def test_flash_attention_grads(B, S, H, Kv, D, window):
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (B, S, H, D)) * 0.5
+    k = jax.random.normal(ks[1], (B, S, Kv, D)) * 0.5
+    v = jax.random.normal(ks[2], (B, S, Kv, D)) * 0.5
+    cot = jax.random.normal(ks[3], (B, S, H, D))
+
+    def loss_pallas(q, k, v):
+        out = flash_attention(q, k, v, window=window, block_q=64,
+                              block_kv=64, interpret=True)
+        return jnp.sum(out * cot)
+
+    def loss_ref(q, k, v):
+        return jnp.sum(ref.attention_ref(q, k, v, window=window) * cot)
+
+    g_pl = jax.grad(loss_pallas, (0, 1, 2))(q, k, v)
+    g_rf = jax.grad(loss_ref, (0, 1, 2))(q, k, v)
+    for name, a, b in zip("qkv", g_pl, g_rf):
+        err = float(jnp.max(jnp.abs(a - b)))
+        assert err < 1e-3, (name, err)
+
+
+@pytest.mark.parametrize("S", [160, 200, 300])
+def test_flash_attention_default_blocks_ragged_s(S):
+    """Default 128/256 blocks with 128 < S < 2*block_q: the padded length
+    must stay a multiple of both block sizes (regression: tail q-blocks
+    were silently dropped, NaN out/grads)."""
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (1, S, 4, 64)) * 0.5
+    k = jax.random.normal(ks[1], (1, S, 2, 64)) * 0.5
+    v = jax.random.normal(ks[2], (1, S, 2, 64)) * 0.5
+    cot = jax.random.normal(ks[3], q.shape)
+    out = flash_attention(q, k, v, interpret=True)
+    expect = ref.attention_ref(q, k, v)
+    assert float(jnp.max(jnp.abs(out - expect))) < 2e-5
+    g_pl = jax.grad(lambda q, k, v: jnp.sum(flash_attention(
+        q, k, v, interpret=True) * cot), (0, 1, 2))(q, k, v)
+    g_rf = jax.grad(lambda q, k, v: jnp.sum(
+        ref.attention_ref(q, k, v) * cot), (0, 1, 2))(q, k, v)
+    for a, b in zip(g_pl, g_rf):
+        assert float(jnp.max(jnp.abs(a - b))) < 1e-3
+
+
+def test_flash_attention_grads_mixed_blocks():
+    """bq != bk exercises both backward grids' independent block offsets."""
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (1, 256, 4, 64)) * 0.5
+    k = jax.random.normal(ks[1], (1, 256, 2, 64)) * 0.5
+    v = jax.random.normal(ks[2], (1, 256, 2, 64)) * 0.5
+    cot = jax.random.normal(ks[3], q.shape)
+    g_pl = jax.grad(lambda q, k, v: jnp.sum(flash_attention(
+        q, k, v, block_q=128, block_kv=64, interpret=True) * cot),
+        (0, 1, 2))(q, k, v)
+    g_rf = jax.grad(lambda q, k, v: jnp.sum(
+        ref.attention_ref(q, k, v) * cot), (0, 1, 2))(q, k, v)
+    for a, b in zip(g_pl, g_rf):
+        assert float(jnp.max(jnp.abs(a - b))) < 1e-3
+
+
+@pytest.mark.parametrize("shape", [(4, 7, 256), (2, 128, 512), (3, 384)])
+def test_rmsnorm_grads(shape):
+    ks = jax.random.split(KEY, 3)
+    x = jax.random.normal(ks[0], shape)
+    scale = jax.random.normal(ks[1], shape[-1:])
+    cot = jax.random.normal(ks[2], shape)
+    g_pl = jax.grad(lambda x, s: jnp.sum(rmsnorm(
+        x, s, block_rows=64, interpret=True) * cot), (0, 1))(x, scale)
+    g_rf = jax.grad(lambda x, s: jnp.sum(
+        ref.rmsnorm_ref(x, s) * cot), (0, 1))(x, scale)
+    for name, a, b in zip(("dx", "dscale"), g_pl, g_rf):
+        err = float(jnp.max(jnp.abs(a - b)))
+        assert err < 1e-3, (name, err)
+
+
 @pytest.mark.parametrize("shape", [(4, 7, 256), (2, 128, 512), (3, 384),
                                    (1, 1, 128)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])

@@ -18,7 +18,8 @@ KEY = jax.random.PRNGKey(3)
 # attention: blocked == dense
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("S,window", [(256, 0), (256, 64), (512, 100)])
+@pytest.mark.parametrize("S,window", [(256, 0), (256, 64), (512, 100),
+                                      (100, 0), (300, 64), (97, 0)])
 def test_blocked_attention_matches_dense(S, window):
     ks = jax.random.split(KEY, 3)
     B, H, Kv, D = 2, 4, 2, 32

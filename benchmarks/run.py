@@ -172,6 +172,95 @@ def _kernel_microbenchmarks(out_path: str = "results/benchmarks/BENCH_kernels.js
     return summary
 
 
+def _pp_sweep(out_path: str = "results/benchmarks/BENCH_pipeline.json",
+              pps=(1, 2, 4), n_iter: int = 3):
+    """Predicted vs measured step time for pp in {1,2,4} on 8 virtual CPU
+    devices -> BENCH_pipeline.json (CI artifact).
+
+    Measured wall time is a CPU regression signal; the *comparable*
+    quantity across the predicted/measured columns is the pipeline bubble
+    fraction, which is schedule-determined and hardware-free.
+    """
+    from repro.launch.devices import force_host_device_count
+    force_host_device_count(8)
+    import jax
+    import jax.numpy as jnp
+    from repro import strategy as strategy_lib
+    from repro.configs import ShapeConfig, get_config, reduced
+    from repro.core import parallel as par
+    from repro.launch.specs import concrete_train_batch
+    from repro.models import transformer as tfm
+    from repro.optim import init_opt_state
+    from repro.perf.pipeline_probe import measure_bubble
+    from repro.train.trainer import (TrainConfig, make_train_step,
+                                     place_train_state)
+
+    cfg = reduced(get_config("qwen3-0.6b"), n_layers=8)
+    topo = strategy_lib.host_topology()
+    shape = ShapeConfig("pp-sweep", 128, 16, "train")
+    key = jax.random.PRNGKey(0)
+    rows, summary = [], []
+    for pp in pps:
+        spec = "fsdp" if pp == 1 else f"fsdp_pp{pp}_mb8"
+        strat = strategy_lib.parse(spec)
+        report = strategy_lib.evaluate(cfg, strat, topo, shape)
+        plan = strat.to_plan(cfg, topo, shape)
+        rt = par.make_runtime(cfg, plan, shape, param_dtype=jnp.float32,
+                              compute_dtype=jnp.float32, remat=False,
+                              attn_min_chunked_len=256)
+        params = tfm.init_params(cfg, key)
+        batch = concrete_train_batch(cfg, shape.global_batch,
+                                     shape.seq_len, key)
+        with par.use_mesh(plan.mesh):
+            params_s, opt_s, batch_s, pshard, _ = place_train_state(
+                cfg, plan, params, init_opt_state(params), batch)
+            step = jax.jit(make_train_step(cfg, rt, TrainConfig()),
+                           out_shardings=(pshard, None, None))
+            jax.block_until_ready(step(params_s, opt_s, batch_s))  # compile
+            t_best = float("inf")
+            for _ in range(n_iter):
+                t0 = time.perf_counter()
+                jax.block_until_ready(step(params_s, opt_s, batch_s))
+                t_best = min(t_best, time.perf_counter() - t0)
+        row = {
+            "spec": spec, "pp": pp, "microbatches": strat.microbatches,
+            "mesh": {k: int(v) for k, v in plan.mesh.shape.items()},
+            "predicted_hw": topo.hardware,
+            "predicted_t_step_s": report.t_step,
+            "predicted_wps": report.wps,
+            "measured_t_step_s": round(t_best, 4),
+            "measured_backend": jax.default_backend(),
+        }
+        if pp > 1:
+            row.update(measure_bubble(cfg, strat, topo, n_iter=n_iter))
+            rel = abs(row["bubble_measured"] - row["bubble_predicted"]) \
+                / row["bubble_predicted"]
+            row["bubble_rel_err"] = round(rel, 3)
+            if rel > 0.2:
+                # two-point wall-clock fits are noisy on oversubscribed
+                # CPU hosts; flag it so the artifact is self-describing
+                # (the tier-1 slow test enforces the 20% bound with
+                # retries; this sweep only records the trajectory)
+                print(f"[bench] warn: {spec} measured bubble "
+                      f"{row['bubble_measured']:.3f} is {rel:.0%} off the "
+                      f"predicted {row['bubble_predicted']:.3f} "
+                      "(noisy host?)")
+        rows.append(row)
+        summary.append((f"pp_sweep_{spec}", t_best * 1e6,
+                        f"bubble{row.get('bubble_measured', 0.0):.3f}"
+                        f"_pred{row.get('bubble_predicted', 0.0):.3f}"))
+    out_dir = os.path.dirname(out_path)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump({"backend": jax.default_backend(), "n_iter": n_iter,
+                   "arch": cfg.name, "shape": {"seq_len": shape.seq_len,
+                                               "global_batch": shape.global_batch},
+                   "rows": rows}, f, indent=1)
+    print(f"[bench] wrote {out_path} ({len(rows)} rows)")
+    return summary
+
+
 def _strategy_benchmark(spec: str, hw_name: str, gpus: int, global_batch: int,
                         seq_len: int):
     """Price one spec (or the planner's 'auto' pick) via the unified API."""
@@ -207,10 +296,24 @@ def main() -> None:
                          "(jnp vs pallas) and write BENCH_kernels.json")
     ap.add_argument("--kernel_json",
                     default="results/benchmarks/BENCH_kernels.json")
+    ap.add_argument("--pp-sweep", dest="pp_sweep", action="store_true",
+                    help="only run the pipeline-parallel sweep (predicted "
+                         "vs measured step time + bubble fraction for pp "
+                         "in {1,2,4} on 8 virtual devices) and write "
+                         "BENCH_pipeline.json")
+    ap.add_argument("--pipeline_json",
+                    default="results/benchmarks/BENCH_pipeline.json")
     args = ap.parse_args()
 
     if args.micro_kernels:
         rows = _kernel_microbenchmarks(args.kernel_json)
+        print("name,us_per_call,derived")
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},{derived}")
+        return
+
+    if args.pp_sweep:
+        rows = _pp_sweep(args.pipeline_json)
         print("name,us_per_call,derived")
         for name, us, derived in rows:
             print(f"{name},{us:.1f},{derived}")

@@ -55,8 +55,9 @@ def main():
               f"{r.memory_per_device / 2**30:>7.1f} "
               f"{'y' if r.fits else 'n':>4} {'y' if p.lowers else 'n':>4} "
               f"{'*' if p.spec in front else '':>6}")
-    # recommend only specs the SPMD lowering can execute (pp>1 is
-    # analytic-only, so the top-ranked point may not run)
+    # recommend only specs the SPMD lowering can execute (pp>1 lowers
+    # through the GPipe pipe axis now; a point may still fail to lower
+    # e.g. when the layer stack is not uniform or degrees do not divide)
     best = next((p for p in ranked if p.lowers), None)
     if best is None:
         print("\nno ranked strategy lowers on this topology "

@@ -177,7 +177,11 @@ class Strategy:
     def valid(self) -> bool:
         return (self.dp >= 1 and
                 self.dp * self.tp * self.pp * self.cp == self.n_devices and
-                self.dp % self.fsdp_n == 0)
+                self.dp % self.fsdp_n == 0 and
+                # a pipeline with fewer microbatches than stages cannot
+                # fill; pricing it would diverge from what the lowering
+                # runs (the descriptor rejects mb < pp at construction)
+                (self.pp == 1 or self.microbatches >= self.pp))
 
 
 # ---------------------------------------------------------------------------
@@ -325,7 +329,7 @@ def step_time(cfg: ModelConfig, hw: Hardware, strat: Strategy,
     # ---- pipeline ------------------------------------------------------------
     bubble = 0.0
     if strat.pp > 1:
-        m = max(strat.microbatches, strat.pp)
+        m = strat.microbatches          # valid() guarantees m >= pp
         bubble_frac = (strat.pp - 1) / (m + strat.pp - 1)
         act_boundary = local_batch * seq_len * d * 2 / m
         comm["pp_p2p"] = (strat.pp - 1) * m * t_p2p(

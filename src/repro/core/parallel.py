@@ -67,10 +67,16 @@ class ParallelPlan:
     shape_mode: str = "train"            # train | prefill | decode
     decode_cache_axes: Tuple[str, ...] = ("model",)
     seq_parallel_residuals: bool = True  # Megatron-SP residual stream
+    pipe: str = ""                       # pipeline mesh axis ('' = no PP)
+    microbatches: int = 1                # GPipe microbatches per minibatch
 
     @property
     def tp_size(self) -> int:
         return self.mesh.shape[self.tp]
+
+    @property
+    def pipe_size(self) -> int:
+        return self.mesh.shape[self.pipe] if self.pipe else 1
 
     def axis_size(self, axes) -> int:
         return int(np.prod([self.mesh.shape[a] for a in axes])) if axes else 1
@@ -193,13 +199,16 @@ def _param_spec(cfg: ModelConfig, plan: ParallelPlan, path: Tuple[str, ...],
     names = [getattr(p, "key", getattr(p, "name", str(p))) for p in path]
     leaf = names[-1]
     stacked = "blocks" in names
-    # position of the leading stack dim (blocks[i] leaves carry one)
+    # position of the leading stack dim (blocks[i] leaves carry one); a
+    # pipeline plan shards it over the pipe axis — contiguous layer groups
+    # per stage, exactly the slices core/pipeline.py's shard_map hands out
     pad = 1 if stacked else 0
+    stack_entry = plan.pipe if (stacked and plan.pipe) else None
     base_ndim = ndim - pad
 
     def spec(*entries):
         entries = entries + (None,) * (base_ndim - len(entries))
-        return P(*((None,) * pad + entries))
+        return P(*((stack_entry,) * pad + entries))
 
     in_attention = "mixer" in names
     vocab_tp = plan.attn == "head_tp"   # context plans keep vocab unsharded
@@ -374,6 +383,13 @@ def make_runtime(cfg: ModelConfig, plan: ParallelPlan, shape: ShapeConfig,
         moe_impl="dropping" if cfg.moe.n_experts else "auto",
         moe_groups=plan.axis_size(plan.dp),
     )
+    if plan.pipe and shape.mode != "decode":
+        # GPipe path (train / cache-less prefill); decode steps thread a
+        # cache and take the sequential scan over the pipe-sharded stack
+        kw.update(pipeline_axis=plan.pipe,
+                  pipeline_microbatches=plan.microbatches,
+                  pipeline_mesh=plan.mesh,
+                  pipeline_batch_axes=tuple(plan.dp))
     if plan.attn == "context":
         kw["attn_q_chunk"] = shape.seq_len
     if overrides.pop("fsdp_gather_per_block", False):

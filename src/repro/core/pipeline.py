@@ -2,12 +2,19 @@
 collective_permute (ppermute), jax-native (no NCCL p2p emulation).
 
 Each device along the ``pipe`` axis owns one *stage* = a contiguous group
-of layers (stacked params, leading dim = stage).  A global minibatch is
-split into M microbatches; for ``M + P - 1`` ticks every stage computes on
-its current activation and ppermutes it to the next stage.  Ticks where a
-stage holds no valid microbatch are the *pipeline bubble* — fraction
-(P-1)/(M+P-1), exactly the term the paper's cost model charges
-(``core/costmodel.py``).
+of layers (the stacked layer params are sharded over the pipe axis on
+their leading/stack dim, so stage p holds layers [p*L/P, (p+1)*L/P)).  A
+minibatch is split into M microbatches; for ``M + P - 1`` ticks every
+stage computes on its current activation and ppermutes it to the next
+stage.  Ticks where a stage holds no valid microbatch are the *pipeline
+bubble* — fraction (P-1)/(M+P-1), exactly the term the paper's cost model
+charges (``core/costmodel.py``).
+
+The schedule composes with data parallelism: ``pipeline_apply`` shard_maps
+over the *full* mesh, with microbatch activations sharded over the batch
+axes (``x_spec``) and stage params sharded over ``axis`` only — GSPMD
+all-gathers FSDP-sharded params at entry, and the shard_map transpose
+psums parameter cotangents over the batch axes on the way back.
 
 Differentiable: shard_map + ppermute have transpose rules, so the same
 function trains under jax.grad (the backward pass runs the reverse
@@ -15,8 +22,8 @@ schedule automatically).
 """
 from __future__ import annotations
 
-import functools
-from typing import Callable
+import time
+from typing import Callable, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -34,20 +41,45 @@ else:                                   # jax 0.4.x
                    check_rep=False)
 
 
-def pipeline_apply(stage_fn: Callable, params_stacked, x_microbatches,
-                   mesh, axis: str = "pipe"):
+def batch_axes_spec(mesh, axes: Sequence[str], dim_size: int) -> Tuple[str, ...]:
+    """The prefix of ``axes`` that divides ``dim_size`` (fit-or-drop).
+
+    Mirrors ``parallel._fit_spec``: when the microbatch row count cannot
+    occupy the data axis (e.g. global_batch 8 split into 8 microbatches of
+    1 row), the batch dim is kept replicated and the compute is redundant
+    across that axis — correct, just not data-parallel.
+    """
+    keep = []
+    for a in axes:
+        n = mesh.shape[a]
+        if n > 1 and dim_size % n == 0 and dim_size >= n:
+            keep.append(a)
+            dim_size //= n
+    return tuple(keep)
+
+
+def pipeline_apply(stage_fn: Callable, stage_params, x_microbatches,
+                   mesh, axis: str = "pipe", extras=None,
+                   batch_axes: Sequence[str] = ()):
     """Run x through P stages of stage_fn under a GPipe schedule.
 
-    stage_fn: (stage_params, h) -> h, applied by every stage.
-    params_stacked: pytree with leading dim P (one slice per stage).
-    x_microbatches: (M, mb, ...) microbatched activations (replicated).
-    Returns (M, mb, ...) outputs.
+    stage_fn: (stage_params_local, h, extras) -> h, applied by every stage
+      on its local slice of the stacked layer params.
+    stage_params: pytree whose leaves have a leading stack dim divisible by
+      the pipe axis size (sharded contiguously over ``axis``: stage p gets
+      slice [p*L/P, (p+1)*L/P)).
+    x_microbatches: (M, mb, ...) microbatched activations; the mb (batch)
+      dim is sharded over ``batch_axes`` when divisible, else replicated.
+    extras: pytree broadcast to every stage unsharded (e.g. rope angles
+      with batch dim 1).
+    Returns (M, mb, ...) outputs, sharded like x.
     """
     n_stages = mesh.shape[axis]
+    kept = batch_axes_spec(mesh, batch_axes, x_microbatches.shape[1])
+    x_spec = P(None, kept if len(kept) > 1 else (kept[0] if kept else None))
 
-    def per_stage(params_local, xs):
-        # params_local: stage slice (leading dim 1); xs: (M, mb, ...)
-        params_local = jax.tree.map(lambda a: a[0], params_local)
+    def per_stage(params_local, xs, extras_local):
+        # params_local: (L/P, ...) stage slice; xs: (M, local_mb, ...)
         stage = jax.lax.axis_index(axis)
         M = xs.shape[0]
         mb_shape = xs.shape[1:]
@@ -59,7 +91,7 @@ def pipeline_apply(stage_fn: Callable, params_stacked, x_microbatches,
             # stage 0 ingests microbatch t (while valid)
             inject = xs[jnp.minimum(t, M - 1)]
             h = jnp.where(stage == 0, inject, state)
-            h = stage_fn(params_local, h)
+            h = stage_fn(params_local, h, extras_local)
             # last stage emits microbatch t - (P-1)
             out_slot = t - (n_stages - 1)
             valid = (out_slot >= 0) & (out_slot < M)
@@ -79,19 +111,32 @@ def pipeline_apply(stage_fn: Callable, params_stacked, x_microbatches,
         mask = (stage == n_stages - 1).astype(outputs.dtype)
         return jax.lax.psum(outputs * mask, axis)
 
-    pspec = jax.tree.map(lambda _: P(axis), params_stacked)
-    fn = _shard_map(per_stage, mesh, in_specs=(pspec, P()), out_specs=P())
-    return fn(params_stacked, x_microbatches)
+    pspec = jax.tree.map(lambda _: P(axis), stage_params)
+    espec = jax.tree.map(lambda _: P(), extras)
+    fn = _shard_map(per_stage, mesh, in_specs=(pspec, x_spec, espec),
+                    out_specs=x_spec)
+    return fn(stage_params, x_microbatches, extras)
 
 
 def make_pipelined_block_fn(cfg, rt):
-    """stage_fn applying `layers_per_stage` stacked transformer layers."""
+    """stage_fn applying this stage's slice of the stacked layer params.
+
+    ``extras`` carries the rope angles (batch dim 1, broadcast over the
+    local microbatch).  The Runtime must have ``constrain=None``: the
+    stage body runs inside a fully-manual shard_map where named-sharding
+    constraints are meaningless.
+    """
     from repro.models.transformer import _apply_layer, _sig
 
-    def stage_fn(stage_params, h):
+    sig = _sig(cfg, 0)
+    apply = _apply_layer
+    if rt.remat:
+        apply = jax.checkpoint(_apply_layer, static_argnums=(0, 1, 5))
+
+    def stage_fn(stage_params, h, rope_ang):
         # stage_params: {'layers': pytree stacked (L_per_stage, ...)}
         def body(h_, lp):
-            h2, _, _ = _apply_layer(cfg, _sig(cfg, 0), lp, h_, None, rt)
+            h2, _, _ = apply(cfg, sig, lp, h_, rope_ang, rt)
             return h2, None
         h, _ = jax.lax.scan(body, h, stage_params["layers"])
         return h
@@ -101,3 +146,44 @@ def make_pipelined_block_fn(cfg, rt):
 
 def bubble_fraction(n_stages: int, n_microbatches: int) -> float:
     return (n_stages - 1) / (n_microbatches + n_stages - 1)
+
+
+def measure_bubble_fraction(step_for_m: Callable[[int], Callable[[], object]],
+                            n_stages: int, microbatches: int,
+                            m2: Optional[int] = None,
+                            n_iter: int = 3) -> dict:
+    """Empirically estimate the pipeline bubble from wall time.
+
+    ``step_for_m(M)`` returns a zero-arg compiled callable running the
+    pipelined step with M microbatches at *fixed microbatch size* (total
+    batch grows with M), so t(M) = t_tick * (M + P - 1) + overhead is
+    linear in M.  A two-point fit recovers t_tick, and
+
+        bubble_measured = (P - 1) * t_tick / t(M)
+
+    which equals (P-1)/(M+P-1) up to the constant overhead term — the
+    executable counterpart of ``bubble_fraction`` / the cost model's GPipe
+    charge.
+    """
+    m1 = microbatches
+    m2 = m2 or 2 * m1
+
+    def timed(fn):
+        fn()                                   # compile / warm up
+        best = float("inf")
+        for _ in range(n_iter):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    t1 = timed(step_for_m(m1))
+    t2 = timed(step_for_m(m2))
+    t_tick = max((t2 - t1) / (m2 - m1), 0.0)
+    measured = (n_stages - 1) * t_tick / t1 if t1 > 0 else 0.0
+    return {
+        "pp": n_stages, "microbatches": m1,
+        "t_step_s": t1, "t_step_2m_s": t2, "t_tick_s": t_tick,
+        "bubble_predicted": bubble_fraction(n_stages, m1),
+        "bubble_measured": measured,
+    }

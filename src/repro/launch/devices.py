@@ -1,0 +1,26 @@
+"""XLA host-device-count bootstrap.
+
+One shared primitive for every entry point that fakes a multi-device CPU
+host (tests/conftest.py, launch/train.py, launch/dryrun.py,
+benchmarks/run.py).  Import is jax-free; the call must happen before the
+first jax backend initialization to have any effect.
+"""
+from __future__ import annotations
+
+import os
+
+_FLAG = "xla_force_host_platform_device_count"
+
+
+def force_host_device_count(n: int, override: bool = False) -> None:
+    """Append ``--xla_force_host_platform_device_count=<n>`` to XLA_FLAGS.
+
+    ``override=False`` respects a count already present in the
+    environment (e.g. CI's global setting); ``override=True`` appends
+    regardless — XLA honors the last occurrence of the flag, so the
+    appended value wins.  No-op on real accelerators.
+    """
+    flags = os.environ.get("XLA_FLAGS", "")
+    if _FLAG in flags and not override:
+        return
+    os.environ["XLA_FLAGS"] = (flags + f" --{_FLAG}={n}").strip()

@@ -1,6 +1,33 @@
 import os
-os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
-                           + " --xla_force_host_platform_device_count=512").strip()
+import sys
+
+from repro.launch.devices import force_host_device_count
+
+
+def _force_fake_devices(argv):
+    """Set the XLA host device count BEFORE the jax import below.
+
+    Pod meshes need 512 fake devices (override=True: the appended flag
+    wins over any smaller env default); '--topology host' keeps a small
+    live mesh (8, or whatever the environment already set) so compiled
+    steps can also be *executed* (e.g. the --measure_bubble pipeline
+    probe).  CLI-only: importing this module as a library leaves the
+    caller's device count alone.
+    """
+    topo = ""
+    for i, a in enumerate(argv):
+        if a == "--topology" and i + 1 < len(argv):
+            topo = argv[i + 1]
+        elif a.startswith("--topology="):
+            topo = a.split("=", 1)[1]
+    if topo == "host":
+        force_host_device_count(8)
+    else:
+        force_host_device_count(512, override=True)
+
+
+if __name__ == "__main__":          # before the jax import below
+    _force_fake_devices(sys.argv)
 
 """Multi-pod dry-run: lower + compile every (architecture x input shape) on
 the production meshes, and record memory / FLOP / collective statistics.
@@ -13,6 +40,8 @@ Usage:
   python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
   python -m repro.launch.dryrun --arch all --shape all [--multi_pod]
   python -m repro.launch.dryrun ... --out results/dryrun
+  python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k \
+      --topology host --reduced --strategy fsdp_pp2_mb8 --measure_bubble
 """
 import argparse
 import dataclasses
@@ -78,13 +107,24 @@ def resolve_strategy(cfg, shape, topo, strategy: str, dp_mode: str = "hsdp",
     return s
 
 
+def _topology(name: str, multi_pod: bool):
+    """'' keeps the legacy pod/multipod selection; 'host' is a live mesh."""
+    if name:
+        return strategy_lib.get_topology(name)
+    return strategy_lib.pod_topology(pods=2 if multi_pod else 1)
+
+
 def lower_one(arch: str, shape_name: str, multi_pod: bool,
               dp_mode: str = "hsdp", attn_override=None, rt_overrides=None,
               donate: bool = False, seq_parallel: bool = True,
-              grad_accum: int = 1, strategy: str = ""):
+              grad_accum: int = 1, strategy: str = "",
+              topology: str = "", use_reduced: bool = False):
+    from repro.configs import reduced
     cfg = get_config(arch)
+    if use_reduced:
+        cfg = reduced(cfg)
     shape = SHAPES[shape_name]
-    topo = strategy_lib.pod_topology(pods=2 if multi_pod else 1)
+    topo = _topology(topology, multi_pod)
     strat = resolve_strategy(cfg, shape, topo, strategy, dp_mode,
                              attn_override, seq_parallel)
     plan = strat.to_plan(cfg, topo, shape)
@@ -144,10 +184,13 @@ def lower_one(arch: str, shape_name: str, multi_pod: bool,
 
 
 def run_label(arch: str, shape_name: str, multi_pod: bool,
-              strategy: str = "", tag: str = ""):
+              strategy: str = "", tag: str = "", topology: str = ""):
     """(mesh_name, label) naming one sweep point — also its artifact path,
     so main()'s skip-if-existing check and run_one()'s writer must agree."""
-    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    if topology:
+        mesh_name = topology
+    else:
+        mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
     if strategy:
         mesh_name += f"_{strategy}"
     label = f"{arch}_{shape_name}_{mesh_name}" + (f"_{tag}" if tag else "")
@@ -158,8 +201,10 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
             dp_mode: str = "hsdp", attn_override=None, tag: str = "",
             rt_overrides=None, donate: bool = False,
             seq_parallel: bool = True, grad_accum: int = 1,
-            strategy: str = ""):
-    mesh_name, label = run_label(arch, shape_name, multi_pod, strategy, tag)
+            strategy: str = "", topology: str = "",
+            use_reduced: bool = False, measure_bubble: bool = False):
+    mesh_name, label = run_label(arch, shape_name, multi_pod, strategy, tag,
+                                 topology)
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
     if not supports_shape(cfg, shape):
@@ -174,7 +219,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
     try:
         cfg, shape, strat, plan, lowered = lower_one(
             arch, shape_name, multi_pod, dp_mode, attn_override,
-            rt_overrides, donate, seq_parallel, grad_accum, strategy)
+            rt_overrides, donate, seq_parallel, grad_accum, strategy,
+            topology, use_reduced)
         t_lower = time.time() - t0
         t0 = time.time()
         compiled = lowered.compile()
@@ -219,6 +265,27 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
                              if not callable(v)},
             "donate": donate,
         }
+        if strat.pp > 1:
+            # pipeline section: the analytic GPipe bubble, plus (on a live
+            # host mesh with --measure_bubble) the executed one, so the
+            # cost model's (P-1)/(M+P-1) term is validated, not assumed
+            from repro.core.pipeline import bubble_fraction
+            rec["pipeline"] = {
+                "pp": strat.pp, "microbatches": strat.microbatches,
+                "bubble_predicted": bubble_fraction(strat.pp,
+                                                    strat.microbatches),
+            }
+            # the probe only means something on a live host mesh: on a
+            # pod topology the 512 CPU-emulated fake devices would
+            # "measure" emulation overhead, not the schedule
+            topo_obj = _topology(topology, multi_pod)
+            if measure_bubble and topology == "host" and \
+                    topo_obj.n_devices <= len(jax.devices()):
+                from repro.configs import reduced
+                from repro.perf.pipeline_probe import measure_bubble as _probe
+                probe_cfg = reduced(get_config(arch),
+                                    n_layers=max(4, 2 * strat.pp))
+                rec["pipeline"].update(_probe(probe_cfg, strat, topo_obj))
         print(f"[dryrun] {label}: OK  compile {t_compile:.0f}s  "
               f"flops {rec['flops_compiled_analytic']:.3e}  "
               f"coll {rec['collective_bytes_total']:.3e}B  "
@@ -244,6 +311,16 @@ def main():
     ap.add_argument("--shape", default="all")
     ap.add_argument("--multi_pod", action="store_true")
     ap.add_argument("--both_meshes", action="store_true")
+    ap.add_argument("--topology", default="",
+                    help="'' = pod/multipod (512 fake devices); 'host' = "
+                         "small live mesh (compiled steps can execute, "
+                         "e.g. --measure_bubble)")
+    ap.add_argument("--reduced", action="store_true",
+                    help="smoke-scale variant of each arch")
+    ap.add_argument("--measure_bubble", action="store_true",
+                    help="for pp>1 strategies on a live topology, execute "
+                         "the GPipe schedule and record the measured "
+                         "bubble fraction next to the prediction")
     ap.add_argument("--strategy", default="",
                     help="'' = legacy pod layout (model axis 16), 'auto' = "
                          "planner, else a spec string like hsdp_tp4 / "
@@ -285,13 +362,21 @@ def main():
 
     archs = list_archs(assigned_only=True) if args.arch == "all" else [args.arch]
     shapes = list(SHAPES) if args.shape == "all" else [args.shape]
-    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    if args.topology:
+        # an explicit topology overrides the pod/multipod pair entirely —
+        # looping both meshes would run the identical config twice
+        meshes = [False]
+    elif args.both_meshes:
+        meshes = [False, True]
+    else:
+        meshes = [args.multi_pod]
 
     n_fail = 0
     for arch in archs:
         for shape in shapes:
             for mp in meshes:
-                _, label = run_label(arch, shape, mp, args.strategy, args.tag)
+                _, label = run_label(arch, shape, mp, args.strategy,
+                                     args.tag, args.topology)
                 path = os.path.join(args.out, label + ".json")
                 if args.skip_existing and os.path.exists(path):
                     with open(path) as f:
@@ -300,7 +385,9 @@ def main():
                             continue
                 rec = run_one(arch, shape, mp, args.out, args.dp_mode,
                               args.attn, args.tag, rt_overrides, args.donate,
-                              not args.no_sp, args.grad_accum, args.strategy)
+                              not args.no_sp, args.grad_accum, args.strategy,
+                              args.topology, args.reduced,
+                              args.measure_bubble)
                 n_fail += rec["status"] == "error"
     raise SystemExit(1 if n_fail else 0)
 

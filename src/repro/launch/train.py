@@ -20,6 +20,8 @@ import argparse
 import os
 import sys
 
+from repro.launch.devices import force_host_device_count
+
 
 def _force_host_devices(argv):
     """Set XLA host device count BEFORE jax import (CPU-only effect)."""
@@ -33,11 +35,8 @@ def _force_host_devices(argv):
         count = int(n)
     except ValueError:
         return                    # let argparse report the bad value
-    if count > 0 and "xla_force_host_platform_device_count" not in \
-            os.environ.get("XLA_FLAGS", ""):
-        os.environ["XLA_FLAGS"] = (
-            os.environ.get("XLA_FLAGS", "")
-            + f" --xla_force_host_platform_device_count={count}").strip()
+    if count > 0:
+        force_host_device_count(count)
 
 
 if __name__ == "__main__":          # before jax import below

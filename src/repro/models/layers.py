@@ -39,6 +39,12 @@ class Runtime:
     attn_impl: str = "jnp"              # 'jnp' | 'pallas' (TPU hot path)
     norm_impl: str = "jnp"              # 'jnp' | 'pallas' (fused rmsnorm VJP)
     constrain: Optional[Callable] = None  # (name, x) -> x sharding constraint
+    # pipeline parallelism (GPipe over a mesh axis, core/pipeline.py):
+    # set by parallel.make_runtime when the plan has a 'pipe' axis
+    pipeline_axis: str = ""             # mesh axis name ('' = no pipelining)
+    pipeline_microbatches: int = 1      # M microbatches per (GA-)minibatch
+    pipeline_mesh: Optional[object] = None   # Mesh the shard_map runs over
+    pipeline_batch_axes: tuple = ()     # batch-dim mesh axes inside the pipe
 
     def c(self, name: str, x):
         """Apply a named sharding constraint if a parallel plan is active."""

@@ -15,6 +15,7 @@ through the scan as xs/ys.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Any, Dict, Optional, Tuple
 
@@ -249,6 +250,20 @@ def forward(cfg: ModelConfig, params, batch, rt: Runtime,
     prefix, start, period, n_blocks = layer_plan(cfg)
     aux_total = jnp.zeros((), jnp.float32)
 
+    if rt.pipeline_axis and cache is None:
+        # GPipe path: the whole layer stack runs under core/pipeline.py's
+        # shard_map schedule (embed / final norm / head stay on the plain
+        # GSPMD path, replicated over the pipe axis).  Strategy.to_plan
+        # only hands out pipeline runtimes for uniform stacks.
+        if prefix or period != 1 or not n_blocks:
+            raise ValueError(
+                "pipeline runtime requires a uniform layer stack "
+                "(no prefix, period 1); Strategy.to_plan validates this")
+        h = _pipeline_blocks(cfg, params, h, rope_ang, rt)
+        h = apply_norm(params["final_norm"], h, cfg.norm_eps, rt)
+        logits = lm_logits(params["embed"], h, rt)
+        return logits, None, aux_total
+
     new_prefix_caches = []
     for j, i in enumerate(prefix):
         c = None if cache is None else cache["prefix"][j]
@@ -303,6 +318,33 @@ def forward(cfg: ModelConfig, params, batch, rt: Runtime,
     if cache is not None:
         new_cache = {"prefix": new_prefix_caches, "blocks": new_block_caches or []}
     return logits, new_cache, aux_total
+
+
+def _pipeline_blocks(cfg: ModelConfig, params, h, rope_ang, rt: Runtime):
+    """Apply the full (uniform, stacked) layer stack under the GPipe
+    schedule: split the batch into M microbatches, pipeline them over the
+    mesh 'pipe' axis (stage p owns the contiguous layer slice the param
+    sharding already placed there), and stitch the outputs back."""
+    from repro.core.pipeline import make_pipelined_block_fn, pipeline_apply
+
+    M = rt.pipeline_microbatches
+    B = h.shape[0]
+    if B % M:
+        raise ValueError(
+            f"batch {B} does not split into {M} pipeline microbatches "
+            "(grad_accum x microbatches must divide the global batch)")
+    # the stage body runs inside a fully-manual shard_map: named sharding
+    # constraints and per-block FSDP gathers are meaningless there
+    rt_stage = dataclasses.replace(rt, constrain=None, gather_params=None)
+    stage_fn = make_pipelined_block_fn(cfg, rt_stage)
+    # training positions are identical across rows -> rope with batch dim 1
+    # broadcasts over the (data-sharded) local microbatch inside the stage
+    rope_mb = None if rope_ang is None else rope_ang[:1]
+    x_mb = h.reshape((M, B // M) + h.shape[1:])
+    out = pipeline_apply(stage_fn, {"layers": params["blocks"][0]}, x_mb,
+                         rt.pipeline_mesh, rt.pipeline_axis, extras=rope_mb,
+                         batch_axes=rt.pipeline_batch_axes)
+    return rt.c("act_btd", out.reshape((B,) + out.shape[2:]))
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,82 @@
+"""Execute the GPipe schedule and *measure* its bubble fraction.
+
+The cost model charges pipeline parallelism a bubble of (P-1)/(M+P-1)
+(``costmodel.step_time`` / ``pipeline.bubble_fraction``).  This probe
+validates that analytic term against execution: it runs the exact
+``pipeline_apply`` lowering a ``Strategy(pp>1)`` trains with (fwd + bwd,
+real stage params) at fixed microbatch *size* for M and 2M microbatches,
+fits t(M) = t_tick * (M + P - 1) + overhead, and reports
+
+    bubble_measured = (P - 1) * t_tick / t(M)
+
+Used by ``launch/dryrun.py --measure_bubble`` (written into the dryrun
+artifact next to the prediction) and ``benchmarks/run.py --pp-sweep``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core import parallel as par
+from repro.core.pipeline import (make_pipelined_block_fn,
+                                 measure_bubble_fraction, pipeline_apply)
+
+
+def measure_bubble(cfg: ModelConfig, strat, topology,
+                   seq_len: int = 128, mb_rows: int = 2,
+                   n_iter: int = 3) -> dict:
+    """Measured vs predicted bubble for ``strat`` (pp > 1) on live devices.
+
+    The bubble is a property of the (P, M) schedule, not of model scale,
+    so callers may pass a ``reduced()`` config to keep the probe cheap —
+    the per-tick time only needs to dominate dispatch overhead.
+    """
+    assert strat.pp > 1, "bubble probe needs a pipeline strategy"
+    shape = ShapeConfig("pp-probe", seq_len,
+                        mb_rows * strat.microbatches * strat.grad_accum,
+                        "train")
+    plan = strat.to_plan(cfg, topology, shape)
+    rt = par.make_runtime(
+        cfg, plan, shape, param_dtype=jnp.float32,
+        compute_dtype=jnp.float32, remat=False,
+        attn_min_chunked_len=max(2048, seq_len + 1))
+    rt_stage = dataclasses.replace(rt, constrain=None, gather_params=None)
+    stage_fn = make_pipelined_block_fn(cfg, rt_stage)
+
+    from repro.models import transformer as tfm
+    from repro.models.layers import rope_angles
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    blocks = params["blocks"][0]
+    rope = None
+    if cfg.rope == "rope":
+        pos = jnp.arange(seq_len, dtype=jnp.int32)[None]
+        rope = rope_angles(pos, cfg.head_dim_, cfg.rope_theta)
+
+    def step_for_m(m: int):
+        x = jax.random.normal(jax.random.PRNGKey(1),
+                              (m, mb_rows, seq_len, cfg.d_model))
+
+        def loss(p):
+            out = pipeline_apply(stage_fn, {"layers": p}, x, plan.mesh,
+                                 plan.pipe, extras=rope,
+                                 batch_axes=tuple(plan.dp))
+            return jnp.sum(out ** 2)
+
+        with par.use_mesh(plan.mesh):
+            fn = jax.jit(jax.value_and_grad(loss))
+
+            def run():
+                with par.use_mesh(plan.mesh):
+                    return fn(blocks)
+
+            return run
+
+    with par.use_mesh(plan.mesh):
+        rec = measure_bubble_fraction(step_for_m, strat.pp,
+                                      strat.microbatches, n_iter=n_iter)
+    rec.update(probe_cfg=cfg.name, probe_seq_len=seq_len,
+               probe_mb_rows=mb_rows)
+    return rec

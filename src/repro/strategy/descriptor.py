@@ -21,9 +21,12 @@ Semantics of the degrees (mirrors DESIGN.md §4 / core/parallel.py):
   * ``cp``  shards the sequence on the 'model' axis (ring/gathered-KV
             attention).  tp and cp share the single model axis, so at most
             one may exceed 1.
-  * ``pp``  is analytic-only for now (GPipe bubble in the cost model); the
-            SPMD lowering rejects pp > 1 until core/pipeline.py is wired
-            into the mesh path.
+  * ``pp``  shards the layer stack over a 'pipe' mesh axis (contiguous
+            stages) and lowers through the differentiable GPipe schedule
+            in ``core/pipeline.py`` (shard_map + ppermute).  Requires a
+            uniform layer stack (no prefix / period-1 ``layer_plan``), a
+            layer count divisible by pp, and ``mb >= pp`` microbatches
+            (under-specified mb is a StrategyError, not a silent clamp).
   * ``dp_mode``  'hsdp' shards params inside an island and replicates
             across islands (adds a 'pod' axis when the topology spans
             more than one); 'fsdp' shards over the full data axis;
@@ -56,7 +59,7 @@ class Strategy:
     dp_mode: str = "hsdp"            # 'hsdp' | 'fsdp' | 'ddp'
     tp: int = 1                      # tensor-parallel degree (model axis)
     cp: int = 1                      # context-parallel degree (model axis)
-    pp: int = 1                      # pipeline degree (cost model only)
+    pp: int = 1                      # pipeline degree ('pipe' mesh axis)
     zero_stage: Optional[int] = None  # None -> 0 for ddp, 3 otherwise
     microbatches: int = 1            # pipeline microbatches per step
     grad_accum: int = 1
@@ -78,6 +81,14 @@ class Strategy:
             # predict-and-run contract honest
             raise StrategyError(
                 f"zero_stage {self.zero_stage!r} not in (None, 0, 2, 3)")
+        if self.pp > 1 and self.microbatches < self.pp:
+            # fewer microbatches than stages cannot fill the pipeline; the
+            # cost model used to clamp mb up to pp silently, letting the
+            # analytic price and the lowering diverge — reject instead
+            raise StrategyError(
+                f"pp={self.pp} needs microbatches >= pp to fill the "
+                f"pipeline (got mb={self.microbatches}); spec e.g. "
+                f"'fsdp_pp{self.pp}_mb{2 * self.pp}'")
 
     # ---- derived -----------------------------------------------------------
 
@@ -119,34 +130,62 @@ class Strategy:
 
     # ---- validation --------------------------------------------------------
 
-    def check(self, topology: Topology) -> None:
-        """Raise StrategyError if this strategy cannot lower on topology."""
+    def check(self, topology: Topology,
+              cfg: Optional[ModelConfig] = None) -> None:
+        """Raise StrategyError if this strategy cannot lower on topology.
+
+        Passing ``cfg`` additionally validates the model-dependent pipeline
+        constraints (uniform layer stack, layer count divisible by pp);
+        ``to_plan`` always does.
+        """
         n = topology.n_devices
         if self.tp > 1 and self.cp > 1:
             raise StrategyError(
                 "tp and cp share the single 'model' mesh axis; at most one "
                 f"may exceed 1 (got tp={self.tp}, cp={self.cp})")
-        if self.pp > 1:
+        if n % (self.model_axis * self.pp):
             raise StrategyError(
-                "pipeline parallelism is analytic-only (cost model); the "
-                "SPMD lowering does not express pp > 1 yet")
-        if n % self.model_axis:
-            raise StrategyError(
-                f"model axis {self.model_axis} does not divide "
-                f"{n} devices")
-        pods = self.n_pods(topology)
-        if pods > 1 and n % (pods * self.model_axis):
-            raise StrategyError(
-                f"HSDP pods={pods} x model={self.model_axis} does not "
+                f"model axis {self.model_axis} x pipe {self.pp} does not "
                 f"divide {n} devices")
+        pods = self.n_pods(topology)
+        if pods > 1 and n % (pods * self.model_axis * self.pp):
+            raise StrategyError(
+                f"HSDP pods={pods} x pipe={self.pp} x model="
+                f"{self.model_axis} does not divide {n} devices")
         if self.dp_degree(topology) < 1:
             raise StrategyError(
                 f"model_parallel={self.model_parallel} exceeds "
                 f"{n} devices")
+        if cfg is not None and self.pp > 1:
+            self._check_pipeline(cfg)
 
-    def lowerable(self, topology: Topology) -> bool:
+    def _check_pipeline(self, cfg: ModelConfig) -> None:
+        """Model-dependent pp constraints (GPipe stage assignment)."""
+        from repro.models.transformer import layer_plan
+        prefix, _start, period, n_blocks = layer_plan(cfg)
+        if prefix or period != 1 or not n_blocks:
+            raise StrategyError(
+                f"pp={self.pp} needs a uniform layer stack to form stages; "
+                f"{cfg.name} has layer_plan(prefix={len(prefix)}, "
+                f"period={period})")
+        if cfg.n_layers % self.pp:
+            raise StrategyError(
+                f"{cfg.n_layers} layers do not split into {self.pp} "
+                "contiguous pipeline stages")
+        if cfg.moe.n_experts and any(cfg.is_moe_layer(i)
+                                     for i in range(cfg.n_layers)):
+            raise StrategyError(
+                "pipeline stages drop the MoE aux loss; pp > 1 is not "
+                "expressible for MoE configs yet")
+        if cfg.rope == "mrope":
+            raise StrategyError(
+                "mrope angles are batch-dependent and cannot broadcast "
+                "across pipeline microbatches; pp > 1 unsupported")
+
+    def lowerable(self, topology: Topology,
+                  cfg: Optional[ModelConfig] = None) -> bool:
         try:
-            self.check(topology)
+            self.check(topology, cfg)
             return True
         except StrategyError:
             return False
@@ -160,10 +199,17 @@ class Strategy:
         ``abstract=True`` builds an ``AbstractMesh`` (group-size /
         PartitionSpec analysis without devices).
         """
-        self.check(topology)
+        self.check(topology, cfg)
+        if self.pp > 1 and shape.mode == "train":
+            per_step = self.grad_accum * self.microbatches
+            if shape.global_batch % per_step:
+                raise StrategyError(
+                    f"global_batch={shape.global_batch} does not split "
+                    f"into grad_accum={self.grad_accum} x "
+                    f"microbatches={self.microbatches}")
         pods = self.n_pods(topology)
         mesh = build_mesh(topology, model=self.model_axis, pods=pods,
-                          abstract=abstract)
+                          pipe=self.pp, abstract=abstract)
         attn = self.resolved_attn(cfg)
         has_pod = pods > 1
         dp: Tuple[str, ...] = ("pod", "data") if has_pod else ("data",)
@@ -177,7 +223,7 @@ class Strategy:
 
         # decode cache: shard sequence over model, and over data too when
         # the batch cannot occupy the data axis (long-context, batch=1)
-        data_size = topology.n_devices // self.model_axis
+        data_size = topology.n_devices // (self.model_axis * self.pp)
         if shape.mode == "decode" and shape.global_batch < data_size:
             cache_axes = (("pod", "data", "model") if has_pod
                           else ("data", "model"))
@@ -187,7 +233,9 @@ class Strategy:
         return par.ParallelPlan(
             mesh=mesh, dp=dp, fsdp=fsdp, tp="model", attn=attn, kv_tp=kv_tp,
             shape_mode=shape.mode, decode_cache_axes=cache_axes,
-            seq_parallel_residuals=self.seq_parallel)
+            seq_parallel_residuals=self.seq_parallel,
+            pipe="pipe" if self.pp > 1 else "",
+            microbatches=self.microbatches if self.pp > 1 else 1)
 
     # ---- lowering: cost model ----------------------------------------------
 
@@ -215,10 +263,12 @@ class Strategy:
                 "descriptor cannot lower in this regime, so it has no "
                 "coherent analytic price either")
         fsdp_group = dp // pods if pods > 1 else 0
+        # mb >= pp is enforced at construction, so the microbatch count the
+        # cost model's bubble term sees is exactly what the lowering runs
         return cm.Strategy(
             n_devices=topology.n_devices, tp=tp_c, pp=self.pp, cp=cp_c,
             zero_stage=self.zero,
-            microbatches=max(self.microbatches, self.pp),
+            microbatches=self.microbatches,
             fsdp_group=fsdp_group)
 
     # ---- spec strings ------------------------------------------------------

@@ -60,11 +60,14 @@ def evaluate(cfg: ModelConfig, strategy: Strategy, topology: Topology,
                         else train, remat=remat)
 
 
+DEFAULT_PPS = (1, 2, 4, 8)
+
+
 def candidates(topology: Topology, global_batch: int,
                dp_modes: Sequence[str] = ("hsdp",),
                tps: Iterable[int] = (1, 2, 4, 8, 16),
                cps: Iterable[int] = (1, 2, 4, 8),
-               pps: Iterable[int] = (1,),
+               pps: Iterable[int] = DEFAULT_PPS,
                zero_stages: Iterable[Optional[int]] = (None,),
                microbatches: int = 8) -> List[Strategy]:
     """Enumerate distinct strategy descriptors viable on ``topology``.
@@ -93,10 +96,11 @@ def candidates(topology: Topology, global_batch: int,
                         continue
                     if global_batch % dp and global_batch >= dp:
                         continue
+                    mb = max(microbatches, pp) if pp > 1 else 1
+                    if pp > 1 and global_batch % mb:
+                        continue       # microbatch split must divide batch
                     s = Strategy(dp_mode=mode, tp=tp, cp=cp, pp=pp,
-                                 zero_stage=zero,
-                                 microbatches=max(microbatches, pp)
-                                 if pp > 1 else 1)
+                                 zero_stage=zero, microbatches=mb)
                     if s.format() in seen:
                         continue
                     seen.add(s.format())
@@ -110,7 +114,7 @@ def search(cfg: ModelConfig, topology: Topology, shape: ShapeConfig,
            dp_modes: Sequence[str] = ("hsdp",),
            tps: Iterable[int] = (1, 2, 4, 8, 16),
            cps: Iterable[int] = (1, 2, 4, 8),
-           pps: Iterable[int] = (1,),
+           pps: Iterable[int] = DEFAULT_PPS,
            zero_stages: Iterable[Optional[int]] = (None,),
            microbatches: int = 8,
            top: Optional[int] = None) -> List[PlannedStrategy]:
@@ -131,7 +135,7 @@ def search(cfg: ModelConfig, topology: Topology, shape: ShapeConfig,
                        microbatches=microbatches)
     out: List[PlannedStrategy] = []
     for s in cands:
-        lowers = s.lowerable(topology)
+        lowers = s.lowerable(topology, cfg)
         if require_lowerable and not lowers:
             continue
         try:
@@ -184,5 +188,5 @@ def resolve(spec: str, cfg: ModelConfig, topology: Topology,
                 f"global_batch={shape.global_batch})")
         return planned.strategy, planned
     s = parse(spec)
-    s.check(topology)
+    s.check(topology, cfg)
     return s, None

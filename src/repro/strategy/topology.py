@@ -87,24 +87,29 @@ def get_topology(name: str, **kw) -> Topology:
 
 
 def build_mesh(topology: Topology, model: int = 1, pods: int = 1,
-               abstract: bool = False):
-    """Mesh for ``topology`` with a given model-axis degree.
+               pipe: int = 1, abstract: bool = False):
+    """Mesh for ``topology`` with given model- and pipe-axis degrees.
 
     pods > 1 adds a leading 'pod' axis (HSDP: params sharded inside the
-    island, replicated across pods).  ``abstract=True`` returns an
+    island, replicated across pods).  pipe > 1 adds a 'pipe' axis for
+    GPipe stages, placed outermost below 'pod' so stages span the slow
+    fabric first (pipeline p2p is the cheapest cross-island traffic —
+    the paper's argument for PP at scale).  ``abstract=True`` returns an
     ``AbstractMesh`` — enough for PartitionSpec/group-size analysis without
     any devices attached.
     """
     n = topology.n_devices
-    if n % (model * pods):
+    if n % (model * pods * pipe):
         raise ValueError(
-            f"mesh ({pods} pods x model {model}) does not divide "
-            f"{n} devices")
-    data = n // (model * pods)
-    if pods > 1:
-        shape, axes = (pods, data, model), ("pod", "data", "model")
-    else:
-        shape, axes = (data, model), ("data", "model")
+            f"mesh ({pods} pods x pipe {pipe} x model {model}) does not "
+            f"divide {n} devices")
+    data = n // (model * pods * pipe)
+    shape = (pods, pipe, data, model)
+    axes = ("pod", "pipe", "data", "model")
+    keep = [i for i, (a, s) in enumerate(zip(axes, shape))
+            if a in ("data", "model") or s > 1]
+    shape = tuple(shape[i] for i in keep)
+    axes = tuple(axes[i] for i in keep)
     if abstract:
         from jax.sharding import AbstractMesh
         return AbstractMesh(tuple(zip(axes, shape)))

@@ -40,6 +40,18 @@ def make_train_step(cfg: ModelConfig, rt: Runtime, tc: TrainConfig,
     total = total_steps or tc.steps
 
     def train_step(params, opt_state, batch):
+        B = batch["labels"].shape[0]
+        if B % max(tc.grad_accum, 1):
+            raise ValueError(
+                f"batch {B} does not split into grad_accum={tc.grad_accum}")
+        if rt.pipeline_microbatches > 1 and \
+                (B // max(tc.grad_accum, 1)) % rt.pipeline_microbatches:
+            # GA slices the batch first; each GA microbatch is then split
+            # into M pipeline microbatches — both must compose exactly
+            raise ValueError(
+                f"batch {B} / grad_accum {tc.grad_accum} does not split "
+                f"into {rt.pipeline_microbatches} pipeline microbatches")
+
         def loss(p):
             return tfm.loss_fn(cfg, p, batch, rt)
 
@@ -73,6 +85,25 @@ def make_train_step(cfg: ModelConfig, rt: Runtime, tc: TrainConfig,
         return params, opt_state, out
 
     return train_step
+
+
+def place_train_state(cfg: ModelConfig, plan: par.ParallelPlan, params,
+                      opt_state, batch):
+    """device_put existing (params, opt_state, batch) into the plan's
+    shardings -> (params, opt_state, batch, pshard, oshard).
+
+    The equivalence tests and benchmarks all need this exact layout (m/v
+    shard like params, scalar step replicated, batch per batch_specs);
+    one helper keeps the convention from drifting between call sites.
+    Call under ``par.use_mesh(plan.mesh)``.
+    """
+    pshard = par.param_shardings(cfg, plan, jax.eval_shape(lambda: params))
+    oshard = {"m": pshard, "v": pshard,
+              "step": par.fitted(plan, par.P(), ())}
+    return (jax.device_put(params, pshard),
+            jax.device_put(opt_state, oshard),
+            jax.device_put(batch, par.batch_specs(cfg, plan, batch)),
+            pshard, oshard)
 
 
 def shard_train_state(cfg: ModelConfig, plan: par.ParallelPlan, key,

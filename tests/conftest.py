@@ -1,13 +1,26 @@
 """Shared pytest config.
 
+Multi-device coverage: the whole suite runs under 8 virtual XLA host
+devices (set here, before any test imports jax and the CPU backend
+initializes), so pipeline/SPMD equivalence tests run in-process in tier-1
+instead of shelling out per test.  Respects an explicit XLA_FLAGS device
+count from the environment (CI sets the same value).
+
 Tier-1 must *collect* without optional dev deps: several test modules use
 hypothesis property tests.  When hypothesis is absent (the bare container),
 install a stub module whose ``@given`` turns each property test into a
 skip, so the plain unit tests in the same modules still run.  Install
 ``requirements-dev.txt`` to run the real property tests.
 """
+import os
 import sys
 import types
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir, "src"))
+
+from repro.launch.devices import force_host_device_count
+
+force_host_device_count(8)
 
 import pytest
 
@@ -26,7 +39,8 @@ def _install_hypothesis_stub():
         return None
 
     for name in ("floats", "integers", "booleans", "sampled_from", "lists",
-                 "tuples", "text", "one_of", "just"):
+                 "tuples", "text", "one_of", "just", "fixed_dictionaries",
+                 "dictionaries"):
         setattr(st, name, _strategy_stub)
 
     def given(*_a, **_k):
@@ -59,4 +73,14 @@ _install_hypothesis_stub()
 
 def pytest_configure(config):
     config.addinivalue_line(
-        "markers", "slow: multi-device subprocess tests (minutes)")
+        "markers", "slow: multi-device equivalence tests (minutes)")
+
+
+@pytest.fixture
+def eight_devices():
+    """The 8 virtual host devices the pipeline/SPMD tests mesh over."""
+    import jax
+    if len(jax.devices()) < 8:
+        pytest.skip("needs 8 devices; XLA_FLAGS was fixed before this "
+                    "conftest could set the virtual device count")
+    return jax.devices()[:8]

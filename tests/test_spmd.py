@@ -1,48 +1,125 @@
-"""Multi-device SPMD equivalence, run in a subprocess so the main pytest
-process keeps a single visible device (the brief forbids a global
---xla_force_host_platform_device_count)."""
-import os
-import subprocess
-import sys
-
+"""Multi-device SPMD equivalence (promoted from the ad-hoc
+tests/spmd_check.py subprocess script): the sharded train step
+(FSDP x TP / context-parallel plans on a (2, 4) mesh) produces the same
+loss/gradients as the single-device step, and a sharded decode step
+matches the unsharded one — in-process on the shared 8-virtual-device
+configuration from conftest."""
+import jax
+import jax.numpy as jnp
 import pytest
 
-SCRIPT = os.path.join(os.path.dirname(__file__), "spmd_check.py")
-SRC = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+from repro import strategy as strategy_lib
+from repro.configs import ShapeConfig, get_config, reduced
+from repro.core import parallel as par
+from repro.launch.specs import concrete_train_batch
+from repro.models import transformer as tfm
+from repro.models.layers import Runtime
+from repro.optim import init_opt_state
+from repro.train.trainer import (TrainConfig, make_train_step,
+                                 place_train_state)
+
+TOL = 5e-3
 
 
-def _run(which):
-    env = dict(os.environ)
-    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
-    env.pop("XLA_FLAGS", None)
-    res = subprocess.run([sys.executable, SCRIPT, which],
-                         capture_output=True, text=True, timeout=1200,
-                         env=env)
-    if res.returncode != 0:
-        raise AssertionError(
-            f"spmd_check {which} failed:\n{res.stdout[-4000:]}\n{res.stderr[-4000:]}")
-    assert "SPMD checks passed" in res.stdout
+def _plan(cfg, shape, attn_override=None):
+    """(2, 4) data x model plan over the host devices, via the unified
+    Strategy API (the deprecated choose_plan shim is no longer used)."""
+    s = strategy_lib.Strategy(dp_mode="fsdp", tp=4, attn=attn_override)
+    return s.to_plan(cfg, strategy_lib.host_topology(), shape)
+
+
+def _check_train(arch: str, attn_override=None):
+    cfg = reduced(get_config(arch), d_model=256)
+    shape = ShapeConfig("t", 64, 4, "train")
+    plan = _plan(cfg, shape, attn_override)
+    mesh = plan.mesh
+    rt_single = Runtime(rwkv_chunk=8, mamba_chunk=8, moe_impl="dropping",
+                        moe_groups=1, attn_min_chunked_len=32,
+                        attn_q_chunk=16, attn_kv_chunk=16)
+    rt_shard = par.make_runtime(
+        cfg, plan, shape, param_dtype=jnp.float32, compute_dtype=jnp.float32,
+        remat=False, rwkv_chunk=8, mamba_chunk=8,
+        attn_min_chunked_len=32, attn_q_chunk=64 if plan.attn == "context" else 16,
+        attn_kv_chunk=16, moe_impl="dropping")
+
+    key = jax.random.PRNGKey(0)
+    params = tfm.init_params(cfg, key)
+    batch = concrete_train_batch(cfg, shape.global_batch, shape.seq_len, key)
+    tc = TrainConfig()
+
+    # single device
+    p1, o1, m1 = make_train_step(cfg, rt_single, tc)(
+        params, init_opt_state(params), batch)
+
+    # sharded
+    with par.use_mesh(mesh):
+        params_s, opt_s, batch_s, pshard, _ = place_train_state(
+            cfg, plan, params, init_opt_state(params), batch)
+        step = jax.jit(make_train_step(cfg, rt_shard, tc),
+                       out_shardings=(pshard, None, None))
+        p2, o2, m2 = step(params_s, opt_s, batch_s)
+
+    dl = abs(float(m1["loss"]) - float(m2["loss"]))
+    dg = abs(float(m1["grad_norm"]) - float(m2["grad_norm"]))
+    rel_g = dg / max(float(m1["grad_norm"]), 1e-6)
+    # updated params agree
+    dp = max(float(jnp.max(jnp.abs(a - jax.device_get(b))))
+             for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)))
+    assert dl < TOL, (arch, dl)
+    assert rel_g < TOL, (arch, rel_g)
+    assert dp < 5e-2, (arch, dp)
+
+
+def _check_decode(arch: str):
+    cfg = reduced(get_config(arch), d_model=256)
+    shape = ShapeConfig("d", 64, 4, "decode")
+    plan = _plan(cfg, shape)
+    mesh = plan.mesh
+    rt0 = Runtime(rwkv_chunk=8, mamba_chunk=8, moe_impl="dense")
+    rt_s = par.make_runtime(cfg, plan, shape, param_dtype=jnp.float32,
+                            compute_dtype=jnp.float32, remat=False,
+                            rwkv_chunk=8, mamba_chunk=8, moe_impl="dense")
+
+    key = jax.random.PRNGKey(1)
+    params = tfm.init_params(cfg, key)
+    B, S0 = shape.global_batch, 17
+    tokens = jax.random.randint(key, (B, S0 + 1), 0, cfg.vocab_size)
+
+    _, cache0 = tfm.prefill(cfg, params, {"tokens": tokens[:, :S0]}, rt0,
+                            max_len=shape.seq_len)
+    logits0, _ = tfm.decode_step(cfg, params, cache0, tokens[:, S0:],
+                                 jnp.asarray(S0, jnp.int32), rt0)
+
+    with par.use_mesh(mesh):
+        pshard = par.param_shardings(cfg, plan, jax.eval_shape(lambda: params))
+        params_s = jax.device_put(params, pshard)
+        cshapes = jax.eval_shape(lambda: cache0)
+        cshard = par.cache_shardings(cfg, plan, cshapes)
+        cache_s = jax.device_put(cache0, cshard)
+        logits_s, _ = jax.jit(
+            lambda p, c, t, pos: tfm.decode_step(cfg, p, c, t, pos, rt_s),
+            out_shardings=(None, cshard))(
+                params_s, cache_s, tokens[:, S0:], jnp.asarray(S0, jnp.int32))
+
+    err = float(jnp.max(jnp.abs(logits0 - jax.device_get(logits_s))))
+    assert err < TOL, (arch, err)
 
 
 @pytest.mark.slow
-def test_sharded_train_equivalence():
-    _run("train")
+@pytest.mark.parametrize("arch,attn_override", [
+    ("qwen3-0.6b", None),                    # head_tp
+    ("qwen2-1.5b", "context"),               # CP
+    ("rwkv6-1.6b", None),
+    ("jamba-v0.1-52b", None),
+    ("deepseek-moe-16b", None),
+])
+def test_sharded_train_equivalence(eight_devices, arch, attn_override):
+    _check_train(arch, attn_override)
 
 
 @pytest.mark.slow
-def test_sharded_decode_equivalence():
-    _run("decode")
-
-
-@pytest.mark.slow
-def test_pipeline_parallel_equivalence():
-    script = os.path.join(os.path.dirname(__file__), "pipeline_check.py")
-    env = dict(os.environ)
-    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
-    env.pop("XLA_FLAGS", None)
-    res = subprocess.run([sys.executable, script], capture_output=True,
-                         text=True, timeout=1200, env=env)
-    if res.returncode != 0:
-        raise AssertionError(
-            f"pipeline_check failed:\n{res.stdout[-4000:]}\n{res.stderr[-4000:]}")
-    assert "PIPELINE checks passed" in res.stdout
+@pytest.mark.parametrize("arch", [
+    "qwen3-0.6b", "h2o-danube-1.8b", "jamba-v0.1-52b",
+])
+def test_sharded_decode_equivalence(eight_devices, arch):
+    _check_decode(arch)

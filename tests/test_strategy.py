@@ -4,11 +4,18 @@ SPMD-lowering group-size agreement, and planner search contracts.
 Group-size agreement uses AbstractMesh lowering (no devices needed), so
 the 512-chip pod topology is exercised on any host; search-lowers tests
 run on the real host mesh (however many devices pytest sees).
+
+Property tests (hypothesis, skipped when it is not installed): every
+spec string round-trips parse -> format -> parse, and for every valid
+strategy the collective group sizes ``to_cost_strategy`` reports equal
+the mesh axis sizes ``to_plan`` builds — including the 'pipe' axis.
 """
 import dataclasses
 
 import jax
 import pytest
+from hypothesis import assume, given, settings
+from hypothesis import strategies as st
 
 from repro import strategy as strategy_lib
 from repro.configs import SHAPES, get_config, reduced
@@ -68,11 +75,47 @@ def test_descriptor_validation():
     # tp and cp share the model axis
     with pytest.raises(StrategyError):
         Strategy(tp=2, cp=2).check(POD1)
-    # pipeline is analytic-only
+    # a pipeline that cannot fill (mb < pp) is a construction error
     with pytest.raises(StrategyError):
-        Strategy(pp=2).check(POD1)
+        Strategy(pp=2)
+    # pp > 1 lowers now (ISSUE 3): well-specified pipelines pass check
+    Strategy(pp=2, microbatches=4).check(POD1)
+    Strategy(pp=2, microbatches=4).check(POD1, LLAMA2_7B)
     assert not Strategy(tp=5).lowerable(POD1)       # 5 does not divide 256
     assert Strategy(tp=4).lowerable(POD1)
+
+
+def test_mb_lt_pp_is_error_not_silent_clamp():
+    """Regression (descriptor.py): under-specified mb < pp used to be
+    silently clamped to pp inside to_cost_strategy, so the cost model
+    priced a pipeline the lowering would not run.  Now it is a
+    StrategyError at validation time, and the analytic microbatch count
+    is exactly the descriptor's."""
+    with pytest.raises(StrategyError):
+        parse("fsdp_pp4_mb2")
+    with pytest.raises(StrategyError):
+        Strategy(pp=4, microbatches=2)
+    cost = Strategy(dp_mode="fsdp", pp=4, microbatches=16).to_cost_strategy(
+        LLAMA2_7B, POD1)
+    assert cost.microbatches == 16 and cost.pp == 4
+
+
+def test_pp_model_constraints():
+    """pp stages need a uniform layer stack; hybrids/MoE are rejected
+    with cfg-aware validation (and still lower fine without pp)."""
+    s = Strategy(dp_mode="fsdp", pp=2, microbatches=8)
+    s.check(POD1, LLAMA2_7B)                      # uniform: ok
+    jamba = get_config("jamba-v0.1-52b")
+    with pytest.raises(StrategyError):
+        s.check(POD1, jamba)                      # hybrid layer_plan
+    assert Strategy(dp_mode="fsdp").lowerable(POD1, jamba)
+    moe = get_config("deepseek-moe-16b")
+    with pytest.raises(StrategyError):
+        s.check(POD1, moe)
+    # layer count must split into contiguous stages
+    odd = dataclasses.replace(LLAMA2_7B, n_layers=31)
+    with pytest.raises(StrategyError):
+        s.check(POD1, odd)
 
 
 # ---------------------------------------------------------------------------
@@ -90,6 +133,8 @@ def _agreement(cfg, topo, shape=TRAIN, **search_kw):
         assert plan.axis_size(plan.dp) == cost.dp, s.format()
         # model-parallel group: the mesh model axis vs tp*cp charged
         assert plan.tp_size == cost.tp * cost.cp, s.format()
+        # pipeline stages: the mesh pipe axis vs the bubble term's P
+        assert plan.pipe_size == cost.pp, s.format()
         # FSDP collective group: the axes params shard over vs the group
         # the cost model charges AllGather/ReduceScatter for
         fsdp_size = plan.axis_size(plan.fsdp)
@@ -101,6 +146,11 @@ def _agreement(cfg, topo, shape=TRAIN, **search_kw):
 
 def test_groups_agree_llama_pod():
     _agreement(LLAMA2_7B, POD1, cps=(1, 2, 4, 8), tps=(1, 2, 4, 8, 16))
+
+
+def test_groups_agree_llama_pod_with_pp():
+    _agreement(LLAMA2_7B, POD1, tps=(1, 2, 4), cps=(1, 2),
+               pps=(1, 2, 4, 8))
 
 
 def test_groups_agree_llama_multipod_hsdp():
@@ -151,6 +201,62 @@ def test_hsdp_charges_island_group_and_cross_pod_ar():
 
 
 # ---------------------------------------------------------------------------
+# property tests (hypothesis; skip-stubbed when not installed)
+# ---------------------------------------------------------------------------
+
+def _strategy_kwargs():
+    return dict(
+        dp_mode=st.sampled_from(["hsdp", "fsdp", "ddp"]),
+        tp=st.sampled_from([1, 2, 4, 8]),
+        cp=st.sampled_from([1, 2, 4]),
+        pp=st.sampled_from([1, 2, 4]),
+        zero_stage=st.sampled_from([None, 0, 2, 3]),
+        microbatches=st.sampled_from([1, 4, 8, 16]),
+        grad_accum=st.sampled_from([1, 2, 4]),
+        attn=st.sampled_from([None, "head_tp", "context"]),
+        seq_parallel=st.booleans(),
+    )
+
+
+def _build(kw):
+    try:
+        return Strategy(**kw)
+    except StrategyError:
+        assume(False)
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.fixed_dictionaries(_strategy_kwargs()))
+def test_property_spec_round_trip(kw):
+    """parse(format(s)) == s for every constructible strategy."""
+    s = _build(kw)
+    assert parse(s.format()) == s
+    # and format is canonical: a second round-trip is a fixed point
+    assert parse(s.format()).format() == s.format()
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.fixed_dictionaries(_strategy_kwargs()))
+def test_property_group_sizes_match_mesh(kw):
+    """For every valid strategy, the collective group sizes the cost model
+    is charged equal the mesh axis sizes the lowering builds — dp, model,
+    and (now) pipe."""
+    s = _build(kw)
+    assume(s.lowerable(POD2, LLAMA2_7B))
+    shape = ShapeConfig("prop", 4096,
+                        max(256, s.grad_accum * s.microbatches), "train")
+    try:
+        plan = s.to_plan(LLAMA2_7B, POD2, shape, abstract=True)
+        cost = s.to_cost_strategy(LLAMA2_7B, POD2)
+    except StrategyError:
+        assume(False)
+    assert plan.axis_size(plan.dp) == cost.dp, s.format()
+    assert plan.tp_size == cost.tp * cost.cp, s.format()
+    assert plan.pipe_size == cost.pp, s.format()
+    assert plan.microbatches == (s.microbatches if s.pp > 1 else 1)
+
+
+# ---------------------------------------------------------------------------
 # planner
 # ---------------------------------------------------------------------------
 
@@ -189,6 +295,37 @@ def test_search_sweeps_cp_degrees():
     ranked = search(LLAMA2_7B, POD1, TRAIN, cps=(1, 2, 4, 8),
                     require_fits=False)
     assert any(p.strategy.cp > 1 for p in ranked)
+
+
+def test_search_returns_pp_candidates_by_default():
+    """The planner no longer filters pipeline parallelism out of the
+    default sweep: pp>1 candidates are ranked and lowerable."""
+    ranked = search(LLAMA2_7B, POD1, TRAIN, require_fits=False)
+    pp = [p for p in ranked if p.strategy.pp > 1]
+    assert pp, "no pp>1 strategies in the default sweep"
+    for p in pp:
+        assert p.lowers
+        assert p.strategy.microbatches >= p.strategy.pp
+        plan = p.strategy.to_plan(LLAMA2_7B, POD1, TRAIN, abstract=True)
+        assert plan.pipe_size == p.strategy.pp
+
+
+def test_pp_on_pareto_front_when_node_bandwidth_constrained():
+    """The paper's headline crossover: once inter-island bandwidth is
+    starved, pipeline parallelism overtakes pure sharded-DP — the planner
+    must surface it, not just price it."""
+    slow = dataclasses.replace(cm.H100, inter_bw=25e9, alpha_inter=25e-6)
+    topo = Topology("slow-fabric", 256, island=8, hardware="H100",
+                    hbm=80e9, hw_obj=slow)
+    ranked = search(LLAMA2_7B, topo, TRAIN, require_fits=False)
+    assert any(p.strategy.pp > 1 for p in ranked)
+    front = pareto_front(ranked, objectives=("wps", "tokens_per_joule"))
+    assert any(p.strategy.pp > 1 for p in front), \
+        [p.spec for p in front]
+    # and the pp winner actually beats the best pp=1 point on wps
+    best_pp = max(p.score for p in ranked if p.strategy.pp > 1)
+    best_flat = max(p.score for p in ranked if p.strategy.pp == 1)
+    assert best_pp > best_flat
 
 
 def test_pareto_front_subset_and_contains_best():

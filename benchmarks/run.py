@@ -172,6 +172,62 @@ def _kernel_microbenchmarks(out_path: str = "results/benchmarks/BENCH_kernels.js
     return summary
 
 
+def _measure_strategy_step(cfg, spec: str, shape, n_iter: int = 3):
+    """Shared sweep harness: lower ``spec`` for (cfg, host topology),
+    execute one compiled train step best-of-``n_iter``, and return
+    (strat, report, plan, rt, row) where ``row`` carries the common
+    predicted/measured fields — the pp/ep sweeps add their own columns."""
+    import jax
+    import jax.numpy as jnp
+    from repro import strategy as strategy_lib
+    from repro.core import parallel as par
+    from repro.launch.specs import concrete_train_batch
+    from repro.models import transformer as tfm
+    from repro.optim import init_opt_state
+    from repro.train.trainer import (TrainConfig, make_train_step,
+                                     place_train_state)
+
+    topo = strategy_lib.host_topology()
+    key = jax.random.PRNGKey(0)
+    strat = strategy_lib.parse(spec)
+    report = strategy_lib.evaluate(cfg, strat, topo, shape)
+    plan = strat.to_plan(cfg, topo, shape)
+    rt = par.make_runtime(cfg, plan, shape, param_dtype=jnp.float32,
+                          compute_dtype=jnp.float32, remat=False,
+                          attn_min_chunked_len=256)
+    params = tfm.init_params(cfg, key)
+    batch = concrete_train_batch(cfg, shape.global_batch, shape.seq_len, key)
+    with par.use_mesh(plan.mesh):
+        params_s, opt_s, batch_s, pshard, _ = place_train_state(
+            cfg, plan, params, init_opt_state(params), batch)
+        step = jax.jit(make_train_step(cfg, rt, TrainConfig()),
+                       out_shardings=(pshard, None, None))
+        jax.block_until_ready(step(params_s, opt_s, batch_s))  # compile
+        t_best = float("inf")
+        for _ in range(n_iter):
+            t0 = time.perf_counter()
+            jax.block_until_ready(step(params_s, opt_s, batch_s))
+            t_best = min(t_best, time.perf_counter() - t0)
+    row = {
+        "spec": spec,
+        "mesh": {k: int(v) for k, v in plan.mesh.shape.items()},
+        "predicted_hw": topo.hardware,
+        "predicted_t_step_s": report.t_step,
+        "measured_t_step_s": round(t_best, 4),
+        "measured_backend": jax.default_backend(),
+    }
+    return strat, report, plan, rt, row
+
+
+def _write_bench(out_path: str, payload: dict, n_rows: int):
+    out_dir = os.path.dirname(out_path)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"[bench] wrote {out_path} ({n_rows} rows)")
+
+
 def _pp_sweep(out_path: str = "results/benchmarks/BENCH_pipeline.json",
               pps=(1, 2, 4), n_iter: int = 3):
     """Predicted vs measured step time for pp in {1,2,4} on 8 virtual CPU
@@ -184,53 +240,21 @@ def _pp_sweep(out_path: str = "results/benchmarks/BENCH_pipeline.json",
     from repro.launch.devices import force_host_device_count
     force_host_device_count(8)
     import jax
-    import jax.numpy as jnp
     from repro import strategy as strategy_lib
     from repro.configs import ShapeConfig, get_config, reduced
-    from repro.core import parallel as par
-    from repro.launch.specs import concrete_train_batch
-    from repro.models import transformer as tfm
-    from repro.optim import init_opt_state
     from repro.perf.pipeline_probe import measure_bubble
-    from repro.train.trainer import (TrainConfig, make_train_step,
-                                     place_train_state)
 
     cfg = reduced(get_config("qwen3-0.6b"), n_layers=8)
     topo = strategy_lib.host_topology()
     shape = ShapeConfig("pp-sweep", 128, 16, "train")
-    key = jax.random.PRNGKey(0)
     rows, summary = [], []
     for pp in pps:
         spec = "fsdp" if pp == 1 else f"fsdp_pp{pp}_mb8"
-        strat = strategy_lib.parse(spec)
-        report = strategy_lib.evaluate(cfg, strat, topo, shape)
-        plan = strat.to_plan(cfg, topo, shape)
-        rt = par.make_runtime(cfg, plan, shape, param_dtype=jnp.float32,
-                              compute_dtype=jnp.float32, remat=False,
-                              attn_min_chunked_len=256)
-        params = tfm.init_params(cfg, key)
-        batch = concrete_train_batch(cfg, shape.global_batch,
-                                     shape.seq_len, key)
-        with par.use_mesh(plan.mesh):
-            params_s, opt_s, batch_s, pshard, _ = place_train_state(
-                cfg, plan, params, init_opt_state(params), batch)
-            step = jax.jit(make_train_step(cfg, rt, TrainConfig()),
-                           out_shardings=(pshard, None, None))
-            jax.block_until_ready(step(params_s, opt_s, batch_s))  # compile
-            t_best = float("inf")
-            for _ in range(n_iter):
-                t0 = time.perf_counter()
-                jax.block_until_ready(step(params_s, opt_s, batch_s))
-                t_best = min(t_best, time.perf_counter() - t0)
-        row = {
-            "spec": spec, "pp": pp, "microbatches": strat.microbatches,
-            "mesh": {k: int(v) for k, v in plan.mesh.shape.items()},
-            "predicted_hw": topo.hardware,
-            "predicted_t_step_s": report.t_step,
-            "predicted_wps": report.wps,
-            "measured_t_step_s": round(t_best, 4),
-            "measured_backend": jax.default_backend(),
-        }
+        strat, report, plan, rt, row = _measure_strategy_step(
+            cfg, spec, shape, n_iter)
+        t_best = row["measured_t_step_s"]
+        row.update(pp=pp, microbatches=strat.microbatches,
+                   predicted_wps=report.wps)
         if pp > 1:
             row.update(measure_bubble(cfg, strat, topo, n_iter=n_iter))
             rel = abs(row["bubble_measured"] - row["bubble_predicted"]) \
@@ -249,15 +273,57 @@ def _pp_sweep(out_path: str = "results/benchmarks/BENCH_pipeline.json",
         summary.append((f"pp_sweep_{spec}", t_best * 1e6,
                         f"bubble{row.get('bubble_measured', 0.0):.3f}"
                         f"_pred{row.get('bubble_predicted', 0.0):.3f}"))
-    out_dir = os.path.dirname(out_path)
-    if out_dir:
-        os.makedirs(out_dir, exist_ok=True)
-    with open(out_path, "w") as f:
-        json.dump({"backend": jax.default_backend(), "n_iter": n_iter,
-                   "arch": cfg.name, "shape": {"seq_len": shape.seq_len,
-                                               "global_batch": shape.global_batch},
-                   "rows": rows}, f, indent=1)
-    print(f"[bench] wrote {out_path} ({len(rows)} rows)")
+    _write_bench(out_path, {
+        "backend": jax.default_backend(), "n_iter": n_iter,
+        "arch": cfg.name, "shape": {"seq_len": shape.seq_len,
+                                    "global_batch": shape.global_batch},
+        "rows": rows}, len(rows))
+    return summary
+
+
+def _ep_sweep(out_path: str = "results/benchmarks/BENCH_moe.json",
+              eps=(1, 2, 4, 8), n_iter: int = 3):
+    """Predicted vs measured MoE step time across ep in {1,2,4,8} on 8
+    virtual CPU devices -> BENCH_moe.json (CI artifact).
+
+    Records the analytic step time and the exposed `moe_a2a` fraction per
+    ep degree next to the executed wall time of the EP shard_map dispatch.
+    Wall time on CPU is a regression signal, not a TPU claim; the
+    comparable trend is the a2a fraction trading against the shrinking
+    expert-param gathers as ep grows.
+    """
+    import dataclasses
+    from repro.launch.devices import force_host_device_count
+    force_host_device_count(8)
+    import jax
+    from repro.configs import ShapeConfig, get_config, reduced
+
+    # 8 routed experts so every ep in the sweep divides the expert count
+    cfg = reduced(get_config("deepseek-moe-16b"), max_experts=8)
+    cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+        cfg.moe, moe_start_layer=0))
+    shape = ShapeConfig("ep-sweep", 128, 16, "train")
+    rows, summary = [], []
+    for ep in eps:
+        spec = "fsdp" if ep == 1 else f"fsdp_ep{ep}"
+        _strat, report, _plan, rt, row = _measure_strategy_step(
+            cfg, spec, shape, n_iter)
+        a2a = report.comm_breakdown["moe_a2a"]
+        row.update(
+            ep=ep, moe_impl=rt.moe_impl,
+            predicted_moe_a2a_s=a2a,
+            predicted_exposed_a2a_frac=0.5 * a2a / report.t_step,
+            predicted_fsdp_ag_s=report.comm_breakdown["fsdp_ag"])
+        rows.append(row)
+        summary.append((f"ep_sweep_{spec}", row["measured_t_step_s"] * 1e6,
+                        f"a2afrac{row['predicted_exposed_a2a_frac']:.3f}"
+                        f"_impl{rt.moe_impl}"))
+    _write_bench(out_path, {
+        "backend": jax.default_backend(), "n_iter": n_iter,
+        "arch": cfg.name, "n_experts": cfg.moe.n_experts,
+        "shape": {"seq_len": shape.seq_len,
+                  "global_batch": shape.global_batch},
+        "rows": rows}, len(rows))
     return summary
 
 
@@ -303,6 +369,13 @@ def main() -> None:
                          "BENCH_pipeline.json")
     ap.add_argument("--pipeline_json",
                     default="results/benchmarks/BENCH_pipeline.json")
+    ap.add_argument("--ep-sweep", dest="ep_sweep", action="store_true",
+                    help="only run the expert-parallel sweep (predicted "
+                         "vs measured step time + exposed moe_a2a "
+                         "fraction for ep in {1,2,4,8} on 8 virtual "
+                         "devices) and write BENCH_moe.json")
+    ap.add_argument("--moe_json",
+                    default="results/benchmarks/BENCH_moe.json")
     args = ap.parse_args()
 
     if args.micro_kernels:
@@ -314,6 +387,13 @@ def main() -> None:
 
     if args.pp_sweep:
         rows = _pp_sweep(args.pipeline_json)
+        print("name,us_per_call,derived")
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},{derived}")
+        return
+
+    if args.ep_sweep:
+        rows = _ep_sweep(args.moe_json)
         print("name,us_per_call,derived")
         for name, us, derived in rows:
             print(f"{name},{us:.1f},{derived}")

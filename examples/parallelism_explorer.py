@@ -43,12 +43,13 @@ def main():
 
     print(f"{cfg.name} on {args.gpus}x {hw.name}, gb={args.global_batch}, "
           f"seq={args.seq_len}, ZeRO-{args.zero}, objective={args.objective}")
-    print(f"{'spec':>18} {'tp':>3} {'pp':>3} {'cp':>3} {'dp':>5} {'WPS':>12} "
+    print(f"{'spec':>18} {'tp':>3} {'pp':>3} {'cp':>3} {'ep':>3} {'dp':>5} "
+          f"{'WPS':>12} "
           f"{'MFU':>6} {'exposed':>8} {'W/gpu':>6} {'tok/J':>7} "
           f"{'mem GB':>7} fits runs pareto")
     for p in ranked[: args.top]:
         r, s = p.report, p.strategy
-        print(f"{p.spec:>18} {s.tp:>3} {s.pp:>3} {s.cp:>3} "
+        print(f"{p.spec:>18} {s.tp:>3} {s.pp:>3} {s.cp:>3} {s.ep:>3} "
               f"{r.strategy.dp:>5} {r.wps:>12,.0f} {r.mfu:>6.3f} "
               f"{r.t_comm_exposed / r.t_step:>8.1%} "
               f"{r.power_per_device:>6.0f} {r.tokens_per_joule:>7.2f} "

@@ -3,13 +3,12 @@ generate from it — the whole public API in ~40 lines.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import jax
 import jax.numpy as jnp
 
+from repro import strategy as strategy_lib
 from repro.configs import ShapeConfig, get_config, reduced
 from repro.core import parallel as par
 from repro.data import Batcher, SyntheticSource
-from repro.launch.mesh import make_host_mesh
 from repro.optim import AdamWConfig
 from repro.serve import ServeEngine
 from repro.train.trainer import TrainConfig, train_loop
@@ -17,9 +16,9 @@ from repro.train.trainer import TrainConfig, train_loop
 
 def main():
     cfg = reduced(get_config("qwen3-0.6b"))          # 2 layers, d_model 256
-    mesh = make_host_mesh(data=len(jax.devices()), model=1)
     shape = ShapeConfig("quickstart", seq_len=128, global_batch=8, mode="train")
-    plan = par.choose_plan(cfg, mesh, shape)
+    topo = strategy_lib.host_topology()
+    plan = strategy_lib.Strategy(dp_mode="fsdp").to_plan(cfg, topo, shape)
     rt = par.make_runtime(cfg, plan, shape, param_dtype=jnp.float32,
                           compute_dtype=jnp.float32, remat=False)
 

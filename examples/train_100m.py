@@ -8,16 +8,14 @@ On this CPU container the model runs on a 1-device mesh; on a TPU slice the
 identical script uses every chip (the plan/runtime adapt to the mesh).
 """
 import argparse
-import dataclasses
 
-import jax
 import jax.numpy as jnp
 
+from repro import strategy as strategy_lib
 from repro.configs import ShapeConfig
 from repro.configs.base import ModelConfig
 from repro.core import parallel as par
 from repro.data import Batcher, SyntheticSource
-from repro.launch.mesh import make_host_mesh
 from repro.optim import AdamWConfig
 from repro.train.trainer import TrainConfig, train_loop
 
@@ -38,9 +36,9 @@ def main():
 
     cfg = M100
     print(f"{cfg.name}: {cfg.param_count()/1e6:.1f}M params")
-    mesh = make_host_mesh(data=len(jax.devices()), model=1)
     shape = ShapeConfig("e2e", args.seq_len, args.global_batch, "train")
-    plan = par.choose_plan(cfg, mesh, shape)
+    topo = strategy_lib.host_topology()
+    plan = strategy_lib.Strategy(dp_mode="fsdp").to_plan(cfg, topo, shape)
     rt = par.make_runtime(cfg, plan, shape, param_dtype=jnp.float32,
                           compute_dtype=jnp.float32, remat=False)
 

@@ -32,7 +32,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, Iterable, List, Optional, Tuple
+from typing import Dict, Tuple
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.perf import flops as flops_lib
@@ -156,6 +156,10 @@ class Strategy:
     tp: int = 1                 # tensor-parallel degree
     pp: int = 1                 # pipeline-parallel degree
     cp: int = 1                 # context-parallel degree
+    ep: int = 1                 # expert-parallel degree (an 'expert' mesh
+                                # axis factored out of the data axis: the
+                                # batch shards over it, expert stacks shard
+                                # their E dim over it)
     zero_stage: int = 3         # 0: DDP, 2/3: sharded (paper: FSDP ~ ZeRO-2/3)
     microbatches: int = 1       # pipeline microbatches per step
     fsdp_group: int = 0         # param-shard group size; 0 -> full dp (FSDP).
@@ -164,6 +168,7 @@ class Strategy:
 
     @property
     def dp(self) -> int:
+        """Total data-parallel degree (includes the expert axis)."""
         return self.n_devices // (self.tp * self.pp * self.cp)
 
     @property
@@ -178,6 +183,9 @@ class Strategy:
         return (self.dp >= 1 and
                 self.dp * self.tp * self.pp * self.cp == self.n_devices and
                 self.dp % self.fsdp_n == 0 and
+                # expert axis is factored out of the (island-local) data
+                # group — both must split into whole ranks
+                self.dp % self.ep == 0 and self.fsdp_n % self.ep == 0 and
                 # a pipeline with fewer microbatches than stages cannot
                 # fill; pricing it would diverge from what the lowering
                 # runs (the descriptor rejects mb < pp at construction)
@@ -212,7 +220,7 @@ class StepReport:
         d.pop("comm_breakdown")
         d.pop("strategy")
         s = self.strategy
-        d.update(n=s.n_devices, tp=s.tp, pp=s.pp, cp=s.cp, dp=s.dp)
+        d.update(n=s.n_devices, tp=s.tp, pp=s.pp, cp=s.cp, ep=s.ep, dp=s.dp)
         return d
 
 
@@ -252,24 +260,48 @@ def step_time(cfg: ModelConfig, hw: Hardware, strat: Strategy,
                               "cp": 0.0, "moe_a2a": 0.0}
 
     # ---- sharded data parallel collectives (per layer) ---------------------
+    # MoE expert stacks are split out of the uniform per-layer bytes: with
+    # ep > 1 their E dim shards over the 'expert' axis permanently, so the
+    # ZeRO AllGather/ReduceScatter covers only the local 1/ep slice and
+    # runs over the reduced (data-only) group n_fsdp/ep — the lever that
+    # makes EP overtake pure FSDP once expert-param gathers cross islands.
     layer_param_bytes = P_bytes / L / (strat.tp * strat.pp)
+    mult = 3 if cfg.glu else 2
+    n_moe = sum(cfg.is_moe_layer(i) for i in range(L))
+    expert_bytes = (n_moe * cfg.moe.n_experts * mult * d *
+                    cfg.moe.expert_d_ff * 2) if cfg.moe.n_experts else 0.0
+    dense_layer_bytes = (P_bytes - expert_bytes) / L / (strat.tp * strat.pp)
+    moe_layer_bytes = (expert_bytes / n_moe / (strat.tp * strat.pp)
+                       if n_moe else 0.0)
     n_dp = strat.dp
     n_fsdp = strat.fsdp_n       # param-shard group (== dp unless HSDP)
     if strat.zero_stage >= 2 and n_fsdp > 1:
         # AllGather params fwd (+ bwd re-gather for ZeRO-3), ReduceScatter grads
-        ag_per_layer = t_all_gather(hw, layer_param_bytes, n_fsdp)
+        n_fsdp_e = max(n_fsdp // strat.ep, 1)
+        ag_dense = t_all_gather(hw, dense_layer_bytes, n_fsdp)
+        ag_moe = t_all_gather(hw, moe_layer_bytes / strat.ep, n_fsdp_e)
         n_ag = 2 if strat.zero_stage == 3 else 1
-        rs_per_layer = t_reduce_scatter(
-            hw, layer_param_bytes * GRAD_DTYPE_BYTES / 2, n_fsdp)
-        comm["fsdp_ag"] = L * n_ag * ag_per_layer
-        comm["fsdp_rs"] = (L * rs_per_layer) if train else 0.0
+        rs_dense = t_reduce_scatter(
+            hw, dense_layer_bytes * GRAD_DTYPE_BYTES / 2, n_fsdp)
+        rs_moe = t_reduce_scatter(
+            hw, moe_layer_bytes / strat.ep * GRAD_DTYPE_BYTES / 2, n_fsdp_e)
+        comm["fsdp_ag"] = n_ag * (L * ag_dense + n_moe * ag_moe)
+        comm["fsdp_rs"] = (L * rs_dense + n_moe * rs_moe) if train else 0.0
         win_fwd = PREFETCH_EFF * t_layer_fwd
         win_bwd = PREFETCH_EFF * t_layer_bwd
-        exposed_fsdp = L * max(0.0, ag_per_layer - win_fwd)
+        n_dense_l = L - n_moe
+
+        def _exposed_ag(win):
+            return (n_dense_l * max(0.0, ag_dense - win) +
+                    n_moe * max(0.0, ag_dense + ag_moe - win))
+
+        exposed_fsdp = _exposed_ag(win_fwd)
         if strat.zero_stage == 3:
-            exposed_fsdp += L * max(0.0, ag_per_layer - win_bwd)
+            exposed_fsdp += _exposed_ag(win_bwd)
         if train:
-            exposed_fsdp += L * max(0.0, rs_per_layer - win_bwd)
+            exposed_fsdp += (
+                n_dense_l * max(0.0, rs_dense - win_bwd) +
+                n_moe * max(0.0, rs_dense + rs_moe - win_bwd))
         if train and n_fsdp < n_dp:
             # HSDP: gradient shards all-reduced across the dp//n_fsdp
             # replicas once per step, ring over the slow inter-island
@@ -315,16 +347,29 @@ def step_time(cfg: ModelConfig, hw: Hardware, strat: Strategy,
         exposed_cp = 0.0
 
     # ---- MoE all-to-all ------------------------------------------------------
+    exposed_moe = 0.0
     if cfg.moe.n_experts:
-        n_moe = sum(cfg.is_moe_layer(i) for i in range(L))
         tok_bytes = (tokens / strat.dp / strat.cp) * cfg.moe.top_k * \
             cfg.moe.capacity_factor * d * 2
-        ep = min(strat.tp * strat.pp, cfg.moe.n_experts)
-        t_a2a = t_all_to_all(hw, tok_bytes, max(ep, 2)) * 2  # dispatch+combine
-        comm["moe_a2a"] = n_moe * t_a2a * (3 if train else 1)
-        exposed_moe = 0.5 * comm["moe_a2a"]
-    else:
-        exposed_moe = 0.0
+        # the dispatch/combine exchange crosses the expert-sharding group:
+        # the explicit 'expert' axis when ep > 1, else the model axis (the
+        # GSPMD dropping path reshards the (E, C, d) buffer over the whole
+        # 'model' axis — sized tp * cp, since context plans fold tp into
+        # cp; with no expert and no model axis the capacity dim stays
+        # data-local — no a2a)
+        ep_group = (strat.ep if strat.ep > 1
+                    else min(strat.tp * strat.cp, cfg.moe.n_experts))
+        if ep_group > 1:
+            # island crossing is set by the ranks the group spans on the
+            # device grid — 'model' is innermost, so an expert group of
+            # size ep spans ep * tp * cp consecutive ranks
+            span = ep_group * strat.tp * strat.cp if strat.ep > 1 \
+                else strat.tp * strat.cp
+            bw, alpha = _bw_alpha(hw, span)
+            t_a2a = 2 * (ep_group - 1) * max(
+                tok_bytes / (ep_group * bw), alpha)  # dispatch + combine
+            comm["moe_a2a"] = n_moe * t_a2a * (3 if train else 1)
+            exposed_moe = 0.5 * comm["moe_a2a"]
 
     # ---- pipeline ------------------------------------------------------------
     bubble = 0.0
@@ -371,34 +416,6 @@ def step_time(cfg: ModelConfig, hw: Hardware, strat: Strategy,
         memory_per_device=mem, fits=mem < hbm_capacity)
 
 
-def sweep_strategies(cfg: ModelConfig, hw: Hardware, n_devices: int,
-                     global_batch: int, seq_len: int,
-                     tps: Iterable[int] = (1, 2, 4, 8, 16),
-                     pps: Iterable[int] = (1, 2, 4, 8, 16),
-                     zero_stage: int = 3,
-                     hbm_capacity: float = 80e9,
-                     cps: Iterable[int] = (1,)) -> List[StepReport]:
-    """Deprecated shim — use ``repro.strategy.search``.
-
-    Kept for the Fig 6 (tp, pp) sweep callers; delegates to the planner so
-    the candidate set and pricing stay in one place.  The planner also
-    sweeps context-parallel degrees (pass ``cps``), which this legacy
-    entry point historically ignored.
-    """
-    from repro.strategy import Topology, planner
-    topo = Topology(hw.name, n_devices, island=hw.island, hardware=hw.name,
-                    hbm=hbm_capacity, hw_obj=hw)
-    shape = ShapeConfig("sweep", seq_len, global_batch, "train")
-    dp_mode = "ddp" if zero_stage == 0 else "fsdp"
-    ranked = planner.search(cfg, topo, shape, dp_modes=(dp_mode,), tps=tps,
-                            cps=cps, pps=pps, zero_stages=(zero_stage,),
-                            microbatches=8, require_fits=False,
-                            require_lowerable=False)
-    return [p.report for p in ranked]
-
-
-def best_strategy(reports: List[StepReport],
-                  require_fits: bool = True) -> Optional[StepReport]:
-    """Deprecated shim — use ``repro.strategy.best`` / ``search``[0]."""
-    cand = [r for r in reports if (r.fits or not require_fits)]
-    return max(cand, key=lambda r: r.wps) if cand else None
+# The deprecated ``sweep_strategies`` / ``best_strategy`` shims are gone:
+# use ``repro.strategy.search`` / ``repro.strategy.best`` (the planner
+# sweeps dp_mode x tp x cp x pp x ep and prices with this module).

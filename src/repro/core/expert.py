@@ -1,0 +1,123 @@
+"""Expert parallelism: sharded all-to-all dispatch over an 'expert' mesh axis.
+
+The paper's strongest case for "communication reorders the strategy
+ranking" is MoE training, where the dispatch/combine all-to-all is the
+dominant exposed-communication term.  This module makes that exchange
+*executable*: a ``Strategy(ep>1)`` plan shards the MoE expert stacks over
+an 'expert' mesh axis (factored out of the data axis, so the batch shards
+over ``(data, expert)`` together) and routes each MoE layer through a
+shard_map whose schedule is the textbook GShard pipeline:
+
+    route (local argsort)  ->  all-to-all (dispatch)  ->  expert FFN
+                           ->  all-to-all (combine)   ->  weighted sum
+
+Layout inside the shard_map (in_specs):
+
+  * tokens ``(T, d)``     — dim 0 sharded over *every* mesh axis
+    (``rt.expert_token_axes`` = batch axes + model).  Each rank routes a
+    disjoint token slice, so the shard_map transpose's psums of the
+    replicated-parameter cotangents (router, expert stacks' unmentioned
+    axes) sum *distinct* contributions — exact gradients, no scaling.
+  * expert stacks — E dim over 'expert' only.  Each expert rank owns
+    E/ep experts; GSPMD gathers the ZeRO-sharded non-E dims at entry
+    (that per-layer gather covers a 1/ep slice over a 1/ep-sized group —
+    the term ``costmodel.step_time`` prices).
+  * router — replicated.
+
+The dispatch builds a local ``(E, C, d)`` send buffer with the same
+scatter-free ``_routed_take`` index maps as the grouped-dropping path
+(source-rank-local capacity ``C = ceil(T_local * k * cf / E)``), then one
+``jax.lax.all_to_all`` over the 'expert' axis turns it into the
+``(E/ep, ep*C, d)`` receive buffer — token dropping is identical to the
+GSPMD dropping impl with one dispatch group per token shard.
+
+The aux load-balance loss is computed from *globally* psum-reduced load
+statistics (``Runtime.moe_stat_axes``), so it equals the dense oracle's
+value exactly — not a per-shard approximation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core.pipeline import _shard_map
+
+
+def token_shards(rt) -> int:
+    """Number of shards the flattened token dim splits into."""
+    mesh = rt.expert_mesh
+    return int(np.prod([mesh.shape[a] for a in rt.expert_token_axes] or [1]))
+
+def can_shard_tokens(cfg, rt, n_tokens: int) -> bool:
+    """True when the EP shard_map path can run for this token count.
+
+    Every mesh axis must shard the token dim (see module docstring: this
+    is what makes the transpose's psums exact), so T must split evenly
+    across all of them with at least one token per rank.
+    """
+    if not rt.expert_axis or rt.expert_mesh is None:
+        return False
+    if cfg.moe.n_experts % rt.expert_mesh.shape[rt.expert_axis]:
+        return False
+    shards = token_shards(rt)
+    return n_tokens % shards == 0 and n_tokens >= shards
+
+
+def moe_expert_parallel(cfg, p, xf, rt):
+    """xf (T, d) -> (y (T, d), aux) through expert-sharded dispatch.
+
+    Shared experts are handled by the caller (``apply_moe``) on the plain
+    GSPMD path — they are dense and need no dispatch.
+    """
+    from repro.models.moe import (_expert_ffn, _route_capacity, _routed_take,
+                                  _router)
+
+    m = cfg.moe
+    T, d = xf.shape
+    k, E = m.top_k, m.n_experts
+    mesh = rt.expert_mesh
+    axis = rt.expert_axis
+    ep = mesh.shape[axis]
+    tok_axes = tuple(rt.expert_token_axes)
+    shards = token_shards(rt)
+    assert T % shards == 0 and E % ep == 0, (T, shards, E, ep)
+    T_loc = T // shards
+    # per-source-rank capacity: same formula as one dropping group of
+    # T_loc tokens, so dropping behavior matches groups == token shards
+    C = int(math.ceil(T_loc * k * m.capacity_factor / E))
+    C = max(8, -(-C // 8) * 8)                               # pad to 8
+
+    # constraints are meaningless inside the fully-manual shard_map;
+    # the psum axes make the router's balance stats global
+    rt_loc = dataclasses.replace(rt, constrain=None, moe_stat_axes=tok_axes)
+    stack = {n: p[n] for n in ("w_up", "w_gate", "w_down") if n in p}
+
+    def body(router, stack_loc, x_loc):
+        # x_loc (T_loc, d): this rank's token slice
+        _, weights, ids, aux = _router(cfg, {"router": router}, x_loc, rt_loc)
+        dest, inv = _route_capacity(ids.reshape(T_loc * k), E, C)
+        x_items = jnp.broadcast_to(
+            x_loc[:, None], (T_loc, k, d)).reshape(T_loc * k, d)
+        buf = _routed_take(x_items, inv, dest).reshape(E, C, d)
+        # dispatch: (E, C, d) -> (E/ep, ep*C, d) — every rank keeps its
+        # own experts' rows from all ep peers in the group
+        buf = jax.lax.all_to_all(buf, axis, 0, 1, tiled=True)
+        out = _expert_ffn(cfg, stack_loc, buf, rt_loc)       # (E/ep, ep*C, d)
+        # combine: the exact reverse exchange
+        out = jax.lax.all_to_all(out, axis, 1, 0, tiled=True)
+        rows = _routed_take(out.reshape(E * C, d), dest, inv)  # (T_loc*k, d)
+        y = (rows.reshape(T_loc, k, d) *
+             weights[..., None].astype(rows.dtype)).sum(axis=1)
+        return y, aux
+
+    tok_spec = P(tok_axes if len(tok_axes) > 1 else tok_axes[0], None)
+    stack_spec = jax.tree.map(lambda _: P(axis, None, None), stack)
+    fn = _shard_map(body, mesh,
+                    in_specs=(P(), stack_spec, tok_spec),
+                    out_specs=(tok_spec, P()))
+    return fn(p["router"], stack, xf)

@@ -28,8 +28,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import functools
-import math
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import numpy as np
@@ -69,6 +68,9 @@ class ParallelPlan:
     seq_parallel_residuals: bool = True  # Megatron-SP residual stream
     pipe: str = ""                       # pipeline mesh axis ('' = no PP)
     microbatches: int = 1                # GPipe microbatches per minibatch
+    expert: str = ""                     # expert mesh axis ('' = no EP);
+                                         # factored out of the data axis, so
+                                         # it also appears in dp/fsdp
 
     @property
     def tp_size(self) -> int:
@@ -78,50 +80,24 @@ class ParallelPlan:
     def pipe_size(self) -> int:
         return self.mesh.shape[self.pipe] if self.pipe else 1
 
+    @property
+    def ep_size(self) -> int:
+        return self.mesh.shape[self.expert] if self.expert else 1
+
+    @property
+    def fsdp_no_expert(self) -> Tuple[str, ...]:
+        """Param-shard axes for tensors already sharded over 'expert'
+        (the non-E dims of expert stacks must not reuse the axis)."""
+        return tuple(a for a in self.fsdp if a != self.expert)
+
     def axis_size(self, axes) -> int:
         return int(np.prod([self.mesh.shape[a] for a in axes])) if axes else 1
 
 
-def choose_plan(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig,
-                dp_mode: str = "hsdp", attn_override: Optional[str] = None,
-                seq_parallel: bool = True) -> ParallelPlan:
-    """Deprecated shim — build plans via ``repro.strategy`` instead.
-
-    ``repro.strategy.Strategy(...).to_plan(cfg, topology, shape)`` is the
-    supported path: the same descriptor feeds the cost model, so planner
-    rankings and SPMD lowerings cannot drift apart.  This entry point
-    derives a plan from an *already built* mesh and is kept only for
-    callers that construct meshes by hand.
-    """
-    axes = mesh.axis_names
-    assert "data" in axes and "model" in axes, axes
-    has_pod = "pod" in axes
-    dp = ("pod", "data") if has_pod else ("data",)
-    # HSDP (default): shard params inside the pod, replicate across pods
-    # (grad all-reduce over 'pod' crosses the slow DCN once per step).
-    fsdp = ("data",) if (has_pod and dp_mode == "hsdp") else dp
-
-    tp_size = mesh.shape["model"]
-    if attn_override:
-        attn = attn_override
-    elif cfg.mixer != "attn" and cfg.attn_every <= 1:
-        attn = "head_tp"          # no attention layers at all (rwkv)
-    else:
-        attn = "head_tp" if cfg.n_heads % tp_size == 0 else "context"
-    kv_tp = attn == "head_tp" and cfg.kv_heads % tp_size == 0
-
-    # decode cache: shard sequence over model, and over data too when the
-    # batch cannot occupy the data axis (long-context, global_batch=1)
-    data_size = int(np.prod([mesh.shape[a] for a in dp]))
-    if shape.mode == "decode" and shape.global_batch < data_size:
-        cache_axes = ("data", "model") if not has_pod else ("pod", "data", "model")
-    else:
-        cache_axes = ("model",)
-
-    return ParallelPlan(mesh=mesh, dp=dp, fsdp=fsdp, tp="model", attn=attn,
-                        kv_tp=kv_tp, shape_mode=shape.mode,
-                        decode_cache_axes=cache_axes,
-                        seq_parallel_residuals=seq_parallel)
+# The deprecated ``choose_plan`` shim (plan from an already-built mesh) is
+# gone: build plans via ``repro.strategy.Strategy(...).to_plan`` — the same
+# descriptor feeds the cost model, so planner rankings and SPMD lowerings
+# cannot drift apart.
 
 
 # ---------------------------------------------------------------------------
@@ -223,6 +199,15 @@ def _param_spec(cfg: ModelConfig, plan: ParallelPlan, path: Tuple[str, ...],
         return spec(f, None)
     # MoE expert stacks (E, d, f) / (E, f, d)
     if base_ndim == 3 and leaf in ("w_up", "w_gate", "w_down"):
+        if plan.expert:
+            # EP: the E dim shards over the 'expert' axis permanently (no
+            # gather over it — that is the point of expert parallelism);
+            # the d dim ZeRO-shards over the remaining data axes and the
+            # hidden dim takes the model axis
+            f_ne = plan.fsdp_no_expert or None
+            return spec(plan.expert,
+                        f_ne if leaf != "w_down" else m,
+                        m if leaf != "w_down" else f_ne)
         return spec(m, f if leaf != "w_down" else None,
                     f if leaf == "w_down" else None)
     if in_attention:
@@ -380,9 +365,17 @@ def make_runtime(cfg: ModelConfig, plan: ParallelPlan, shape: ShapeConfig,
         compute_dtype=jnp.bfloat16,
         remat=shape.mode == "train",
         constrain=make_constrainer(cfg, plan),
-        moe_impl="dropping" if cfg.moe.n_experts else "auto",
+        moe_impl=("ep" if plan.expert else "dropping")
+        if cfg.moe.n_experts else "auto",
         moe_groups=plan.axis_size(plan.dp),
     )
+    if plan.expert:
+        # shard_map EP path (core/expert.py): tokens shard over every
+        # mesh axis (batch axes + model) so the transpose's psums are
+        # exact; the dispatch/combine all-to-all runs over expert_axis
+        kw.update(expert_axis=plan.expert,
+                  expert_mesh=plan.mesh,
+                  expert_token_axes=tuple(plan.dp) + (plan.tp,))
     if plan.pipe and shape.mode != "decode":
         # GPipe path (train / cache-less prefill); decode steps thread a
         # cache and take the sequential scan over the pipe-sharded stack

@@ -63,8 +63,10 @@ def pipeline_apply(stage_fn: Callable, stage_params, x_microbatches,
                    batch_axes: Sequence[str] = ()):
     """Run x through P stages of stage_fn under a GPipe schedule.
 
-    stage_fn: (stage_params_local, h, extras) -> h, applied by every stage
-      on its local slice of the stacked layer params.
+    stage_fn: (stage_params_local, h, extras) -> (h, aux), applied by every
+      stage on its local slice of the stacked layer params; ``aux`` is a
+      float32 scalar per-stage extra loss (the MoE load-balance term) that
+      rides along the activation through the schedule.
     stage_params: pytree whose leaves have a leading stack dim divisible by
       the pipe axis size (sharded contiguously over ``axis``: stage p gets
       slice [p*L/P, (p+1)*L/P)).
@@ -72,7 +74,8 @@ def pipeline_apply(stage_fn: Callable, stage_params, x_microbatches,
       dim is sharded over ``batch_axes`` when divisible, else replicated.
     extras: pytree broadcast to every stage unsharded (e.g. rope angles
       with batch dim 1).
-    Returns (M, mb, ...) outputs, sharded like x.
+    Returns ((M, mb, ...) outputs sharded like x, aux summed over
+    microbatches and stages — a replicated scalar).
     """
     n_stages = mesh.shape[axis]
     kept = batch_axes_spec(mesh, batch_axes, x_microbatches.shape[1])
@@ -84,38 +87,61 @@ def pipeline_apply(stage_fn: Callable, stage_params, x_microbatches,
         M = xs.shape[0]
         mb_shape = xs.shape[1:]
         state = jnp.zeros(mb_shape, xs.dtype)          # activation in flight
+        # its running aux loss — carried as shape (1,), never a scalar:
+        # scalar shard_map residuals break the jax<=0.4 transpose (they
+        # cannot take the residuals' dim-0 sharding)
+        aux_state = jnp.zeros((1,), jnp.float32)
         outputs = jnp.zeros_like(xs)
+        aux_out = jnp.zeros((M,), jnp.float32)
 
         def tick(carry, t):
-            state, outputs = carry
+            state, aux_state, outputs, aux_out = carry
             # stage 0 ingests microbatch t (while valid)
             inject = xs[jnp.minimum(t, M - 1)]
             h = jnp.where(stage == 0, inject, state)
-            h = stage_fn(params_local, h, extras_local)
+            a = jnp.where(stage == 0, 0.0, aux_state)
+            h, a_stage = stage_fn(params_local, h, extras_local)
+            a = a + a_stage.astype(jnp.float32).reshape((1,))
             # last stage emits microbatch t - (P-1)
             out_slot = t - (n_stages - 1)
             valid = (out_slot >= 0) & (out_slot < M)
+            emit = valid & (stage == n_stages - 1)
             outputs = jax.lax.cond(
-                valid & (stage == n_stages - 1),
+                emit,
                 lambda o: jax.lax.dynamic_update_slice(
                     o, h[None], (jnp.maximum(out_slot, 0),) + (0,) * h.ndim),
                 lambda o: o, outputs)
-            # hand activation to the next stage
-            state = jax.lax.ppermute(
-                h, axis, [(i, (i + 1) % n_stages) for i in range(n_stages)])
-            return (state, outputs), None
+            aux_out = jax.lax.cond(
+                emit,
+                lambda o: jax.lax.dynamic_update_slice(
+                    o, a, (jnp.maximum(out_slot, 0),)),
+                lambda o: o, aux_out)
+            # hand activation (+ its aux so far) to the next stage
+            perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+            state = jax.lax.ppermute(h, axis, perm)
+            aux_state = jax.lax.ppermute(a, axis, perm)
+            return (state, aux_state, outputs, aux_out), None
 
-        (state, outputs), _ = jax.lax.scan(
-            tick, (state, outputs), jnp.arange(M + n_stages - 1))
-        # only the last stage's buffer holds real outputs; select+broadcast
+        (state, aux_state, outputs, aux_out), _ = jax.lax.scan(
+            tick, (state, aux_state, outputs, aux_out),
+            jnp.arange(M + n_stages - 1))
+        # only the last stage's buffer holds real outputs; select+broadcast.
+        # aux leaves as the (M,) per-microbatch vector, reduced outside the
+        # shard_map — a scalar output that doubles as a backward residual
+        # trips jax<=0.4's transpose (scalars cannot take the residuals'
+        # dim-0 sharding)
         mask = (stage == n_stages - 1).astype(outputs.dtype)
-        return jax.lax.psum(outputs * mask, axis)
+        outputs = jax.lax.psum(outputs * mask, axis)
+        aux_mb = jax.lax.psum(
+            aux_out * (stage == n_stages - 1).astype(jnp.float32), axis)
+        return outputs, aux_mb
 
     pspec = jax.tree.map(lambda _: P(axis), stage_params)
     espec = jax.tree.map(lambda _: P(), extras)
     fn = _shard_map(per_stage, mesh, in_specs=(pspec, x_spec, espec),
-                    out_specs=x_spec)
-    return fn(stage_params, x_microbatches, extras)
+                    out_specs=(x_spec, P()))
+    outputs, aux_mb = fn(stage_params, x_microbatches, extras)
+    return outputs, aux_mb.sum()
 
 
 def make_pipelined_block_fn(cfg, rt):
@@ -124,7 +150,9 @@ def make_pipelined_block_fn(cfg, rt):
     ``extras`` carries the rope angles (batch dim 1, broadcast over the
     local microbatch).  The Runtime must have ``constrain=None``: the
     stage body runs inside a fully-manual shard_map where named-sharding
-    constraints are meaningless.
+    constraints are meaningless.  Returns (h, aux): the per-stage sum of
+    the MoE load-balance losses of this stage's layers (zeros for dense
+    stacks), which ``pipeline_apply`` threads through the schedule.
     """
     from repro.models.transformer import _apply_layer, _sig
 
@@ -135,11 +163,13 @@ def make_pipelined_block_fn(cfg, rt):
 
     def stage_fn(stage_params, h, rope_ang):
         # stage_params: {'layers': pytree stacked (L_per_stage, ...)}
-        def body(h_, lp):
-            h2, _, _ = apply(cfg, sig, lp, h_, rope_ang, rt)
-            return h2, None
-        h, _ = jax.lax.scan(body, h, stage_params["layers"])
-        return h
+        def body(carry, lp):
+            h_, aux_ = carry
+            h2, _, a = apply(cfg, sig, lp, h_, rope_ang, rt)
+            return (h2, aux_ + a), None
+        (h, aux), _ = jax.lax.scan(
+            body, (h, jnp.zeros((), jnp.float32)), stage_params["layers"])
+        return h, aux
 
     return stage_fn
 

@@ -239,7 +239,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
             "strategy_arg": strategy or "legacy-default",
             "plan": {
                 "attn": plan.attn, "kv_tp": plan.kv_tp, "dp": list(plan.dp),
-                "fsdp": list(plan.fsdp),
+                "fsdp": list(plan.fsdp), "expert": plan.expert,
                 "mesh": {k: int(v) for k, v in plan.mesh.shape.items()},
                 "decode_cache_axes": list(plan.decode_cache_axes)},
             "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),

@@ -56,16 +56,20 @@ def main():
         plan = strat.to_plan(cfg, topo, shape)
         print(f"[strategy] {strat.format()} on {topo.name} "
               f"(mesh {dict(plan.mesh.shape)}, attn={plan.attn})")
+        # moe_impl / moe_groups come from the resolved plan (make_runtime:
+        # 'ep' when the plan has an expert axis, 'dropping' otherwise) —
+        # the served model must run the same dispatch the plan shards for
         rt = par.make_runtime(cfg, plan, shape, remat=False,
                               rwkv_chunk=16, mamba_chunk=32,
-                              moe_impl="dense",
                               attn_impl=args.kernels, norm_impl=args.kernels)
         params = init_params(cfg, key)
         pshard = par.param_shardings(
             cfg, plan, jax.eval_shape(lambda: params))
         params = jax.device_put(params, pshard)
     else:
-        rt = Runtime(rwkv_chunk=16, mamba_chunk=32, moe_impl="dense",
+        # single-device path: 'auto' picks the dense oracle for small
+        # token counts and the dropping dispatch above the threshold
+        rt = Runtime(rwkv_chunk=16, mamba_chunk=32, moe_impl="auto",
                      attn_impl=args.kernels, norm_impl=args.kernels)
         params = init_params(cfg, key)
     engine = ServeEngine(cfg, params, rt, max_len=max_len, plan=plan)

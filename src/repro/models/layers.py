@@ -27,8 +27,12 @@ class Runtime:
     attn_min_chunked_len: int = 2048    # below this, plain masked attention
     rwkv_chunk: int = 64
     mamba_chunk: int = 256
-    moe_impl: str = "auto"              # 'dense' | 'dropping' | 'auto'
+    moe_impl: str = "auto"              # 'dense' | 'dropping' | 'ep' | 'auto'
     moe_groups: int = 1                 # data shards = dispatch groups
+    moe_stat_axes: tuple = ()           # mesh axes to psum router load stats
+                                        # over (set inside shard_map bodies —
+                                        # EP dispatch / pipeline stages — so
+                                        # the aux loss sees global counts)
     remat_inner: bool = False           # additionally checkpoint each layer
                                         # inside a scanned block (hybrids)
     gather_params: Optional[Callable] = None
@@ -45,6 +49,11 @@ class Runtime:
     pipeline_microbatches: int = 1      # M microbatches per (GA-)minibatch
     pipeline_mesh: Optional[object] = None   # Mesh the shard_map runs over
     pipeline_batch_axes: tuple = ()     # batch-dim mesh axes inside the pipe
+    # expert parallelism (sharded all-to-all dispatch, core/expert.py):
+    # set by parallel.make_runtime when the plan has an 'expert' axis
+    expert_axis: str = ""               # mesh axis of the EP all-to-all
+    expert_mesh: Optional[object] = None     # Mesh the EP shard_map runs over
+    expert_token_axes: tuple = ()       # mesh axes sharding the token dim
 
     def c(self, name: str, x):
         """Apply a named sharding constraint if a parallel plan is active."""

@@ -44,19 +44,33 @@ def init_moe(cfg, key):
     return p
 
 
-def _router(cfg, p, xf):
-    """xf (T, d) -> probs (T, E) fp32, weights/ids (T, k), aux loss."""
+def _router(cfg, p, xf, rt: Runtime = None):
+    """xf (T, d) -> probs (T, E) fp32, weights/ids (T, k), aux loss.
+
+    Inside a shard_map body (EP dispatch, pipeline stages) ``xf`` is the
+    *local* token shard; ``rt.moe_stat_axes`` names the mesh axes to
+    psum the load statistics over so the switch-style balance loss is
+    computed from global counts — identical on every shard, and equal to
+    what the single-device oracle computes on the full batch.
+    """
     m = cfg.moe
     logits = jnp.einsum("td,de->te", xf.astype(jnp.float32),
                         p["router"].astype(jnp.float32))
     probs = jax.nn.softmax(logits, axis=-1)
     weights, ids = jax.lax.top_k(probs, m.top_k)             # (T, k)
     weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
-    # switch-style load-balance loss
-    T = xf.shape[0]
+    # switch-style load-balance loss.  Every shard holds the same local
+    # token count, so the global fractions are the pmean of the local
+    # ones — pmean keeps the divisor static (a traced token-count
+    # denominator would become a scalar residual, which the shard_map
+    # transpose cannot shard over the mesh axes)
     occupancy = jnp.zeros((m.n_experts,), jnp.float32).at[ids.reshape(-1)].add(1.0)
-    frac_tokens = occupancy / (T * m.top_k)
+    frac_tokens = occupancy / (xf.shape[0] * m.top_k)
     frac_probs = probs.mean(0)
+    axes = tuple(rt.moe_stat_axes) if rt is not None else ()
+    if axes:
+        frac_tokens = jax.lax.pmean(frac_tokens, axes)
+        frac_probs = jax.lax.pmean(frac_probs, axes)
     aux = m.n_experts * jnp.sum(frac_tokens * frac_probs) * m.aux_loss_coef
     return probs, weights, ids, aux
 
@@ -78,7 +92,7 @@ def _expert_ffn(cfg, p, buf, rt: Runtime):
 def _moe_dense(cfg, p, xf, rt: Runtime):
     """Oracle: all experts on all tokens."""
     m = cfg.moe
-    probs, weights, ids, aux = _router(cfg, p, xf)
+    probs, weights, ids, aux = _router(cfg, p, xf, rt)
     act = _act(cfg.act)
     dt = xf.dtype
     up = jnp.einsum("td,edf->etf", xf, p["w_up"].astype(dt))
@@ -120,6 +134,36 @@ def _routed_take_bwd(res, dy):
 _routed_take.defvjp(_routed_take_fwd, _routed_take_bwd)
 
 
+def _route_capacity(fids, n_experts: int, capacity: int):
+    """Index plumbing only (1-wide int ops): slot <-> item maps.
+
+    fids (n_items,) int32 expert ids -> (dest (n_items,), inv (E*C,)):
+    ``dest[i]`` is item i's slot in the (E, C) buffer (-1 = dropped),
+    ``inv[s]`` the item occupying slot s (-1 = empty).  Shared by the
+    grouped-dropping dispatch and the expert-parallel all-to-all path
+    (core/expert.py), which routes into its *local* send buffer with the
+    same maps.
+    """
+    n_items = fids.shape[0]
+    E, C = n_experts, capacity
+    order = jnp.argsort(fids, stable=True)
+    sorted_ids = fids[order]
+    counts = jnp.zeros((E,), jnp.int32).at[fids].add(1)
+    starts = jnp.cumsum(counts) - counts
+    pos_sorted = jnp.arange(n_items, dtype=jnp.int32) - starts[sorted_ids]
+    keep_sorted = pos_sorted < C
+    slot_sorted = sorted_ids * C + jnp.minimum(pos_sorted, C - 1)
+    # item -> slot (dropped items -> -1)
+    dest = jnp.full((n_items,), -1, jnp.int32).at[order].set(
+        jnp.where(keep_sorted, slot_sorted, -1))
+    # slot -> item (empty slots -> -1); dropped items scatter out of
+    # bounds and are discarded by mode="drop"
+    inv = jnp.full((E * C,), -1, jnp.int32).at[
+        jnp.where(keep_sorted, slot_sorted, E * C)].set(
+        order, mode="drop")
+    return dest, inv
+
+
 def _moe_dropping(cfg, p, xf, rt: Runtime):
     """Fixed-capacity dispatch with an explicit *group* dimension.
 
@@ -136,7 +180,7 @@ def _moe_dropping(cfg, p, xf, rt: Runtime):
     m = cfg.moe
     T, d = xf.shape
     k, E = m.top_k, m.n_experts
-    probs, weights, ids, aux = _router(cfg, p, xf)
+    probs, weights, ids, aux = _router(cfg, p, xf, rt)
 
     G = max(1, min(rt.moe_groups, T))
     while T % G:
@@ -149,27 +193,8 @@ def _moe_dropping(cfg, p, xf, rt: Runtime):
     idg = ids.reshape(G, Tg * k)                             # token-major
     wg = weights.reshape(G, Tg, k)
 
-    def route_one(fids):
-        """Index plumbing only (1-wide int ops): slot<->item maps."""
-        n_items = Tg * k
-        order = jnp.argsort(fids, stable=True)
-        sorted_ids = fids[order]
-        counts = jnp.zeros((E,), jnp.int32).at[fids].add(1)
-        starts = jnp.cumsum(counts) - counts
-        pos_sorted = jnp.arange(n_items, dtype=jnp.int32) - starts[sorted_ids]
-        keep_sorted = pos_sorted < Cg
-        slot_sorted = sorted_ids * Cg + jnp.minimum(pos_sorted, Cg - 1)
-        # item -> slot (dropped items -> -1)
-        dest = jnp.full((n_items,), -1, jnp.int32).at[order].set(
-            jnp.where(keep_sorted, slot_sorted, -1))
-        # slot -> item (empty slots -> -1); dropped items scatter out of
-        # bounds and are discarded by mode="drop"
-        inv = jnp.full((E * Cg,), -1, jnp.int32).at[
-            jnp.where(keep_sorted, slot_sorted, E * Cg)].set(
-            order, mode="drop")
-        return dest, inv
-
-    dest_g, inv_g = jax.vmap(route_one)(idg)                 # (G, Tg*k), (G, E*Cg)
+    dest_g, inv_g = jax.vmap(
+        lambda fids: _route_capacity(fids, E, Cg))(idg)      # (G, Tg*k), (G, E*Cg)
 
     def dispatch_one(x_g, dest, inv):
         # token -> items without a gather (broadcast is scatter-free in bwd)
@@ -201,7 +226,18 @@ def apply_moe(cfg, p, x, rt: Runtime):
     impl = rt.moe_impl
     if impl == "auto":
         impl = "dense" if B * S * cfg.moe.n_experts <= (1 << 22) else "dropping"
-    y, aux = (_moe_dense if impl == "dense" else _moe_dropping)(cfg, p, xf, rt)
+    if impl == "ep":
+        # expert-parallel shard_map dispatch; token counts that cannot
+        # occupy every mesh axis (tiny decode batches) fall back to the
+        # GSPMD dropping path — still correct against the 'expert'-sharded
+        # params, just without the explicit all-to-all
+        from repro.core import expert as expert_lib
+        if expert_lib.can_shard_tokens(cfg, rt, B * S):
+            y, aux = expert_lib.moe_expert_parallel(cfg, p, xf, rt)
+        else:
+            impl = "dropping"
+    if impl != "ep":
+        y, aux = (_moe_dense if impl == "dense" else _moe_dropping)(cfg, p, xf, rt)
     y = y.reshape(B, S, d)
     if "shared" in p:
         sp = p["shared"]

@@ -259,7 +259,7 @@ def forward(cfg: ModelConfig, params, batch, rt: Runtime,
             raise ValueError(
                 "pipeline runtime requires a uniform layer stack "
                 "(no prefix, period 1); Strategy.to_plan validates this")
-        h = _pipeline_blocks(cfg, params, h, rope_ang, rt)
+        h, aux_total = _pipeline_blocks(cfg, params, h, rope_ang, rt)
         h = apply_norm(params["final_norm"], h, cfg.norm_eps, rt)
         logits = lm_logits(params["embed"], h, rt)
         return logits, None, aux_total
@@ -324,8 +324,15 @@ def _pipeline_blocks(cfg: ModelConfig, params, h, rope_ang, rt: Runtime):
     """Apply the full (uniform, stacked) layer stack under the GPipe
     schedule: split the batch into M microbatches, pipeline them over the
     mesh 'pipe' axis (stage p owns the contiguous layer slice the param
-    sharding already placed there), and stitch the outputs back."""
-    from repro.core.pipeline import make_pipelined_block_fn, pipeline_apply
+    sharding already placed there), and stitch the outputs back.
+
+    Returns (h, aux): the MoE load-balance loss is threaded through the
+    schedule alongside each microbatch's activation and averaged over the
+    M microbatches — the same per-microbatch averaging grad accumulation
+    applies (each microbatch's balance stats are its own, psum-reduced
+    across the batch shards so every shard sees global counts)."""
+    from repro.core.pipeline import (batch_axes_spec, make_pipelined_block_fn,
+                                     pipeline_apply)
 
     M = rt.pipeline_microbatches
     B = h.shape[0]
@@ -334,17 +341,25 @@ def _pipeline_blocks(cfg: ModelConfig, params, h, rope_ang, rt: Runtime):
             f"batch {B} does not split into {M} pipeline microbatches "
             "(grad_accum x microbatches must divide the global batch)")
     # the stage body runs inside a fully-manual shard_map: named sharding
-    # constraints and per-block FSDP gathers are meaningless there
-    rt_stage = dataclasses.replace(rt, constrain=None, gather_params=None)
+    # constraints and per-block FSDP gathers are meaningless there; MoE
+    # router load stats psum over the kept batch axes for a global aux.
+    # moe_groups=1: the stage already sees only its device-local token
+    # slice (the non-pp lowering's per-data-shard dispatch group) —
+    # keeping the global group count would subdivide it dp times further
+    # and shrink per-group expert capacity accordingly
+    kept = batch_axes_spec(rt.pipeline_mesh, rt.pipeline_batch_axes, B // M)
+    rt_stage = dataclasses.replace(rt, constrain=None, gather_params=None,
+                                   moe_stat_axes=kept, moe_groups=1)
     stage_fn = make_pipelined_block_fn(cfg, rt_stage)
     # training positions are identical across rows -> rope with batch dim 1
     # broadcasts over the (data-sharded) local microbatch inside the stage
     rope_mb = None if rope_ang is None else rope_ang[:1]
     x_mb = h.reshape((M, B // M) + h.shape[1:])
-    out = pipeline_apply(stage_fn, {"layers": params["blocks"][0]}, x_mb,
-                         rt.pipeline_mesh, rt.pipeline_axis, extras=rope_mb,
-                         batch_axes=rt.pipeline_batch_axes)
-    return rt.c("act_btd", out.reshape((B,) + out.shape[2:]))
+    out, aux = pipeline_apply(stage_fn, {"layers": params["blocks"][0]}, x_mb,
+                              rt.pipeline_mesh, rt.pipeline_axis,
+                              extras=rope_mb,
+                              batch_axes=rt.pipeline_batch_axes)
+    return rt.c("act_btd", out.reshape((B,) + out.shape[2:])), aux / M
 
 
 # ---------------------------------------------------------------------------

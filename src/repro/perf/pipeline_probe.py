@@ -60,9 +60,9 @@ def measure_bubble(cfg: ModelConfig, strat, topology,
                               (m, mb_rows, seq_len, cfg.d_model))
 
         def loss(p):
-            out = pipeline_apply(stage_fn, {"layers": p}, x, plan.mesh,
-                                 plan.pipe, extras=rope,
-                                 batch_axes=tuple(plan.dp))
+            out, _aux = pipeline_apply(stage_fn, {"layers": p}, x, plan.mesh,
+                                       plan.pipe, extras=rope,
+                                       batch_axes=tuple(plan.dp))
             return jnp.sum(out ** 2)
 
         with par.use_mesh(plan.mesh):

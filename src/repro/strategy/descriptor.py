@@ -27,6 +27,12 @@ Semantics of the degrees (mirrors DESIGN.md §4 / core/parallel.py):
             uniform layer stack (no prefix / period-1 ``layer_plan``), a
             layer count divisible by pp, and ``mb >= pp`` microbatches
             (under-specified mb is a StrategyError, not a silent clamp).
+  * ``ep``  expert parallelism: an 'expert' mesh axis factored out of
+            the data axis (dp_effective = dp / ep).  MoE expert stacks
+            shard their E dim over it and the dispatch/combine
+            all-to-all runs along it (``core/expert.py``).  Requires an
+            MoE config with ``n_experts % ep == 0``; ``ep == 1`` for
+            dense configs.
   * ``dp_mode``  'hsdp' shards params inside an island and replicates
             across islands (adds a 'pod' axis when the topology spans
             more than one); 'fsdp' shards over the full data axis;
@@ -46,7 +52,7 @@ from repro.strategy.topology import Topology, build_mesh
 DP_MODES = ("hsdp", "fsdp", "ddp")
 _ATTN_TOKENS = {"headtp": "head_tp", "ctx": "context"}
 _ATTN_FORMAT = {v: k for k, v in _ATTN_TOKENS.items()}
-_INT_TOKEN = re.compile(r"^(tp|cp|pp|z|mb|ga)(\d+)$")
+_INT_TOKEN = re.compile(r"^(tp|cp|pp|ep|z|mb|ga)(\d+)$")
 
 
 class StrategyError(ValueError):
@@ -60,6 +66,8 @@ class Strategy:
     tp: int = 1                      # tensor-parallel degree (model axis)
     cp: int = 1                      # context-parallel degree (model axis)
     pp: int = 1                      # pipeline degree ('pipe' mesh axis)
+    ep: int = 1                      # expert-parallel degree ('expert' axis,
+                                     # factored out of the data axis)
     zero_stage: Optional[int] = None  # None -> 0 for ddp, 3 otherwise
     microbatches: int = 1            # pipeline microbatches per step
     grad_accum: int = 1
@@ -69,7 +77,7 @@ class Strategy:
     def __post_init__(self):
         if self.dp_mode not in DP_MODES:
             raise StrategyError(f"dp_mode {self.dp_mode!r} not in {DP_MODES}")
-        for k in ("tp", "cp", "pp", "microbatches", "grad_accum"):
+        for k in ("tp", "cp", "pp", "ep", "microbatches", "grad_accum"):
             if getattr(self, k) < 1:
                 raise StrategyError(f"{k} must be >= 1, got {getattr(self, k)}")
         if self.attn not in (None, "head_tp", "context"):
@@ -81,6 +89,13 @@ class Strategy:
             # predict-and-run contract honest
             raise StrategyError(
                 f"zero_stage {self.zero_stage!r} not in (None, 0, 2, 3)")
+        if self.ep > 1 and self.pp > 1:
+            # inside a pipeline stage the MoE layers run as plain
+            # (token-local) dispatch; the expert all-to-all is not
+            # composed into the stage shard_map yet (ROADMAP)
+            raise StrategyError(
+                f"ep={self.ep} does not compose with pp={self.pp} yet; "
+                "expert parallelism inside pipeline stages is an open item")
         if self.pp > 1 and self.microbatches < self.pp:
             # fewer microbatches than stages cannot fill the pipeline; the
             # cost model used to clamp mb up to pp silently, letting the
@@ -108,7 +123,13 @@ class Strategy:
         return self.tp * self.cp * self.pp
 
     def dp_degree(self, topology: Topology) -> int:
+        """Total data-parallel degree (the 'expert' axis is part of it:
+        batch and gradients shard over (data, expert) together)."""
         return topology.n_devices // self.model_parallel
+
+    def dp_effective(self, topology: Topology) -> int:
+        """Size of the 'data' mesh axis alone: dp / ep."""
+        return self.dp_degree(topology) // self.ep
 
     def n_pods(self, topology: Topology) -> int:
         """Leading 'pod' axis size: HSDP across islands, else folded in."""
@@ -143,21 +164,42 @@ class Strategy:
             raise StrategyError(
                 "tp and cp share the single 'model' mesh axis; at most one "
                 f"may exceed 1 (got tp={self.tp}, cp={self.cp})")
-        if n % (self.model_axis * self.pp):
+        if n % (self.model_axis * self.pp * self.ep):
             raise StrategyError(
-                f"model axis {self.model_axis} x pipe {self.pp} does not "
-                f"divide {n} devices")
+                f"model axis {self.model_axis} x pipe {self.pp} x expert "
+                f"{self.ep} does not divide {n} devices")
         pods = self.n_pods(topology)
-        if pods > 1 and n % (pods * self.model_axis * self.pp):
+        if pods > 1 and n % (pods * self.model_axis * self.pp * self.ep):
             raise StrategyError(
-                f"HSDP pods={pods} x pipe={self.pp} x model="
-                f"{self.model_axis} does not divide {n} devices")
+                f"HSDP pods={pods} x pipe={self.pp} x expert={self.ep} x "
+                f"model={self.model_axis} does not divide {n} devices")
         if self.dp_degree(topology) < 1:
             raise StrategyError(
                 f"model_parallel={self.model_parallel} exceeds "
                 f"{n} devices")
+        if pods > 1 and (self.dp_degree(topology) // pods) % self.ep:
+            # the expert axis must live inside the island-local FSDP
+            # group, or the reduced expert-param gather group is not a
+            # whole number of ranks
+            raise StrategyError(
+                f"ep={self.ep} does not divide the island-local data "
+                f"group {self.dp_degree(topology) // pods}")
+        if cfg is not None and self.ep > 1:
+            self._check_expert(cfg)
         if cfg is not None and self.pp > 1:
             self._check_pipeline(cfg)
+
+    def _check_expert(self, cfg: ModelConfig) -> None:
+        """Model-dependent ep constraints (expert-stack sharding)."""
+        E = cfg.moe.n_experts
+        if not E or not any(cfg.is_moe_layer(i) for i in range(cfg.n_layers)):
+            raise StrategyError(
+                f"ep={self.ep} needs an MoE config with routed experts; "
+                f"{cfg.name} is dense (ep must be 1)")
+        if E % self.ep:
+            raise StrategyError(
+                f"ep={self.ep} does not divide n_experts={E} "
+                f"({cfg.name}); expert stacks cannot shard evenly")
 
     def _check_pipeline(self, cfg: ModelConfig) -> None:
         """Model-dependent pp constraints (GPipe stage assignment)."""
@@ -172,11 +214,6 @@ class Strategy:
             raise StrategyError(
                 f"{cfg.n_layers} layers do not split into {self.pp} "
                 "contiguous pipeline stages")
-        if cfg.moe.n_experts and any(cfg.is_moe_layer(i)
-                                     for i in range(cfg.n_layers)):
-            raise StrategyError(
-                "pipeline stages drop the MoE aux loss; pp > 1 is not "
-                "expressible for MoE configs yet")
         if cfg.rope == "mrope":
             raise StrategyError(
                 "mrope angles are batch-dependent and cannot broadcast "
@@ -209,14 +246,18 @@ class Strategy:
                     f"microbatches={self.microbatches}")
         pods = self.n_pods(topology)
         mesh = build_mesh(topology, model=self.model_axis, pods=pods,
-                          pipe=self.pp, abstract=abstract)
+                          pipe=self.pp, expert=self.ep, abstract=abstract)
         attn = self.resolved_attn(cfg)
         has_pod = pods > 1
-        dp: Tuple[str, ...] = ("pod", "data") if has_pod else ("data",)
+        has_ep = self.ep > 1
+        # the expert axis is factored out of data: batch (and the full
+        # data-parallel gradient reduction) spans both
+        dp: Tuple[str, ...] = (("pod",) if has_pod else ()) + ("data",) + \
+            (("expert",) if has_ep else ())
         if self.dp_mode == "ddp" or self.zero == 0:
             fsdp: Tuple[str, ...] = ()
         elif has_pod:                 # hsdp: shard inside the island only
-            fsdp = ("data",)
+            fsdp = ("data",) + (("expert",) if has_ep else ())
         else:
             fsdp = dp
         kv_tp = attn == "head_tp" and cfg.kv_heads % self.model_axis == 0
@@ -225,8 +266,8 @@ class Strategy:
         # the batch cannot occupy the data axis (long-context, batch=1)
         data_size = topology.n_devices // (self.model_axis * self.pp)
         if shape.mode == "decode" and shape.global_batch < data_size:
-            cache_axes = (("pod", "data", "model") if has_pod
-                          else ("data", "model"))
+            cache_axes = (("pod",) if has_pod else ()) + ("data",) + \
+                (("expert",) if has_ep else ()) + ("model",)
         else:
             cache_axes = ("model",)
 
@@ -235,7 +276,8 @@ class Strategy:
             shape_mode=shape.mode, decode_cache_axes=cache_axes,
             seq_parallel_residuals=self.seq_parallel,
             pipe="pipe" if self.pp > 1 else "",
-            microbatches=self.microbatches if self.pp > 1 else 1)
+            microbatches=self.microbatches if self.pp > 1 else 1,
+            expert="expert" if has_ep else "")
 
     # ---- lowering: cost model ----------------------------------------------
 
@@ -267,6 +309,7 @@ class Strategy:
         # cost model's bubble term sees is exactly what the lowering runs
         return cm.Strategy(
             n_devices=topology.n_devices, tp=tp_c, pp=self.pp, cp=cp_c,
+            ep=self.ep,
             zero_stage=self.zero,
             microbatches=self.microbatches,
             fsdp_group=fsdp_group)
@@ -276,7 +319,8 @@ class Strategy:
     def format(self) -> str:
         """Canonical compact spec string; ``parse(format(s)) == s``."""
         parts = [self.dp_mode]
-        for key, val in (("tp", self.tp), ("cp", self.cp), ("pp", self.pp)):
+        for key, val in (("tp", self.tp), ("cp", self.cp), ("pp", self.pp),
+                         ("ep", self.ep)):
             if val > 1:
                 parts.append(f"{key}{val}")
         if self.zero_stage is not None:
@@ -298,17 +342,18 @@ class Strategy:
 def parse(spec: str) -> Strategy:
     """Parse a compact spec string into a ``Strategy``.
 
-    Grammar: ``<dp_mode>[_tp<k>][_cp<k>][_pp<k>][_z<stage>][_mb<m>]
+    Grammar: ``<dp_mode>[_tp<k>][_cp<k>][_pp<k>][_ep<k>][_z<stage>][_mb<m>]
     [_ga<g>][_headtp|_ctx][_nosp]`` with dp_mode in {hsdp, fsdp, ddp}.
-    Examples: ``hsdp_tp4``, ``fsdp_cp8``, ``ddp``, ``hsdp_tp4_ga2_nosp``.
+    Examples: ``hsdp_tp4``, ``fsdp_cp8``, ``fsdp_ep8``, ``hsdp_tp2_ep4``,
+    ``ddp``, ``hsdp_tp4_ga2_nosp``.
     """
     tokens = spec.strip().lower().split("_")
     if not tokens or tokens[0] not in DP_MODES:
         raise StrategyError(
             f"spec {spec!r} must start with one of {DP_MODES}")
     kw = {"dp_mode": tokens[0]}
-    names = {"tp": "tp", "cp": "cp", "pp": "pp", "z": "zero_stage",
-             "mb": "microbatches", "ga": "grad_accum"}
+    names = {"tp": "tp", "cp": "cp", "pp": "pp", "ep": "ep",
+             "z": "zero_stage", "mb": "microbatches", "ga": "grad_accum"}
     for tok in tokens[1:]:
         if tok == "nosp":
             kw["seq_parallel"] = False
@@ -320,7 +365,7 @@ def parse(spec: str) -> Strategy:
         if not m:
             raise StrategyError(
                 f"bad token {tok!r} in spec {spec!r} (expected "
-                "tp<k>/cp<k>/pp<k>/z<s>/mb<m>/ga<g>/headtp/ctx/nosp)")
+                "tp<k>/cp<k>/pp<k>/ep<k>/z<s>/mb<m>/ga<g>/headtp/ctx/nosp)")
         field = names[m.group(1)]
         if field in kw:
             raise StrategyError(f"duplicate token {tok!r} in spec {spec!r}")

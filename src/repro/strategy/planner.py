@@ -4,9 +4,9 @@
 (dp_mode x tp x cp x pp x ZeRO stage), prices every candidate with the
 calibrated analytic model (``costmodel.step_time``), and returns ranked
 ``PlannedStrategy`` records whose descriptors lower to real plans via
-``Strategy.to_plan``.  This replaces the old ``costmodel.sweep_strategies``
-/ ``best_strategy`` pair (kept as deprecated shims) and — unlike them —
-sweeps context-parallel degrees.
+``Strategy.to_plan``.  This replaced the old ``costmodel.sweep_strategies``
+/ ``best_strategy`` pair (now deleted) and — unlike them — sweeps
+context-parallel and expert-parallel degrees.
 
 Objectives: 'wps' (tokens/s, default), 'mfu', 'tokens_per_joule',
 'memory' (min bytes/device).  ``pareto_front`` keeps the strategies that
@@ -61,6 +61,7 @@ def evaluate(cfg: ModelConfig, strategy: Strategy, topology: Topology,
 
 
 DEFAULT_PPS = (1, 2, 4, 8)
+DEFAULT_EPS = (1, 2, 4, 8)
 
 
 def candidates(topology: Topology, global_batch: int,
@@ -68,6 +69,7 @@ def candidates(topology: Topology, global_batch: int,
                tps: Iterable[int] = (1, 2, 4, 8, 16),
                cps: Iterable[int] = (1, 2, 4, 8),
                pps: Iterable[int] = DEFAULT_PPS,
+               eps: Iterable[int] = DEFAULT_EPS,
                zero_stages: Iterable[Optional[int]] = (None,),
                microbatches: int = 8) -> List[Strategy]:
     """Enumerate distinct strategy descriptors viable on ``topology``.
@@ -75,7 +77,10 @@ def candidates(topology: Topology, global_batch: int,
     tp and cp share the model axis, so candidates use at most one of them
     (the tp x cp cross product would double-count the same mesh).  The
     batch filters mirror the original sweep: dp must divide the global
-    batch (or be smaller than it).
+    batch (or be smaller than it).  ep > 1 candidates are only viable for
+    MoE configs — ``search`` filters them via ``Strategy.check(cfg)``
+    (``ep | n_experts``, ep x pp not composed); ep stays inside the
+    island-local data group so the reduced expert gathers are whole ranks.
     """
     n = topology.n_devices
     out: List[Strategy] = []
@@ -88,23 +93,28 @@ def candidates(topology: Topology, global_batch: int,
             for tp, cp in [(t, 1) for t in tps] + [(1, c) for c in cps
                                                    if c > 1]:
                 for pp in pps:
-                    model = tp * cp * pp
-                    if model > n or n % model:
-                        continue
-                    dp = n // model
-                    if dp > global_batch:
-                        continue
-                    if global_batch % dp and global_batch >= dp:
-                        continue
-                    mb = max(microbatches, pp) if pp > 1 else 1
-                    if pp > 1 and global_batch % mb:
-                        continue       # microbatch split must divide batch
-                    s = Strategy(dp_mode=mode, tp=tp, cp=cp, pp=pp,
-                                 zero_stage=zero, microbatches=mb)
-                    if s.format() in seen:
-                        continue
-                    seen.add(s.format())
-                    out.append(s)
+                    for ep in eps:
+                        if ep > 1 and pp > 1:
+                            continue   # not composed (descriptor rejects)
+                        model = tp * cp * pp
+                        if model * ep > n or n % (model * ep):
+                            continue
+                        dp = n // model
+                        if dp % ep:
+                            continue
+                        if dp > global_batch:
+                            continue
+                        if global_batch % dp and global_batch >= dp:
+                            continue
+                        mb = max(microbatches, pp) if pp > 1 else 1
+                        if pp > 1 and global_batch % mb:
+                            continue   # microbatch split must divide batch
+                        s = Strategy(dp_mode=mode, tp=tp, cp=cp, pp=pp,
+                                     ep=ep, zero_stage=zero, microbatches=mb)
+                        if s.format() in seen:
+                            continue
+                        seen.add(s.format())
+                        out.append(s)
     return out
 
 
@@ -115,6 +125,7 @@ def search(cfg: ModelConfig, topology: Topology, shape: ShapeConfig,
            tps: Iterable[int] = (1, 2, 4, 8, 16),
            cps: Iterable[int] = (1, 2, 4, 8),
            pps: Iterable[int] = DEFAULT_PPS,
+           eps: Iterable[int] = DEFAULT_EPS,
            zero_stages: Iterable[Optional[int]] = (None,),
            microbatches: int = 8,
            top: Optional[int] = None) -> List[PlannedStrategy]:
@@ -130,9 +141,11 @@ def search(cfg: ModelConfig, topology: Topology, shape: ShapeConfig,
         raise StrategyError(
             f"objective {objective!r} not in {sorted(OBJECTIVES)}")
     score = OBJECTIVES[objective]
+    if not cfg.moe.n_experts:
+        eps = (1,)                 # ep is an MoE-only degree
     cands = candidates(topology, shape.global_batch, dp_modes=dp_modes,
-                       tps=tps, cps=cps, pps=pps, zero_stages=zero_stages,
-                       microbatches=microbatches)
+                       tps=tps, cps=cps, pps=pps, eps=eps,
+                       zero_stages=zero_stages, microbatches=microbatches)
     out: List[PlannedStrategy] = []
     for s in cands:
         lowers = s.lowerable(topology, cfg)

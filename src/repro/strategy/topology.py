@@ -87,25 +87,30 @@ def get_topology(name: str, **kw) -> Topology:
 
 
 def build_mesh(topology: Topology, model: int = 1, pods: int = 1,
-               pipe: int = 1, abstract: bool = False):
-    """Mesh for ``topology`` with given model- and pipe-axis degrees.
+               pipe: int = 1, expert: int = 1, abstract: bool = False):
+    """Mesh for ``topology`` with given model-, pipe- and expert-axis degrees.
 
     pods > 1 adds a leading 'pod' axis (HSDP: params sharded inside the
     island, replicated across pods).  pipe > 1 adds a 'pipe' axis for
     GPipe stages, placed outermost below 'pod' so stages span the slow
     fabric first (pipeline p2p is the cheapest cross-island traffic —
-    the paper's argument for PP at scale).  ``abstract=True`` returns an
-    ``AbstractMesh`` — enough for PartitionSpec/group-size analysis without
-    any devices attached.
+    the paper's argument for PP at scale).  expert > 1 adds an 'expert'
+    axis *factored out of the data axis* (data = dp / expert): batch and
+    gradients shard over (data, expert) together, while MoE expert stacks
+    shard their E dim over 'expert' only — the dispatch/combine
+    all-to-all runs along it.  It sits between 'data' and 'model' so the
+    ep-group ranks are as mesh-adjacent as the model axis allows.
+    ``abstract=True`` returns an ``AbstractMesh`` — enough for
+    PartitionSpec/group-size analysis without any devices attached.
     """
     n = topology.n_devices
-    if n % (model * pods * pipe):
+    if n % (model * pods * pipe * expert):
         raise ValueError(
-            f"mesh ({pods} pods x pipe {pipe} x model {model}) does not "
-            f"divide {n} devices")
-    data = n // (model * pods * pipe)
-    shape = (pods, pipe, data, model)
-    axes = ("pod", "pipe", "data", "model")
+            f"mesh ({pods} pods x pipe {pipe} x expert {expert} x model "
+            f"{model}) does not divide {n} devices")
+    data = n // (model * pods * pipe * expert)
+    shape = (pods, pipe, data, expert, model)
+    axes = ("pod", "pipe", "data", "expert", "model")
     keep = [i for i, (a, s) in enumerate(zip(axes, shape))
             if a in ("data", "model") or s > 1]
     shape = tuple(shape[i] for i in keep)

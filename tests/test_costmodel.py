@@ -5,8 +5,10 @@ import math
 import pytest
 from hypothesis import given, settings, strategies as st
 
+from repro.configs.base import ShapeConfig
 from repro.configs.llama2 import LLAMA2_7B
 from repro.core import costmodel as cm
+from repro.strategy import Topology, search
 
 HWS = [cm.V100, cm.A100, cm.H100, cm.TPU_V5E]
 
@@ -122,11 +124,21 @@ def test_claim_tp_beats_fsdp_at_2048():
     assert max(gains) > 0.35, gains          # paper: +52.6%
 
 
+def _best_report(hw):
+    """Planner-ranked best (wps) on 256 chips of ``hw`` — the migrated
+    form of the deleted ``sweep_strategies``/``best_strategy`` shims."""
+    topo = Topology(hw.name, 256, island=hw.island, hardware=hw.name,
+                    hbm=80e9, hw_obj=hw)
+    shape = ShapeConfig("s", 4096, 512, "train")
+    ranked = search(LLAMA2_7B, topo, shape, dp_modes=("fsdp",),
+                    zero_stages=(2,), pps=(1, 2, 4, 8, 16), cps=(1,),
+                    require_fits=False, require_lowerable=False)
+    return ranked[0].report
+
+
 def test_claim_hw_generation_mfu_gap():
-    bh = cm.best_strategy(cm.sweep_strategies(
-        LLAMA2_7B, cm.H100, 256, 512, 4096, zero_stage=2), require_fits=False)
-    ba = cm.best_strategy(cm.sweep_strategies(
-        LLAMA2_7B, cm.A100, 256, 512, 4096, zero_stage=2), require_fits=False)
+    bh = _best_report(cm.H100)
+    ba = _best_report(cm.A100)
     assert ba.mfu > bh.mfu                   # paper: 59.67% vs 40.77%
     assert 0.35 < bh.mfu < 0.50
     assert 0.52 < ba.mfu < 0.66

@@ -52,8 +52,9 @@ def test_pipeline_matches_sequential_fwd_and_grad(setup, eight_devices,
     stage_fn = make_pipelined_block_fn(cfg, rt)
 
     def pipelined(params, x):
-        return pipeline_apply(stage_fn, params, x, mesh, "pipe",
-                              batch_axes=batch_axes)
+        out, _aux = pipeline_apply(stage_fn, params, x, mesh, "pipe",
+                                   batch_axes=batch_axes)
+        return out
 
     with use_mesh(mesh):
         out_p = jax.jit(pipelined)(stacked, x)
@@ -84,7 +85,7 @@ def test_pipeline_multi_layer_stages(setup, eight_devices):
     stage_fn = make_pipelined_block_fn(cfg, rt)
     with use_mesh(mesh):
         out_p = jax.jit(lambda p, x: pipeline_apply(
-            stage_fn, p, x, mesh, "pipe"))(stacked, x)
+            stage_fn, p, x, mesh, "pipe")[0])(stacked, x)
     out_s = _sequential(cfg, rt, layers, x)
     assert float(jnp.max(jnp.abs(out_p - out_s))) < 1e-4
 

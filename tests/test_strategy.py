@@ -45,6 +45,8 @@ POD1 = strategy_lib.pod_topology(pods=1)
     Strategy(dp_mode="fsdp", pp=4, microbatches=16),
     Strategy(dp_mode="fsdp", tp=2, attn="context"),
     Strategy(dp_mode="hsdp", tp=8, attn="head_tp", zero_stage=3),
+    Strategy(dp_mode="fsdp", ep=8),
+    Strategy(dp_mode="hsdp", tp=2, ep=4),
 ])
 def test_spec_round_trip(s):
     assert parse(s.format()) == s
@@ -101,8 +103,10 @@ def test_mb_lt_pp_is_error_not_silent_clamp():
 
 
 def test_pp_model_constraints():
-    """pp stages need a uniform layer stack; hybrids/MoE are rejected
-    with cfg-aware validation (and still lower fine without pp)."""
+    """pp stages need a uniform layer stack; hybrids are rejected with
+    cfg-aware validation (and still lower fine without pp).  MoE no
+    longer blocks pp — the aux loss threads through the stage fn — but
+    deepseek-moe's dense layer 0 breaks stack uniformity."""
     s = Strategy(dp_mode="fsdp", pp=2, microbatches=8)
     s.check(POD1, LLAMA2_7B)                      # uniform: ok
     jamba = get_config("jamba-v0.1-52b")
@@ -111,11 +115,33 @@ def test_pp_model_constraints():
     assert Strategy(dp_mode="fsdp").lowerable(POD1, jamba)
     moe = get_config("deepseek-moe-16b")
     with pytest.raises(StrategyError):
-        s.check(POD1, moe)
+        s.check(POD1, moe)                        # non-uniform (layer 0)
+    uniform_moe = dataclasses.replace(
+        moe, moe=dataclasses.replace(moe.moe, moe_start_layer=0))
+    s.check(POD1, uniform_moe)                    # all-MoE stack: pp ok
     # layer count must split into contiguous stages
     odd = dataclasses.replace(LLAMA2_7B, n_layers=31)
     with pytest.raises(StrategyError):
         s.check(POD1, odd)
+
+
+def test_ep_model_constraints():
+    """ep needs an MoE config whose expert count it divides; ep stays
+    inside the data axis and does not compose with pp yet."""
+    moe = get_config("deepseek-moe-16b")          # 64 routed experts
+    Strategy(dp_mode="fsdp", ep=8).check(POD1, moe)
+    with pytest.raises(StrategyError):
+        Strategy(dp_mode="fsdp", ep=8).check(POD1, LLAMA2_7B)   # dense
+    odd_e = dataclasses.replace(
+        moe, moe=dataclasses.replace(moe.moe, n_experts=48))
+    with pytest.raises(StrategyError):
+        Strategy(dp_mode="fsdp", ep=32).check(POD1, odd_e)      # 48 % 32
+    with pytest.raises(StrategyError):
+        Strategy(dp_mode="fsdp", pp=2, ep=2, microbatches=8)    # ep x pp
+    # hsdp: ep must divide the island-local data group
+    assert Strategy(dp_mode="hsdp", ep=8).lowerable(POD2, moe)
+    cost = Strategy(dp_mode="fsdp", ep=8).to_cost_strategy(moe, POD1)
+    assert cost.ep == 8 and cost.dp % cost.ep == 0
 
 
 # ---------------------------------------------------------------------------
@@ -130,11 +156,14 @@ def _agreement(cfg, topo, shape=TRAIN, **search_kw):
         plan = s.to_plan(cfg, topo, shape, abstract=True)
         cost = s.to_cost_strategy(cfg, topo)
         # data-parallel group: batch axes of the mesh vs analytic dp
+        # (the expert axis is part of the batch axes)
         assert plan.axis_size(plan.dp) == cost.dp, s.format()
         # model-parallel group: the mesh model axis vs tp*cp charged
         assert plan.tp_size == cost.tp * cost.cp, s.format()
         # pipeline stages: the mesh pipe axis vs the bubble term's P
         assert plan.pipe_size == cost.pp, s.format()
+        # expert group: the mesh expert axis vs the a2a group charged
+        assert plan.ep_size == cost.ep, s.format()
         # FSDP collective group: the axes params shard over vs the group
         # the cost model charges AllGather/ReduceScatter for
         fsdp_size = plan.axis_size(plan.fsdp)
@@ -210,6 +239,7 @@ def _strategy_kwargs():
         tp=st.sampled_from([1, 2, 4, 8]),
         cp=st.sampled_from([1, 2, 4]),
         pp=st.sampled_from([1, 2, 4]),
+        ep=st.sampled_from([1, 2, 4, 8]),
         zero_stage=st.sampled_from([None, 0, 2, 3]),
         microbatches=st.sampled_from([1, 4, 8, 16]),
         grad_accum=st.sampled_from([1, 2, 4]),
@@ -240,20 +270,26 @@ def test_property_spec_round_trip(kw):
 def test_property_group_sizes_match_mesh(kw):
     """For every valid strategy, the collective group sizes the cost model
     is charged equal the mesh axis sizes the lowering builds — dp, model,
-    and (now) pipe."""
+    pipe, and (now) expert.  ep > 1 strategies validate against an MoE
+    config (ep is rejected for dense models)."""
     s = _build(kw)
-    assume(s.lowerable(POD2, LLAMA2_7B))
+    cfg = get_config("deepseek-moe-16b") if kw["ep"] > 1 else LLAMA2_7B
+    assume(s.lowerable(POD2, cfg))
     shape = ShapeConfig("prop", 4096,
                         max(256, s.grad_accum * s.microbatches), "train")
     try:
-        plan = s.to_plan(LLAMA2_7B, POD2, shape, abstract=True)
-        cost = s.to_cost_strategy(LLAMA2_7B, POD2)
+        plan = s.to_plan(cfg, POD2, shape, abstract=True)
+        cost = s.to_cost_strategy(cfg, POD2)
     except StrategyError:
         assume(False)
     assert plan.axis_size(plan.dp) == cost.dp, s.format()
     assert plan.tp_size == cost.tp * cost.cp, s.format()
     assert plan.pipe_size == cost.pp, s.format()
+    assert plan.ep_size == cost.ep, s.format()
     assert plan.microbatches == (s.microbatches if s.pp > 1 else 1)
+    if s.ep > 1:
+        assert plan.expert in plan.dp      # ep factored out of the data axes
+        assert plan.axis_size(plan.dp) == s.dp_effective(POD2) * s.ep
 
 
 # ---------------------------------------------------------------------------
@@ -345,18 +381,14 @@ def test_resolve_auto_and_spec():
         strategy_lib.resolve("hsdp_tp5", LLAMA2_7B, POD1, TRAIN)
 
 
-def test_deprecated_sweep_shim_matches_planner():
-    """costmodel.sweep_strategies now delegates to the planner."""
-    reports = cm.sweep_strategies(LLAMA2_7B, cm.H100, 256, 512, 4096,
-                                  zero_stage=2)
-    assert reports and all(isinstance(r, cm.StepReport) for r in reports)
-    best = cm.best_strategy(reports, require_fits=False)
-    topo = Topology("H100", 256, island=8, hardware="H100", hbm=80e9)
-    shape = ShapeConfig("s", 4096, 512, "train")
-    ranked = search(LLAMA2_7B, topo, shape, dp_modes=("fsdp",),
-                    zero_stages=(2,), pps=(1, 2, 4, 8, 16),
-                    cps=(1,), require_fits=False, require_lowerable=False)
-    assert best.wps == pytest.approx(ranked[0].report.wps)
+def test_deprecated_shims_removed():
+    """ROADMAP: 'remove once no caller remains' — the deprecated
+    sweep_strategies/best_strategy and parallel.choose_plan shims are
+    gone; the planner is the only strategy-sweep surface."""
+    from repro.core import parallel as par_mod
+    assert not hasattr(cm, "sweep_strategies")
+    assert not hasattr(cm, "best_strategy")
+    assert not hasattr(par_mod, "choose_plan")
 
 
 # ---------------------------------------------------------------------------

@@ -229,19 +229,23 @@ def _write_bench(out_path: str, payload: dict, n_rows: int):
 
 
 def _pp_sweep(out_path: str = "results/benchmarks/BENCH_pipeline.json",
-              pps=(1, 2, 4), n_iter: int = 3):
-    """Predicted vs measured step time for pp in {1,2,4} on 8 virtual CPU
-    devices -> BENCH_pipeline.json (CI artifact).
+              pps=(1, 2, 4), scheds=("gpipe", "1f1b"), n_iter: int = 3):
+    """Predicted vs measured step time for pp in {1,2,4} x schedule in
+    {gpipe, 1f1b} on 8 virtual CPU devices -> BENCH_pipeline.json (CI
+    artifact).
 
     Measured wall time is a CPU regression signal; the *comparable*
-    quantity across the predicted/measured columns is the pipeline bubble
-    fraction, which is schedule-determined and hardware-free.
+    quantities across the predicted/measured columns are the per-schedule
+    pipeline bubble fraction (schedule-determined and hardware-free —
+    identical for GPipe and 1F1B) and the per-schedule peak-memory
+    estimate (where 1F1B's min(M, P) in-flight cap is the differentiator).
     """
     from repro.launch.devices import force_host_device_count
     force_host_device_count(8)
     import jax
     from repro import strategy as strategy_lib
     from repro.configs import ShapeConfig, get_config, reduced
+    from repro.core.pipeline import inflight_microbatches
     from repro.perf.pipeline_probe import measure_bubble
 
     cfg = reduced(get_config("qwen3-0.6b"), n_layers=8)
@@ -249,30 +253,49 @@ def _pp_sweep(out_path: str = "results/benchmarks/BENCH_pipeline.json",
     shape = ShapeConfig("pp-sweep", 128, 16, "train")
     rows, summary = [], []
     for pp in pps:
-        spec = "fsdp" if pp == 1 else f"fsdp_pp{pp}_mb8"
-        strat, report, plan, rt, row = _measure_strategy_step(
-            cfg, spec, shape, n_iter)
-        t_best = row["measured_t_step_s"]
-        row.update(pp=pp, microbatches=strat.microbatches,
-                   predicted_wps=report.wps)
-        if pp > 1:
-            row.update(measure_bubble(cfg, strat, topo, n_iter=n_iter))
-            rel = abs(row["bubble_measured"] - row["bubble_predicted"]) \
-                / row["bubble_predicted"]
-            row["bubble_rel_err"] = round(rel, 3)
-            if rel > 0.2:
-                # two-point wall-clock fits are noisy on oversubscribed
-                # CPU hosts; flag it so the artifact is self-describing
-                # (the tier-1 slow test enforces the 20% bound with
-                # retries; this sweep only records the trajectory)
-                print(f"[bench] warn: {spec} measured bubble "
-                      f"{row['bubble_measured']:.3f} is {rel:.0%} off the "
-                      f"predicted {row['bubble_predicted']:.3f} "
-                      "(noisy host?)")
-        rows.append(row)
-        summary.append((f"pp_sweep_{spec}", t_best * 1e6,
-                        f"bubble{row.get('bubble_measured', 0.0):.3f}"
-                        f"_pred{row.get('bubble_predicted', 0.0):.3f}"))
+        for sched in (scheds if pp > 1 else ("gpipe",)):
+            if pp == 1:
+                spec = "fsdp"
+            else:
+                spec = f"fsdp_pp{pp}_mb8" + \
+                    ("" if sched == "gpipe" else f"_{sched}")
+            strat, report, plan, rt, row = _measure_strategy_step(
+                cfg, spec, shape, n_iter)
+            t_best = row["measured_t_step_s"]
+            row.update(pp=pp, microbatches=strat.microbatches, sched=sched,
+                       predicted_wps=report.wps,
+                       predicted_peak_memory_bytes=report.memory_per_device)
+            if pp > 1:
+                row["inflight_microbatches"] = inflight_microbatches(
+                    pp, strat.microbatches, sched)
+                row.update(measure_bubble(cfg, strat, topo, n_iter=n_iter))
+                if row.get("fit_unreliable"):
+                    # the two-point fit came out non-increasing — a failed
+                    # measurement: no rel_err is recorded (a clamped 0.0
+                    # would fabricate a 100% miss), only the flag
+                    row["bubble_rel_err"] = None
+                    print(f"[bench] warn: {spec} bubble fit unreliable "
+                          "(t(2M) <= t(M); noisy host) — row flagged")
+                    rel = 0.0
+                else:
+                    rel = abs(row["bubble_measured"]
+                              - row["bubble_predicted"]) \
+                        / row["bubble_predicted"]
+                    row["bubble_rel_err"] = round(rel, 3)
+                if not row.get("fit_unreliable") and rel > 0.2:
+                    # two-point wall-clock fits are noisy on oversubscribed
+                    # CPU hosts; flag it so the artifact is self-describing
+                    # (the tier-1 slow test enforces the 20% bound with
+                    # retries; this sweep only records the trajectory)
+                    print(f"[bench] warn: {spec} measured bubble "
+                          f"{row['bubble_measured']:.3f} is {rel:.0%} off "
+                          f"the predicted {row['bubble_predicted']:.3f} "
+                          "(noisy host?)")
+            rows.append(row)
+            summary.append((f"pp_sweep_{spec}", t_best * 1e6,
+                            f"bubble{row.get('bubble_measured', 0.0):.3f}"
+                            f"_pred{row.get('bubble_predicted', 0.0):.3f}"
+                            f"_mem{row['predicted_peak_memory_bytes']/2**20:.0f}MiB"))
     _write_bench(out_path, {
         "backend": jax.default_backend(), "n_iter": n_iter,
         "arch": cfg.name, "shape": {"seq_len": shape.seq_len,
@@ -364,8 +387,9 @@ def main() -> None:
                     default="results/benchmarks/BENCH_kernels.json")
     ap.add_argument("--pp-sweep", dest="pp_sweep", action="store_true",
                     help="only run the pipeline-parallel sweep (predicted "
-                         "vs measured step time + bubble fraction for pp "
-                         "in {1,2,4} on 8 virtual devices) and write "
+                         "vs measured step time + per-schedule bubble and "
+                         "peak-memory estimate for pp in {1,2,4} x "
+                         "{gpipe,1f1b} on 8 virtual devices) and write "
                          "BENCH_pipeline.json")
     ap.add_argument("--pipeline_json",
                     default="results/benchmarks/BENCH_pipeline.json")

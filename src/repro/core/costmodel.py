@@ -35,6 +35,8 @@ import math
 from typing import Dict, Tuple
 
 from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.pipeline import (SCHEDULE_NAMES, bubble_fraction,
+                                 inflight_microbatches)
 from repro.perf import flops as flops_lib
 
 
@@ -162,6 +164,12 @@ class Strategy:
                                 # their E dim over it)
     zero_stage: int = 3         # 0: DDP, 2/3: sharded (paper: FSDP ~ ZeRO-2/3)
     microbatches: int = 1       # pipeline microbatches per step
+    sched: str = "gpipe"        # pipeline schedule: 'gpipe' | '1f1b'.  The
+                                # idle-tick bubble is identical; 1F1B caps
+                                # in-flight activations at min(M, pp)
+                                # (the ``mem`` term, and therefore
+                                # ``fits``) at the price of one extra
+                                # forward recompute per step
     fsdp_group: int = 0         # param-shard group size; 0 -> full dp (FSDP).
                                 # HSDP: the island-local group, with the
                                 # cross-island grad AR charged separately.
@@ -180,7 +188,10 @@ class Strategy:
         return self.tp * self.pp * self.cp
 
     def valid(self) -> bool:
-        return (self.dp >= 1 and
+        return (self.sched in SCHEDULE_NAMES and
+                # a schedule token without a pipeline is not a real point
+                (self.pp > 1 or self.sched == "gpipe") and
+                self.dp >= 1 and
                 self.dp * self.tp * self.pp * self.cp == self.n_devices and
                 self.dp % self.fsdp_n == 0 and
                 # expert axis is factored out of the (island-local) data
@@ -220,7 +231,8 @@ class StepReport:
         d.pop("comm_breakdown")
         d.pop("strategy")
         s = self.strategy
-        d.update(n=s.n_devices, tp=s.tp, pp=s.pp, cp=s.cp, ep=s.ep, dp=s.dp)
+        d.update(n=s.n_devices, tp=s.tp, pp=s.pp, cp=s.cp, ep=s.ep,
+                 dp=s.dp, sched=s.sched)
         return d
 
 
@@ -250,6 +262,13 @@ def step_time(cfg: ModelConfig, hw: Hardware, strat: Strategy,
     fwd_frac = (1 / 4 if remat else 1 / 3) if train else 1.0
     t_layer_fwd = t_compute * fwd_frac / L
     t_layer_bwd = t_compute * (1 - fwd_frac) / L if train else 0.0
+    if train and strat.pp > 1 and strat.sched == "1f1b":
+        # the executable 1F1B bakes remat into its backward: microbatch
+        # forwards are replayed just-in-time through the pipe so only
+        # min(M, P) boundary activations are ever held.  Charge that one
+        # extra forward pass — the memory win is not free, and the
+        # planner must see the genuine bubble/memory/recompute tradeoff
+        t_compute *= 1 + fwd_frac
 
     # per-device local batch (examples)
     local_batch = max(global_batch // (strat.dp * strat.cp), 1)
@@ -375,7 +394,10 @@ def step_time(cfg: ModelConfig, hw: Hardware, strat: Strategy,
     bubble = 0.0
     if strat.pp > 1:
         m = strat.microbatches          # valid() guarantees m >= pp
-        bubble_frac = (strat.pp - 1) / (m + strat.pp - 1)
+        # per-schedule bubble: GPipe and 1F1B idle the same tick fraction
+        # ((P-1)/(M+P-1)) at equal per-tick cost — 1F1B reorders the
+        # bubble to cap in-flight activations, it does not shrink it
+        bubble_frac = bubble_fraction(strat.pp, m, strat.sched)
         act_boundary = local_batch * seq_len * d * 2 / m
         comm["pp_p2p"] = (strat.pp - 1) * m * t_p2p(
             hw, act_boundary, strat.pp * strat.tp > hw.island) * (2 if train else 1)
@@ -394,7 +416,18 @@ def step_time(cfg: ModelConfig, hw: Hardware, strat: Strategy,
     mem += 2 * P_bytes / (strat.tp * strat.pp) / (n_fsdp if strat.zero_stage >= 2 else 1)  # grads(bf16)+..
     mem += 8 * cfg.param_count() / opt_shard       # adam m+v fp32
     if train:
-        mem += L / strat.pp * act_bytes_layer      # remat boundaries
+        # remat-boundary activations.  With a pipeline this is the
+        # schedule's lever: each stage holds the boundary activations of
+        # every microbatch awaiting backward — all M under GPipe, at most
+        # P under 1F1B (warmup depth) — so the per-stage footprint scales
+        # by inflight/M.  This is what flips ``fits`` between schedules.
+        if strat.pp > 1:
+            inflight = inflight_microbatches(strat.pp, strat.microbatches,
+                                             strat.sched)
+            mem += (L / strat.pp) * act_bytes_layer * \
+                inflight / strat.microbatches
+        else:
+            mem += L * act_bytes_layer
     mem += act_bytes_layer * 4                      # working set
 
     # ---- throughput / power -----------------------------------------------

@@ -5,13 +5,25 @@ ranking" is MoE training, where the dispatch/combine all-to-all is the
 dominant exposed-communication term.  This module makes that exchange
 *executable*: a ``Strategy(ep>1)`` plan shards the MoE expert stacks over
 an 'expert' mesh axis (factored out of the data axis, so the batch shards
-over ``(data, expert)`` together) and routes each MoE layer through a
-shard_map whose schedule is the textbook GShard pipeline:
+over ``(data, expert)`` together) and routes each MoE layer through the
+textbook GShard pipeline:
 
     route (local argsort)  ->  all-to-all (dispatch)  ->  expert FFN
                            ->  all-to-all (combine)   ->  weighted sum
 
-Layout inside the shard_map (in_specs):
+The schedule body lives in ``expert_dispatch_local`` and has two entry
+points:
+
+  * ``moe_expert_parallel``  — the GSPMD path: wraps the body in its own
+    shard_map over the plan's mesh (tokens sharded over every mesh axis,
+    expert stacks over 'expert' only);
+  * ``expert_dispatch_local`` called directly — the pipeline path: MoE
+    layers inside a ``core/pipeline.py`` stage already run in a fully
+    manual shard_map where the 'expert' axis is live, so the stage body
+    invokes the dispatch without re-entering shard_map (this is what
+    deletes the old ``ep x pp`` StrategyError).
+
+Layout inside the shard_map (in_specs), GSPMD path:
 
   * tokens ``(T, d)``     — dim 0 sharded over *every* mesh axis
     (``rt.expert_token_axes`` = batch axes + model).  Each rank routes a
@@ -45,7 +57,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.core.pipeline import _shard_map
+from repro.core.compat import shard_map as _shard_map
 
 
 def token_shards(rt) -> int:
@@ -68,29 +80,59 @@ def can_shard_tokens(cfg, rt, n_tokens: int) -> bool:
     return n_tokens % shards == 0 and n_tokens >= shards
 
 
-def moe_expert_parallel(cfg, p, xf, rt):
-    """xf (T, d) -> (y (T, d), aux) through expert-sharded dispatch.
+def expert_dispatch_local(cfg, router, stack, x_loc, rt, axis: str, ep: int):
+    """This rank's token slice through route -> a2a -> expert FFN -> a2a ->
+    combine.  Must run inside a manual shard_map where ``axis`` is a live
+    mesh axis; ``rt.moe_stat_axes`` must already name the token-sharding
+    axes (the router psums its load stats over them so the aux loss is
+    shard-invariant).
 
-    Shared experts are handled by the caller (``apply_moe``) on the plain
-    GSPMD path — they are dense and need no dispatch.
+    x_loc (T_loc, d) -> (y (T_loc, d), aux); ``stack`` holds this rank's
+    E/ep slice of the expert weights.
     """
     from repro.models.moe import (_expert_ffn, _route_capacity, _routed_take,
                                   _router)
 
     m = cfg.moe
-    T, d = xf.shape
+    T_loc, d = x_loc.shape
     k, E = m.top_k, m.n_experts
+    assert E % ep == 0, (E, ep)
+    # per-source-rank capacity: same formula as one dropping group of
+    # T_loc tokens, so dropping behavior matches groups == token shards
+    C = int(math.ceil(T_loc * k * m.capacity_factor / E))
+    C = max(8, -(-C // 8) * 8)                               # pad to 8
+
+    _, weights, ids, aux = _router(cfg, {"router": router}, x_loc, rt)
+    dest, inv = _route_capacity(ids.reshape(T_loc * k), E, C)
+    x_items = jnp.broadcast_to(
+        x_loc[:, None], (T_loc, k, d)).reshape(T_loc * k, d)
+    buf = _routed_take(x_items, inv, dest).reshape(E, C, d)
+    # dispatch: (E, C, d) -> (E/ep, ep*C, d) — every rank keeps its
+    # own experts' rows from all ep peers in the group
+    buf = jax.lax.all_to_all(buf, axis, 0, 1, tiled=True)
+    out = _expert_ffn(cfg, stack, buf, rt)                   # (E/ep, ep*C, d)
+    # combine: the exact reverse exchange
+    out = jax.lax.all_to_all(out, axis, 1, 0, tiled=True)
+    rows = _routed_take(out.reshape(E * C, d), dest, inv)    # (T_loc*k, d)
+    y = (rows.reshape(T_loc, k, d) *
+         weights[..., None].astype(rows.dtype)).sum(axis=1)
+    return y, aux
+
+
+def moe_expert_parallel(cfg, p, xf, rt):
+    """xf (T, d) -> (y (T, d), aux) through expert-sharded dispatch (the
+    GSPMD entry: wraps ``expert_dispatch_local`` in its own shard_map).
+
+    Shared experts are handled by the caller (``apply_moe``) on the plain
+    GSPMD path — they are dense and need no dispatch.
+    """
+    T, d = xf.shape
     mesh = rt.expert_mesh
     axis = rt.expert_axis
     ep = mesh.shape[axis]
     tok_axes = tuple(rt.expert_token_axes)
     shards = token_shards(rt)
-    assert T % shards == 0 and E % ep == 0, (T, shards, E, ep)
-    T_loc = T // shards
-    # per-source-rank capacity: same formula as one dropping group of
-    # T_loc tokens, so dropping behavior matches groups == token shards
-    C = int(math.ceil(T_loc * k * m.capacity_factor / E))
-    C = max(8, -(-C // 8) * 8)                               # pad to 8
+    assert T % shards == 0 and cfg.moe.n_experts % ep == 0, (T, shards, ep)
 
     # constraints are meaningless inside the fully-manual shard_map;
     # the psum axes make the router's balance stats global
@@ -98,22 +140,8 @@ def moe_expert_parallel(cfg, p, xf, rt):
     stack = {n: p[n] for n in ("w_up", "w_gate", "w_down") if n in p}
 
     def body(router, stack_loc, x_loc):
-        # x_loc (T_loc, d): this rank's token slice
-        _, weights, ids, aux = _router(cfg, {"router": router}, x_loc, rt_loc)
-        dest, inv = _route_capacity(ids.reshape(T_loc * k), E, C)
-        x_items = jnp.broadcast_to(
-            x_loc[:, None], (T_loc, k, d)).reshape(T_loc * k, d)
-        buf = _routed_take(x_items, inv, dest).reshape(E, C, d)
-        # dispatch: (E, C, d) -> (E/ep, ep*C, d) — every rank keeps its
-        # own experts' rows from all ep peers in the group
-        buf = jax.lax.all_to_all(buf, axis, 0, 1, tiled=True)
-        out = _expert_ffn(cfg, stack_loc, buf, rt_loc)       # (E/ep, ep*C, d)
-        # combine: the exact reverse exchange
-        out = jax.lax.all_to_all(out, axis, 1, 0, tiled=True)
-        rows = _routed_take(out.reshape(E * C, d), dest, inv)  # (T_loc*k, d)
-        y = (rows.reshape(T_loc, k, d) *
-             weights[..., None].astype(rows.dtype)).sum(axis=1)
-        return y, aux
+        return expert_dispatch_local(cfg, router, stack_loc, x_loc, rt_loc,
+                                     axis, ep)
 
     tok_spec = P(tok_axes if len(tok_axes) > 1 else tok_axes[0], None)
     stack_spec = jax.tree.map(lambda _: P(axis, None, None), stack)
@@ -121,3 +149,30 @@ def moe_expert_parallel(cfg, p, xf, rt):
                     in_specs=(P(), stack_spec, tok_spec),
                     out_specs=(tok_spec, P()))
     return fn(p["router"], stack, xf)
+
+
+def moe_expert_parallel_manual(cfg, p, xf, rt):
+    """EP dispatch for callers *already inside* a manual shard_map (the
+    pipeline stage body): no nested shard_map — the all-to-all runs on
+    ``rt.expert_axis`` directly.  ``xf`` is this rank's local token slice
+    and the expert stacks in ``p`` are this rank's E/ep slice (the
+    pipeline's ``param_specs`` sharded them over the expert axis).
+
+    Requires the caller's tokens to actually be sharded over the expert
+    axis (``rt.moe_stat_axes`` contains it): with replicated tokens every
+    expert rank would push duplicate rows through the a2a and the expert
+    grads would overcount — ``transformer._pipeline_blocks`` validates
+    the divisibility up front.
+    """
+    axis = rt.expert_axis
+    if not axis or rt.expert_mesh is None:
+        raise ValueError("moe_expert_parallel_manual needs an expert axis")
+    if axis not in tuple(rt.moe_stat_axes):
+        raise ValueError(
+            "EP dispatch inside a pipeline stage needs the microbatch "
+            f"sharded over the {axis!r} mesh axis; this microbatch is "
+            "replicated (rows do not divide the batch axes) — use a "
+            "larger global batch or fewer pipeline microbatches")
+    ep = rt.expert_mesh.shape[axis]
+    stack = {n: p[n] for n in ("w_up", "w_gate", "w_down") if n in p}
+    return expert_dispatch_local(cfg, p["router"], stack, xf, rt, axis, ep)

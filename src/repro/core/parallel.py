@@ -25,7 +25,6 @@ both (data, model).
 """
 from __future__ import annotations
 
-import contextlib
 import dataclasses
 import functools
 from typing import Dict, Tuple
@@ -35,24 +34,9 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeConfig
-
-
-def use_mesh(mesh: Mesh):
-    """Context manager making ``mesh`` the ambient mesh for jit/constraints.
-
-    jax renamed this entry point across releases (``jax.set_mesh`` /
-    ``jax.sharding.use_mesh``); on older versions the Mesh object itself is
-    the context manager.  All repo code goes through this helper.
-    """
-    fn = getattr(jax, "set_mesh", None)
-    if fn is not None:
-        return fn(mesh)
-    fn = getattr(jax.sharding, "use_mesh", None)
-    if fn is not None:
-        return fn(mesh)
-    if hasattr(mesh, "__enter__"):
-        return mesh
-    return contextlib.nullcontext(mesh)
+from repro.core.compat import use_mesh  # noqa: F401  (canonical home:
+#                              core/compat.py; re-exported because every
+#                              launch/test call site spells par.use_mesh)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,7 +51,8 @@ class ParallelPlan:
     decode_cache_axes: Tuple[str, ...] = ("model",)
     seq_parallel_residuals: bool = True  # Megatron-SP residual stream
     pipe: str = ""                       # pipeline mesh axis ('' = no PP)
-    microbatches: int = 1                # GPipe microbatches per minibatch
+    microbatches: int = 1                # pipeline microbatches per minibatch
+    pipe_sched: str = "gpipe"            # pipeline schedule: 'gpipe' | '1f1b'
     expert: str = ""                     # expert mesh axis ('' = no EP);
                                          # factored out of the data axis, so
                                          # it also appears in dp/fsdp
@@ -349,6 +334,57 @@ def make_param_gatherer(cfg: ModelConfig, plan: ParallelPlan):
     return gather
 
 
+class _FakeKey:
+    """Synthetic tree-path entries so stage param subtrees (which lack the
+    'blocks' prefix of the full param tree) resolve through _param_spec."""
+
+    def __init__(self, key=None, idx=None):
+        if key is not None:
+            self.key = key
+        if idx is not None:
+            self.idx = idx
+
+
+def _normalize_spec(spec: P) -> P:
+    out = []
+    for e in spec:
+        if isinstance(e, tuple):
+            e = tuple(a for a in e if a)
+            e = None if not e else (e[0] if len(e) == 1 else e)
+        out.append(e)
+    return P(*out)
+
+
+def make_stage_param_spec_fn(cfg: ModelConfig, plan: ParallelPlan):
+    """(tree_path, ndim) -> PartitionSpec for pipeline *stage* param leaves.
+
+    The stage shard_map (``core/pipeline.py``) computes over the full
+    inner mesh: the stacked leaves shard their stack dim over the pipe
+    axis AND keep their model/expert sharding (the same layout
+    ``_param_spec`` assigns, minus the FSDP axes — GSPMD all-gathers those
+    at shard_map entry, exactly like the per-layer ZeRO gather on the
+    non-pipelined path).  The stage body then runs the Megatron psums /
+    expert all-to-all on the still-sharded dims instead of replicating
+    the model axis (the pre-schedule-refactor waste).
+    """
+    gplan = dataclasses.replace(plan, fsdp=())
+    prefix = (_FakeKey(key="blocks"), _FakeKey(idx=0))
+    head_tp = plan.attn == "head_tp"
+
+    def spec_fn(path, ndim):
+        sp = _param_spec(cfg, gplan, prefix + tuple(path), ndim)
+        if not head_tp:
+            # context plans keep stage params replicated over the model
+            # axis (the sequence is sharded instead); strip the model
+            # entries _param_spec assigns for the GSPMD layout
+            sp = P(*[None if e == plan.tp else
+                     (tuple(a for a in e if a != plan.tp)
+                      if isinstance(e, tuple) else e) for e in sp])
+        return _normalize_spec(sp)
+
+    return spec_fn
+
+
 def make_runtime(cfg: ModelConfig, plan: ParallelPlan, shape: ShapeConfig,
                  **overrides):
     """Runtime wired to this plan's activation constraints.
@@ -377,12 +413,22 @@ def make_runtime(cfg: ModelConfig, plan: ParallelPlan, shape: ShapeConfig,
                   expert_mesh=plan.mesh,
                   expert_token_axes=tuple(plan.dp) + (plan.tp,))
     if plan.pipe and shape.mode != "decode":
-        # GPipe path (train / cache-less prefill); decode steps thread a
-        # cache and take the sequential scan over the pipe-sharded stack
+        # pipeline path (train / cache-less prefill); decode steps thread a
+        # cache and take the sequential scan over the pipe-sharded stack.
+        # The stage body composes the full inner mesh: head_tp plans run
+        # Megatron psums over the model axis, context plans shard the
+        # sequence over it, and MoE layers dispatch over the expert axis.
+        model_gt1 = plan.tp_size > 1
         kw.update(pipeline_axis=plan.pipe,
                   pipeline_microbatches=plan.microbatches,
                   pipeline_mesh=plan.mesh,
-                  pipeline_batch_axes=tuple(plan.dp))
+                  pipeline_batch_axes=tuple(plan.dp),
+                  pipeline_schedule=plan.pipe_sched,
+                  pipeline_param_spec_fn=make_stage_param_spec_fn(cfg, plan),
+                  pipeline_tp_axis=(plan.tp if model_gt1
+                                    and plan.attn == "head_tp" else ""),
+                  pipeline_cp_axis=(plan.tp if model_gt1
+                                    and plan.attn == "context" else ""))
     if plan.attn == "context":
         kw["attn_q_chunk"] = shape.seq_len
     if overrides.pop("fsdp_gather_per_block", False):

@@ -1,44 +1,97 @@
-"""Pipeline parallelism: GPipe schedule over a mesh axis via shard_map +
-collective_permute (ppermute), jax-native (no NCCL p2p emulation).
+"""Pipeline parallelism: pluggable schedules (GPipe, 1F1B) over a mesh axis
+via shard_map + collective_permute (ppermute), jax-native (no NCCL p2p
+emulation).
 
 Each device along the ``pipe`` axis owns one *stage* = a contiguous group
 of layers (the stacked layer params are sharded over the pipe axis on
 their leading/stack dim, so stage p holds layers [p*L/P, (p+1)*L/P)).  A
-minibatch is split into M microbatches; for ``M + P - 1`` ticks every
-stage computes on its current activation and ppermutes it to the next
-stage.  Ticks where a stage holds no valid microbatch are the *pipeline
-bubble* — fraction (P-1)/(M+P-1), exactly the term the paper's cost model
-charges (``core/costmodel.py``).
+minibatch is split into M microbatches that stream through the stages; the
+*schedule* decides the per-tick op each stage runs and — crucially — how
+many microbatch activations a stage must hold at once:
 
-The schedule composes with data parallelism: ``pipeline_apply`` shard_maps
-over the *full* mesh, with microbatch activations sharded over the batch
-axes (``x_spec``) and stage params sharded over ``axis`` only — GSPMD
-all-gathers FSDP-sharded params at entry, and the shard_map transpose
-psums parameter cotangents over the batch axes on the way back.
+  * ``gpipe``  — all M forwards first, then (under jax.grad's transposed
+    scan) all M backwards.  In-flight activations per stage: M.
+  * ``1f1b``   — PipeDream-flush/Megatron one-forward-one-backward: after a
+    (P - stage)-deep warmup each stage alternates F and B, so a microbatch's
+    stored activation is freed as soon as its backward runs.  In-flight
+    activations per stage: min(M, P).
 
-Differentiable: shard_map + ppermute have transpose rules, so the same
-function trains under jax.grad (the backward pass runs the reverse
-schedule automatically).
+Both schedules idle for the same fraction of ticks — ``(P-1)/(M+P-1)``,
+exactly the bubble term ``core/costmodel.step_time`` charges — because at
+equal per-tick cost 1F1B *reorders* the bubble rather than removing it.
+What 1F1B buys is the smaller activation footprint, which is why the cost
+model's ``mem`` term (and therefore ``fits``) is schedule-dependent.
+
+The stage body computes over the *full inner mesh*: activations are
+sharded over the batch axes (``x_spec``), stage params over ``axis`` plus
+any tensor-/expert-parallel axes named in ``param_specs`` (Megatron-TP
+psums and the MoE all-to-all run inside the stage — see
+``models/transformer.make_pipelined_block_fn`` / ``core/expert.py``), and
+GSPMD all-gathers FSDP-sharded params at entry.
+
+Differentiable: the GPipe path trains through shard_map + ppermute's
+transpose rules; the 1F1B path is a ``jax.custom_vjp`` whose backward runs
+the combined recompute-forward/backward 1F1B tick loop (the primal stores
+only the schedule inputs, so per-stage activation residency really is
+bounded by the warmup depth).
 """
 from __future__ import annotations
 
+import dataclasses
+import logging
 import time
-from typing import Callable, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-if hasattr(jax, "shard_map"):          # jax >= 0.6
-    def _shard_map(f, mesh, in_specs, out_specs):
-        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs, check_vma=False)
-else:                                   # jax 0.4.x
-    from jax.experimental.shard_map import shard_map as _sm
+from repro.core.compat import shard_map as _shard_map
 
-    def _shard_map(f, mesh, in_specs, out_specs):
-        return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                   check_rep=False)
+logger = logging.getLogger(__name__)
+
+SCHEDULE_NAMES = ("gpipe", "1f1b")
+
+
+# ---------------------------------------------------------------------------
+# analytic terms (pure python — importable by the cost model without tracing)
+# ---------------------------------------------------------------------------
+
+def bubble_fraction(n_stages: int, n_microbatches: int,
+                    sched: str = "gpipe") -> float:
+    """Idle-tick fraction of the schedule.  Identical for GPipe and 1F1B
+    at equal per-tick cost: GPipe idles (P-1) of (M+P-1) ticks in each of
+    the forward and backward passes; 1F1B idles 2(P-1) of 2(M+P-1)
+    combined ticks.  (1F1B's win is memory, not bubble — see
+    ``inflight_microbatches``.)"""
+    if sched not in SCHEDULE_NAMES:
+        raise ValueError(f"unknown pipeline schedule {sched!r}; "
+                         f"expected one of {SCHEDULE_NAMES}")
+    if n_stages <= 1:
+        return 0.0
+    return (n_stages - 1) / (n_microbatches + n_stages - 1)
+
+
+def inflight_microbatches(n_stages: int, n_microbatches: int,
+                          sched: str = "gpipe") -> int:
+    """Peak number of microbatch activations a stage holds awaiting
+    backward — the schedule-dependent factor in pipeline activation
+    memory (GPipe: M; 1F1B: min(M, P))."""
+    if sched not in SCHEDULE_NAMES:
+        raise ValueError(f"unknown pipeline schedule {sched!r}; "
+                         f"expected one of {SCHEDULE_NAMES}")
+    if n_stages <= 1:
+        return n_microbatches
+    if sched == "1f1b":
+        return min(n_microbatches, n_stages)
+    return n_microbatches
+
+
+# ---------------------------------------------------------------------------
+# batch-axis fitting
+# ---------------------------------------------------------------------------
+
+_warned_dropped: set = set()
 
 
 def batch_axes_spec(mesh, axes: Sequence[str], dim_size: int) -> Tuple[str, ...]:
@@ -47,40 +100,44 @@ def batch_axes_spec(mesh, axes: Sequence[str], dim_size: int) -> Tuple[str, ...]
     Mirrors ``parallel._fit_spec``: when the microbatch row count cannot
     occupy the data axis (e.g. global_batch 8 split into 8 microbatches of
     1 row), the batch dim is kept replicated and the compute is redundant
-    across that axis — correct, just not data-parallel.
+    across that axis — correct, just not data-parallel.  Dropping an axis
+    is logged (once per (axes, size, mesh-shape) combination) because the
+    redundancy is silent in every other signal: the step *runs*, only
+    ``dp``-fold slower per token than the plan's mesh suggests.
     """
     keep = []
+    size = dim_size
     for a in axes:
         n = mesh.shape[a]
-        if n > 1 and dim_size % n == 0 and dim_size >= n:
+        if n > 1 and size % n == 0 and size >= n:
             keep.append(a)
-            dim_size //= n
+            size //= n
+    dropped = tuple(a for a in axes if a not in keep and mesh.shape[a] > 1)
+    if dropped:
+        key = (tuple(axes), dim_size,
+               tuple((a, int(mesh.shape[a])) for a in axes))
+        if key not in _warned_dropped:
+            _warned_dropped.add(key)
+            logger.warning(
+                "pipeline microbatch of %d rows does not occupy batch "
+                "mesh axes %s (sizes %s): the microbatch is replicated "
+                "and compute is redundant across them — use a larger "
+                "global batch or fewer microbatches for true data "
+                "parallelism", dim_size, dropped,
+                tuple(int(mesh.shape[a]) for a in dropped))
     return tuple(keep)
 
 
-def pipeline_apply(stage_fn: Callable, stage_params, x_microbatches,
-                   mesh, axis: str = "pipe", extras=None,
-                   batch_axes: Sequence[str] = ()):
-    """Run x through P stages of stage_fn under a GPipe schedule.
+def _entry(axes: Tuple[str, ...]):
+    return axes if len(axes) > 1 else (axes[0] if axes else None)
 
-    stage_fn: (stage_params_local, h, extras) -> (h, aux), applied by every
-      stage on its local slice of the stacked layer params; ``aux`` is a
-      float32 scalar per-stage extra loss (the MoE load-balance term) that
-      rides along the activation through the schedule.
-    stage_params: pytree whose leaves have a leading stack dim divisible by
-      the pipe axis size (sharded contiguously over ``axis``: stage p gets
-      slice [p*L/P, (p+1)*L/P)).
-    x_microbatches: (M, mb, ...) microbatched activations; the mb (batch)
-      dim is sharded over ``batch_axes`` when divisible, else replicated.
-    extras: pytree broadcast to every stage unsharded (e.g. rope angles
-      with batch dim 1).
-    Returns ((M, mb, ...) outputs sharded like x, aux summed over
-    microbatches and stages — a replicated scalar).
-    """
-    n_stages = mesh.shape[axis]
-    kept = batch_axes_spec(mesh, batch_axes, x_microbatches.shape[1])
-    x_spec = P(None, kept if len(kept) > 1 else (kept[0] if kept else None))
 
+# ---------------------------------------------------------------------------
+# the shared forward tick loop (used by GPipe's differentiable path and as
+# the 1F1B primal)
+# ---------------------------------------------------------------------------
+
+def _make_fwd_body(stage_fn: Callable, axis: str, n_stages: int):
     def per_stage(params_local, xs, extras_local):
         # params_local: (L/P, ...) stage slice; xs: (M, local_mb, ...)
         stage = jax.lax.axis_index(axis)
@@ -136,12 +193,388 @@ def pipeline_apply(stage_fn: Callable, stage_params, x_microbatches,
             aux_out * (stage == n_stages - 1).astype(jnp.float32), axis)
         return outputs, aux_mb
 
-    pspec = jax.tree.map(lambda _: P(axis), stage_params)
+    return per_stage
+
+
+@dataclasses.dataclass(frozen=True)
+class _Specs:
+    """Resolved shard_map specs for one pipeline_apply call."""
+    x_spec: P
+    pspec: object                      # pytree of P over stage_params
+    espec: object                      # pytree of P over extras
+    kept: Tuple[str, ...]              # batch axes actually sharding the mb
+    seq_axis: str                      # context axis sharding the seq dim
+
+
+def _resolve_specs(stage_params, x, mesh, axis, extras, batch_axes,
+                   param_specs, seq_axis) -> _Specs:
+    kept = batch_axes_spec(mesh, batch_axes, x.shape[1])
+    entries: List = [None, _entry(kept)]
+    if seq_axis:
+        if x.ndim < 3 or x.shape[2] % mesh.shape[seq_axis]:
+            raise ValueError(
+                f"context-parallel pipeline needs the sequence dim "
+                f"(x.shape={x.shape}) divisible by mesh axis "
+                f"{seq_axis!r}={mesh.shape[seq_axis]}")
+        entries.append(seq_axis)
+    x_spec = P(*entries)
+    pspec = (jax.tree.map(lambda _: P(axis), stage_params)
+             if param_specs is None else param_specs)
     espec = jax.tree.map(lambda _: P(), extras)
-    fn = _shard_map(per_stage, mesh, in_specs=(pspec, x_spec, espec),
-                    out_specs=(x_spec, P()))
-    outputs, aux_mb = fn(stage_params, x_microbatches, extras)
-    return outputs, aux_mb.sum()
+    return _Specs(x_spec, pspec, espec, kept, seq_axis)
+
+
+def _token_axes(specs: _Specs) -> Tuple[str, ...]:
+    """Mesh axes over which the stage body's tokens are sharded (the axes
+    whose param-cotangent contributions are distinct and must be summed)."""
+    return specs.kept + ((specs.seq_axis,) if specs.seq_axis else ())
+
+
+def _spec_axes(spec: P) -> Tuple[str, ...]:
+    out = []
+    for e in spec:
+        if e is None:
+            continue
+        out.extend(e if isinstance(e, tuple) else (e,))
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+class PipelineSchedule:
+    """One pipeline execution schedule: per-tick op tables (for simulation
+    and tests), analytic bubble/memory terms, and the executable
+    ``apply`` that runs stage_fn over the mesh."""
+
+    name: str = "?"
+
+    # ---- analytic -------------------------------------------------------
+    def bubble_fraction(self, n_stages: int, n_microbatches: int) -> float:
+        return bubble_fraction(n_stages, n_microbatches, self.name)
+
+    def inflight_microbatches(self, n_stages: int,
+                              n_microbatches: int) -> int:
+        return inflight_microbatches(n_stages, n_microbatches, self.name)
+
+    # ---- simulation -----------------------------------------------------
+    def tick_table(self, n_stages: int, n_microbatches: int
+                   ) -> List[List[Tuple[str, int]]]:
+        """[tick][stage] -> ('F', j) | ('B', j) | ('idle', -1) covering the
+        full fwd+bwd execution.  Host-side python; the executable loops are
+        index arithmetic over exactly these tables."""
+        raise NotImplementedError
+
+    def simulate(self, n_stages: int, n_microbatches: int) -> Dict:
+        """Counted-from-the-table bubble fraction and peak in-flight
+        activations — what the analytic formulas must reproduce."""
+        table = self.tick_table(n_stages, n_microbatches)
+        idle = sum(op == "idle" for row in table for op, _ in row)
+        total = len(table) * n_stages
+        peak = 0
+        inflight = [set() for _ in range(n_stages)]
+        for row in table:
+            for s, (op, j) in enumerate(row):
+                if op == "F":
+                    inflight[s].add(j)
+                elif op == "B":
+                    inflight[s].discard(j)
+            peak = max(peak, max(len(f) for f in inflight))
+        return {"ticks": len(table), "bubble": idle / total,
+                "peak_inflight": peak}
+
+    # ---- execution ------------------------------------------------------
+    def apply(self, stage_fn, stage_params, x, mesh, axis, extras,
+              batch_axes=(), param_specs=None, seq_axis="", tp_axis=""):
+        raise NotImplementedError
+
+
+class GPipeSchedule(PipelineSchedule):
+    """All forwards, then (under autodiff's transposed scan) all
+    backwards; M microbatch activations in flight per stage."""
+
+    name = "gpipe"
+
+    def tick_table(self, n_stages, n_microbatches):
+        P_, M = n_stages, n_microbatches
+        table = []
+        for t in range(M + P_ - 1):                       # forward pass
+            table.append([("F", t - s) if 0 <= t - s < M else ("idle", -1)
+                          for s in range(P_)])
+        for u in range(M + P_ - 1):                       # transposed scan
+            t = M + P_ - 2 - u
+            table.append([("B", t - s) if 0 <= t - s < M else ("idle", -1)
+                          for s in range(P_)])
+        return table
+
+    def apply(self, stage_fn, stage_params, x, mesh, axis, extras,
+              batch_axes=(), param_specs=None, seq_axis="", tp_axis=""):
+        n_stages = mesh.shape[axis]
+        specs = _resolve_specs(stage_params, x, mesh, axis, extras,
+                               batch_axes, param_specs, seq_axis)
+        fn = _shard_map(_make_fwd_body(stage_fn, axis, n_stages), mesh,
+                        in_specs=(specs.pspec, specs.x_spec, specs.espec),
+                        out_specs=(specs.x_spec, P()))
+        return fn(stage_params, x, extras)
+
+
+class OneFOneBSchedule(PipelineSchedule):
+    """1F1B (PipeDream-flush): stage s runs P - s warmup forwards, then
+    alternates one-forward-one-backward, then drains.  Per-stage in-flight
+    activations <= P instead of M.
+
+    Executable via ``jax.custom_vjp``: the primal runs the plain forward
+    tick loop storing only the schedule *inputs*; the backward replays
+    microbatch forwards just-in-time through the pipe (standard remat,
+    like the GPipe path under ``Runtime.remat``) interleaved with the
+    per-microbatch backwards in 1F1B order, holding at most min(M, P)
+    stage-input activations in a ring buffer.
+
+    Tick alignment: stage s forwards microbatch j at tick ``s + j`` during
+    warmup (j < P - s) and ``2j + s`` in steady state; it backwards j at
+    ``2j + 2P - 1 - s`` — so every consumed value was produced by the
+    neighbor exactly one tick earlier, except across the warmup/steady
+    boundary, where receivers *latch* the incoming value until their
+    scheduled tick (neighbors forward idle-tick payloads are ignored).
+    """
+
+    name = "1f1b"
+
+    # -- tick arithmetic (shared by the table and the traced loop) --------
+    @staticmethod
+    def _fwd_tick(P_, M, s, j):
+        return s + j if j < P_ - s else 2 * j + s
+
+    @staticmethod
+    def _bwd_tick(P_, M, s, j):
+        return 2 * j + 2 * P_ - 1 - s
+
+    def tick_table(self, n_stages, n_microbatches):
+        P_, M = n_stages, n_microbatches
+        if M < P_:
+            raise ValueError(f"1f1b needs microbatches >= stages "
+                             f"(got M={M} < P={P_})")
+        total = 2 * (M + P_ - 1)
+        table = [[("idle", -1)] * P_ for _ in range(total)]
+        for s in range(P_):
+            for j in range(M):
+                table[self._fwd_tick(P_, M, s, j)][s] = ("F", j)
+                table[self._bwd_tick(P_, M, s, j)][s] = ("B", j)
+        return table
+
+    def apply(self, stage_fn, stage_params, x, mesh, axis, extras,
+              batch_axes=(), param_specs=None, seq_axis="", tp_axis=""):
+        n_stages = mesh.shape[axis]
+        M = x.shape[0]
+        if M < n_stages:
+            raise ValueError(f"1f1b needs microbatches >= stages "
+                             f"(got M={M} < P={n_stages})")
+        W = min(M, n_stages)            # activation ring depth
+        specs = _resolve_specs(stage_params, x, mesh, axis, extras,
+                               batch_axes, param_specs, seq_axis)
+        fwd_sm = _shard_map(
+            _make_fwd_body(stage_fn, axis, n_stages), mesh,
+            in_specs=(specs.pspec, specs.x_spec, specs.espec),
+            out_specs=(specs.x_spec, P()))
+
+        tok_axes = _token_axes(specs)
+        # Megatron-TP cotangent convention inside the manual loop: the
+        # stage body contains raw psums, so a replicated value's physical
+        # cotangents must SUM across model ranks to the logical one (the
+        # "split" convention — see layers.tp_reduce_out).  Injected
+        # cotangents (dy, d_aux) are therefore divided by tp, and the
+        # final reductions psum back over the model axis.
+        tp_div = mesh.shape[tp_axis] if tp_axis else 1
+        grad_axes = tok_axes + (
+            (tp_axis,) if tp_axis and tp_axis not in tok_axes else ())
+        # per-leaf gradient reduction: sum over the axes this leaf is
+        # replicated across but whose contributions are distinct (token
+        # shards; split model-cotangents under TP).  A leaf already
+        # sharded over 'expert'/'model' owns its slice's cotangent.
+        p_reduce = jax.tree.map(
+            lambda sp: tuple(a for a in grad_axes
+                             if a not in _spec_axes(sp)),
+            specs.pspec, is_leaf=lambda s: isinstance(s, P))
+        # extras feed every stage and every token/head shard
+        e_reduce = (axis,) + grad_axes
+
+        def bwd_body(params_local, xs, extras_local, dy, d_aux):
+            stage = jax.lax.axis_index(axis)
+            Mi = xs.shape[0]
+            mb_shape = xs.shape[1:]
+            total = 2 * (Mi + n_stages - 1)
+            fwd_perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+            bwd_perm = [(i, (i - 1) % n_stages) for i in range(n_stages)]
+            zeros_mb = jnp.zeros(mb_shape, xs.dtype)
+
+            def is_f_at(s, t):
+                warm_s = n_stages - s
+                jw = t - s
+                is_warm = (jw >= 0) & (jw < warm_s)
+                js = jw // 2
+                steady = (jw >= 0) & (jw % 2 == 0) & (js >= warm_s) & (js < Mi)
+                return is_warm | steady, jnp.clip(
+                    jnp.where(is_warm, jw, js), 0, Mi - 1)
+
+            def is_b_at(s, t):
+                tb = t - (2 * n_stages - 1 - s)
+                return (tb >= 0) & (tb % 2 == 0) & (tb // 2 < Mi), \
+                    jnp.clip(tb // 2, 0, Mi - 1)
+
+            def tick(carry, t):
+                h_pend, cot_pend, act_buf, d_params, d_extras, d_xs = carry
+                is_f, jf = is_f_at(stage, t)
+                is_b, jb = is_b_at(stage, t)
+
+                def b_branch(op):
+                    h_pend, act_buf, d_params, d_extras, d_xs = op
+                    h_saved = jax.lax.dynamic_index_in_dim(
+                        act_buf, jb % W, axis=0, keepdims=False)
+                    dy_in = jnp.where(stage == n_stages - 1,
+                                      dy[jb] / tp_div, cot_pend)
+                    da = d_aux[jb].astype(jnp.float32) / tp_div
+                    _, vjp_fn = jax.vjp(stage_fn, params_local, h_saved,
+                                        extras_local)
+                    dp, dh, de = vjp_fn((dy_in, da.reshape(())))
+                    d_params = jax.tree.map(jnp.add, d_params, dp)
+                    d_extras = jax.tree.map(jnp.add, d_extras, de)
+                    upd = jax.lax.dynamic_update_slice(
+                        d_xs, dh[None].astype(d_xs.dtype),
+                        (jb,) + (0,) * dh.ndim)
+                    d_xs = jnp.where(stage == 0, upd, d_xs)
+                    return zeros_mb, dh, act_buf, d_params, d_extras, d_xs
+
+                def f_branch(op):
+                    h_pend, act_buf, d_params, d_extras, d_xs = op
+
+                    def do_f(opb):
+                        h_pend, act_buf = opb
+                        x_in = jnp.where(stage == 0, xs[jf], h_pend)
+                        h_out, _ = stage_fn(params_local, x_in, extras_local)
+                        act_buf = jax.lax.dynamic_update_slice(
+                            act_buf, x_in[None],
+                            (jf % W,) + (0,) * x_in.ndim)
+                        return h_out, act_buf
+
+                    h_out, act_buf = jax.lax.cond(
+                        is_f, do_f, lambda opb: (zeros_mb, opb[1]),
+                        (h_pend, act_buf))
+                    return h_out, zeros_mb, act_buf, d_params, d_extras, d_xs
+
+                out = jax.lax.cond(
+                    is_b, b_branch, f_branch,
+                    (h_pend, act_buf, d_params, d_extras, d_xs))
+                h_pay, cot_pay, act_buf, d_params, d_extras, d_xs = out
+                h_recv = jax.lax.ppermute(h_pay, axis, fwd_perm)
+                cot_recv = jax.lax.ppermute(cot_pay, axis, bwd_perm)
+                # latch: accept only freshly-produced neighbor values (idle
+                # ticks send zeros, and across the warmup/steady boundary a
+                # value is consumed several ticks after it was produced)
+                prev_f, _ = is_f_at((stage - 1) % n_stages, t)
+                next_b, _ = is_b_at((stage + 1) % n_stages, t)
+                h_pend = jnp.where(prev_f, h_recv, h_pend)
+                cot_pend = jnp.where(next_b, cot_recv, cot_pend)
+                return (h_pend, cot_pend, act_buf,
+                        d_params, d_extras, d_xs), None
+
+            carry0 = (zeros_mb, zeros_mb,
+                      jnp.zeros((W,) + mb_shape, xs.dtype),
+                      jax.tree.map(jnp.zeros_like, params_local),
+                      jax.tree.map(jnp.zeros_like, extras_local),
+                      jnp.zeros_like(xs))
+            (_, _, _, d_params, d_extras, d_xs), _ = jax.lax.scan(
+                tick, carry0, jnp.arange(total))
+            d_params = jax.tree.map(
+                lambda g, axes: jax.lax.psum(g, axes) if axes else g,
+                d_params, p_reduce)
+            d_extras = jax.tree.map(
+                lambda g: jax.lax.psum(g, e_reduce), d_extras)
+            # only stage 0 wrote d_xs; under TP its per-model-rank values
+            # are split cotangents — the psum also recombines those
+            d_xs = jax.lax.psum(
+                d_xs, (axis,) + ((tp_axis,) if tp_axis else ()))
+            return d_params, d_xs, d_extras
+
+        bwd_sm = _shard_map(
+            bwd_body, mesh,
+            in_specs=(specs.pspec, specs.x_spec, specs.espec,
+                      specs.x_spec, P()),
+            out_specs=(specs.pspec, specs.x_spec, specs.espec))
+
+        @jax.custom_vjp
+        def call(stage_params, x, extras):
+            return fwd_sm(stage_params, x, extras)
+
+        def call_fwd(stage_params, x, extras):
+            # residuals are the schedule *inputs* only — the backward
+            # regenerates stage activations just-in-time (<= P in flight)
+            return fwd_sm(stage_params, x, extras), (stage_params, x, extras)
+
+        def call_bwd(res, cots):
+            stage_params, x, extras = res
+            d_out, d_aux = cots
+            return bwd_sm(stage_params, x, extras, d_out, d_aux)
+
+        call.defvjp(call_fwd, call_bwd)
+        return call(stage_params, x, extras)
+
+
+SCHEDULES: Dict[str, PipelineSchedule] = {
+    "gpipe": GPipeSchedule(),
+    "1f1b": OneFOneBSchedule(),
+}
+
+
+def get_schedule(name: str) -> PipelineSchedule:
+    try:
+        return SCHEDULES[name]
+    except KeyError:
+        raise ValueError(f"unknown pipeline schedule {name!r}; "
+                         f"expected one of {sorted(SCHEDULES)}") from None
+
+
+# ---------------------------------------------------------------------------
+# entry point
+# ---------------------------------------------------------------------------
+
+def pipeline_apply(stage_fn: Callable, stage_params, x_microbatches,
+                   mesh, axis: str = "pipe", extras=None,
+                   batch_axes: Sequence[str] = (), schedule: str = "gpipe",
+                   param_specs=None, seq_axis: str = "", tp_axis: str = ""):
+    """Run x through P stages of stage_fn under the named schedule.
+
+    stage_fn: (stage_params_local, h, extras) -> (h, aux), applied by every
+      stage on its local slice of the stacked layer params; ``aux`` is a
+      float32 scalar per-stage extra loss (the MoE load-balance term) that
+      rides along the activation through the schedule.  It must be
+      *shard-invariant* across the batch/model axes (the MoE stats are
+      psum-reduced inside the router for exactly this reason).
+    stage_params: pytree whose leaves have a leading stack dim divisible by
+      the pipe axis size (sharded contiguously over ``axis``: stage p gets
+      slice [p*L/P, (p+1)*L/P)).
+    x_microbatches: (M, mb, ...) microbatched activations; the mb (batch)
+      dim is sharded over ``batch_axes`` when divisible, else replicated.
+    extras: pytree broadcast to every stage unsharded (e.g. rope angles
+      with batch dim 1).
+    schedule: 'gpipe' | '1f1b' (see module docstring).
+    param_specs: optional pytree of PartitionSpecs for stage_params; the
+      default shards only the stack dim over ``axis``.  Inner-mesh plans
+      pass Megatron-TP / expert-sharded specs so the stage body computes
+      over the model/expert axes instead of replicating.
+    seq_axis: mesh axis sharding the sequence dim of x inside the stage
+      (manual context parallelism; the stage body must gather KV).
+    tp_axis: mesh axis the stage body runs Megatron psums over (used to
+      reduce extras-cotangents; the psums themselves live in stage_fn).
+
+    Returns ((M, mb, ...) outputs sharded like x, aux summed over
+    microbatches and stages — a replicated scalar).
+    """
+    out, aux_mb = get_schedule(schedule).apply(
+        stage_fn, stage_params, x_microbatches, mesh, axis, extras,
+        batch_axes=batch_axes, param_specs=param_specs, seq_axis=seq_axis,
+        tp_axis=tp_axis)
+    return out, aux_mb.sum()
 
 
 def make_pipelined_block_fn(cfg, rt):
@@ -150,13 +583,38 @@ def make_pipelined_block_fn(cfg, rt):
     ``extras`` carries the rope angles (batch dim 1, broadcast over the
     local microbatch).  The Runtime must have ``constrain=None``: the
     stage body runs inside a fully-manual shard_map where named-sharding
-    constraints are meaningless.  Returns (h, aux): the per-stage sum of
-    the MoE load-balance losses of this stage's layers (zeros for dense
-    stacks), which ``pipeline_apply`` threads through the schedule.
+    constraints are meaningless.  Inner-mesh composition is driven by the
+    Runtime fields:
+
+      * ``rt.tp_reduce_axis``  — Megatron-TP: the layer code sees a
+        head/hidden-local config (the caller shards params over the model
+        axis via ``param_specs``) and ``_apply_layer`` psums the mixer/ffn
+        outputs over this axis;
+      * ``rt.cp_axis``         — manual context parallelism: attention
+        gathers KV over this axis and offsets its causal mask;
+      * ``rt.moe_impl == 'ep_manual'`` — MoE layers dispatch through
+        ``core/expert.py``'s all-to-all on ``rt.expert_axis`` directly
+        (we are already inside the manual mesh).
+
+    Returns (h, aux): the per-stage sum of the MoE load-balance losses of
+    this stage's layers (zeros for dense stacks), which the schedule
+    threads through the ticks.
     """
     from repro.models.transformer import _apply_layer, _sig
 
     sig = _sig(cfg, 0)
+    cfg_stage = cfg
+    if rt.tp_reduce_axis:
+        # Megatron-TP inside the manual mesh: the stage body sees *local*
+        # head/hidden shapes, so hand the layer code a config with local
+        # counts (head_dim pinned first — it must not be re-derived from
+        # the sliced head count)
+        tp = rt.pipeline_mesh.shape[rt.tp_reduce_axis]
+        cfg_stage = dataclasses.replace(
+            cfg, head_dim=cfg.head_dim_,
+            n_heads=cfg.n_heads // tp,
+            n_kv_heads=cfg.kv_heads // tp)
+
     apply = _apply_layer
     if rt.remat:
         apply = jax.checkpoint(_apply_layer, static_argnums=(0, 1, 5))
@@ -165,7 +623,7 @@ def make_pipelined_block_fn(cfg, rt):
         # stage_params: {'layers': pytree stacked (L_per_stage, ...)}
         def body(carry, lp):
             h_, aux_ = carry
-            h2, _, a = apply(cfg, sig, lp, h_, rope_ang, rt)
+            h2, _, a = apply(cfg_stage, sig, lp, h_, rope_ang, rt)
             return (h2, aux_ + a), None
         (h, aux), _ = jax.lax.scan(
             body, (h, jnp.zeros((), jnp.float32)), stage_params["layers"])
@@ -174,14 +632,10 @@ def make_pipelined_block_fn(cfg, rt):
     return stage_fn
 
 
-def bubble_fraction(n_stages: int, n_microbatches: int) -> float:
-    return (n_stages - 1) / (n_microbatches + n_stages - 1)
-
-
 def measure_bubble_fraction(step_for_m: Callable[[int], Callable[[], object]],
                             n_stages: int, microbatches: int,
                             m2: Optional[int] = None,
-                            n_iter: int = 3) -> dict:
+                            n_iter: int = 3, sched: str = "gpipe") -> dict:
     """Empirically estimate the pipeline bubble from wall time.
 
     ``step_for_m(M)`` returns a zero-arg compiled callable running the
@@ -192,8 +646,14 @@ def measure_bubble_fraction(step_for_m: Callable[[int], Callable[[], object]],
         bubble_measured = (P - 1) * t_tick / t(M)
 
     which equals (P-1)/(M+P-1) up to the constant overhead term — the
-    executable counterpart of ``bubble_fraction`` / the cost model's GPipe
-    charge.
+    executable counterpart of ``bubble_fraction`` / the cost model's
+    per-schedule bubble charge.
+
+    On a noisy host the two-point fit can come out non-increasing
+    (t(2M) <= t(M)); that is *not* a zero bubble, it is a failed fit —
+    the record flags it as ``fit_unreliable`` so downstream consumers
+    (dryrun artifacts, BENCH_pipeline.json, the tier-1 probe test) can
+    retry or discard instead of trusting a fabricated 0.0.
     """
     m1 = microbatches
     m2 = m2 or 2 * m1
@@ -209,11 +669,13 @@ def measure_bubble_fraction(step_for_m: Callable[[int], Callable[[], object]],
 
     t1 = timed(step_for_m(m1))
     t2 = timed(step_for_m(m2))
+    unreliable = t2 <= t1 or t1 <= 0
     t_tick = max((t2 - t1) / (m2 - m1), 0.0)
     measured = (n_stages - 1) * t_tick / t1 if t1 > 0 else 0.0
     return {
-        "pp": n_stages, "microbatches": m1,
+        "pp": n_stages, "microbatches": m1, "sched": sched,
         "t_step_s": t1, "t_step_2m_s": t2, "t_tick_s": t_tick,
-        "bubble_predicted": bubble_fraction(n_stages, m1),
+        "bubble_predicted": bubble_fraction(n_stages, m1, sched),
         "bubble_measured": measured,
+        "fit_unreliable": bool(unreliable),
     }

@@ -266,14 +266,19 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
             "donate": donate,
         }
         if strat.pp > 1:
-            # pipeline section: the analytic GPipe bubble, plus (on a live
-            # host mesh with --measure_bubble) the executed one, so the
-            # cost model's (P-1)/(M+P-1) term is validated, not assumed
-            from repro.core.pipeline import bubble_fraction
+            # pipeline section: the analytic per-schedule bubble and
+            # in-flight activation count, plus (on a live host mesh with
+            # --measure_bubble) the executed bubble, so the cost model's
+            # schedule terms are validated, not assumed
+            from repro.core.pipeline import (bubble_fraction,
+                                             inflight_microbatches)
             rec["pipeline"] = {
                 "pp": strat.pp, "microbatches": strat.microbatches,
-                "bubble_predicted": bubble_fraction(strat.pp,
-                                                    strat.microbatches),
+                "sched": strat.sched,
+                "bubble_predicted": bubble_fraction(
+                    strat.pp, strat.microbatches, strat.sched),
+                "inflight_microbatches": inflight_microbatches(
+                    strat.pp, strat.microbatches, strat.sched),
             }
             # the probe only means something on a live host mesh: on a
             # pod topology the 512 CPU-emulated fake devices would

@@ -74,7 +74,8 @@ def main():
                          "chips)")
     ap.add_argument("--strategy", default="auto",
                     help="'auto' (planner) or a spec string like hsdp_tp4 / "
-                         "fsdp_cp2 / ddp")
+                         "fsdp_cp2 / fsdp_pp2_mb8_1f1b / fsdp_pp2_ep2_mb2 / "
+                         "ddp")
     ap.add_argument("--objective", default="wps",
                     choices=sorted(strategy_lib.OBJECTIVES))
     ap.add_argument("--host_devices", type=int, default=8,

@@ -198,6 +198,20 @@ def _project_qkv(cfg, p, x, rt: Runtime):
     return q, k, v
 
 
+def _cp_attend(q, k, v, window, scale, axis):
+    """Manual context parallelism inside a shard_map stage: q/k/v hold this
+    rank's contiguous sequence shard; K/V are all-gathered over ``axis``
+    (gathered-KV exact attention) and the causal mask is offset by the
+    rank's global position."""
+    S_loc = q.shape[1]
+    k_full = jax.lax.all_gather(k, axis, axis=1, tiled=True)
+    v_full = jax.lax.all_gather(v, axis, axis=1, tiled=True)
+    idx = jax.lax.axis_index(axis)
+    q_pos = idx * S_loc + jnp.arange(S_loc)
+    k_pos = jnp.arange(k_full.shape[1])
+    return _attend_dense(q, k_full, v_full, q_pos, k_pos, window, scale)
+
+
 def attention_block(cfg, p, x, rope_ang, rt: Runtime, cache=None,
                     want_cache: bool = False):
     """Full attention sublayer.
@@ -206,6 +220,11 @@ def attention_block(cfg, p, x, rope_ang, rt: Runtime, cache=None,
     Decode:        x (B,1,d), cache dict  -> (out, updated cache).
     """
     B, S, _ = x.shape
+    if rt.cp_axis and rope_ang is not None:
+        # manual CP: x carries only this rank's sequence shard — slice the
+        # (full-length, batch-dim-1) rope angles down to its positions
+        idx = jax.lax.axis_index(rt.cp_axis)
+        rope_ang = jax.lax.dynamic_slice_in_dim(rope_ang, idx * S, S, axis=1)
     q, k, v = _project_qkv(cfg, p, x, rt)
     if rope_ang is not None:
         q = apply_rope(q, rope_ang)
@@ -215,7 +234,11 @@ def attention_block(cfg, p, x, rope_ang, rt: Runtime, cache=None,
     v = rt.c("heads_kv", v)
 
     if cache is None:
-        out = sdpa_causal(q, k, v, cfg.sliding_window, rt)
+        if rt.cp_axis:
+            out = _cp_attend(q, k, v, cfg.sliding_window,
+                             q.shape[-1] ** -0.5, rt.cp_axis)
+        else:
+            out = sdpa_causal(q, k, v, cfg.sliding_window, rt)
         new_cache = None
         if want_cache:
             new_cache = make_kv_cache(cfg, B, S, k.dtype, rt)

@@ -43,12 +43,28 @@ class Runtime:
     attn_impl: str = "jnp"              # 'jnp' | 'pallas' (TPU hot path)
     norm_impl: str = "jnp"              # 'jnp' | 'pallas' (fused rmsnorm VJP)
     constrain: Optional[Callable] = None  # (name, x) -> x sharding constraint
-    # pipeline parallelism (GPipe over a mesh axis, core/pipeline.py):
+    # pipeline parallelism (schedule over a mesh axis, core/pipeline.py):
     # set by parallel.make_runtime when the plan has a 'pipe' axis
     pipeline_axis: str = ""             # mesh axis name ('' = no pipelining)
     pipeline_microbatches: int = 1      # M microbatches per (GA-)minibatch
     pipeline_mesh: Optional[object] = None   # Mesh the shard_map runs over
     pipeline_batch_axes: tuple = ()     # batch-dim mesh axes inside the pipe
+    pipeline_schedule: str = "gpipe"    # 'gpipe' | '1f1b'
+    pipeline_tp_axis: str = ""          # model axis to Megatron-compose
+                                        # inside the stage (head_tp plans)
+    pipeline_cp_axis: str = ""          # model axis to context-compose
+                                        # inside the stage (context plans)
+    pipeline_param_spec_fn: Optional[Callable] = None
+                                        # (tree_path, ndim) -> PartitionSpec
+                                        # for stage param leaves (stack dim
+                                        # over 'pipe' + inner model/expert
+                                        # sharding); None -> stack dim only
+    # manual inner-mesh composition, active only inside a pipeline stage
+    # body (set on the stage Runtime by transformer._pipeline_blocks):
+    tp_reduce_axis: str = ""            # psum mixer/ffn outputs over this
+                                        # axis (Megatron-TP inside shard_map)
+    cp_axis: str = ""                   # attention gathers KV over this
+                                        # axis (manual context parallelism)
     # expert parallelism (sharded all-to-all dispatch, core/expert.py):
     # set by parallel.make_runtime when the plan has an 'expert' axis
     expert_axis: str = ""               # mesh axis of the EP all-to-all
@@ -63,6 +79,27 @@ class Runtime:
 
 
 DEFAULT_RUNTIME = Runtime()
+
+
+# ---------------------------------------------------------------------------
+# Megatron-TP reduction (manual shard_map composition)
+# ---------------------------------------------------------------------------
+# Inside a fully-manual shard_map (a pipeline stage) tensor parallelism
+# reduces each sublayer's row-parallel partial output with a *raw*
+# jax.lax.psum.  Raw — not a custom "logical" vjp — because jax's
+# shard_map machinery differentiates the physical SPMD program: unmentioned
+# output axes are implicitly pmean'd, unmentioned input cotangents are
+# psummed, and psum transposes to psum, which together make the physical
+# gradients equal the logical ones exactly (a hand-rolled identity-backward
+# psum breaks that bookkeeping and mis-scales every gradient that crosses
+# it).  The column-parallel input side needs no marker at all for the same
+# reason.
+
+def tp_reduce_out(x, rt: "Runtime"):
+    """Sum a row-parallel sublayer's partial output over the model axis."""
+    if not rt.tp_reduce_axis:
+        return x
+    return jax.lax.psum(x, rt.tp_reduce_axis)
 
 
 # ---------------------------------------------------------------------------

@@ -76,7 +76,11 @@ def _router(cfg, p, xf, rt: Runtime = None):
 
 
 def _expert_ffn(cfg, p, buf, rt: Runtime):
-    """buf (E, C, d) -> (E, C, d) through each expert's FFN."""
+    """buf (E, C, d) -> (E, C, d) through each expert's FFN.
+
+    Under manual Megatron-TP (``rt.tp_reduce_axis`` inside a pipeline
+    stage) the expert hidden dim is model-sharded and the partial w_down
+    output is psummed by the caller's layer-level ``tp_reduce_out``."""
     act = _act(cfg.act)
     dt = buf.dtype
     up = rt.c("expert_hidden", jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(dt)))
@@ -236,7 +240,12 @@ def apply_moe(cfg, p, x, rt: Runtime):
             y, aux = expert_lib.moe_expert_parallel(cfg, p, xf, rt)
         else:
             impl = "dropping"
-    if impl != "ep":
+    if impl == "ep_manual":
+        # already inside a manual shard_map (pipeline stage body): the
+        # all-to-all runs on rt.expert_axis directly, no nested shard_map
+        from repro.core import expert as expert_lib
+        y, aux = expert_lib.moe_expert_parallel_manual(cfg, p, xf, rt)
+    elif impl != "ep":
         y, aux = (_moe_dense if impl == "dense" else _moe_dropping)(cfg, p, xf, rt)
     y = y.reshape(B, S, d)
     if "shared" in p:

@@ -29,7 +29,8 @@ from repro.models import moe as moe_lib
 from repro.models import rwkv6 as rwkv_lib
 from repro.models.layers import (Runtime, apply_norm, embed_tokens,
                                  init_embed, init_mlp, init_norm, apply_mlp,
-                                 lm_logits, mrope_angles, rope_angles)
+                                 lm_logits, mrope_angles, rope_angles,
+                                 tp_reduce_out)
 
 
 # ---------------------------------------------------------------------------
@@ -150,7 +151,15 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype, rt: Runtime):
 # ---------------------------------------------------------------------------
 
 def _apply_layer(cfg, sig, lp, h, rope_ang, rt: Runtime, cache=None):
-    """-> (h, new_cache, aux_loss)."""
+    """-> (h, new_cache, aux_loss).
+
+    With ``rt.tp_reduce_axis`` set (Megatron-TP inside a manual pipeline
+    stage), the partial mixer/ffn outputs are psummed over the model axis
+    — the classic two all-reduces per layer, placed exactly where the
+    GSPMD lowering's sharding constraints would induce them.  (The
+    column-parallel input side needs no marker: shard_map differentiates
+    the physical program, so the psum's transpose and the spec-level
+    psum/pmean bookkeeping produce exact gradients.)"""
     kind, is_moe = sig
     aux = jnp.zeros((), jnp.float32)
 
@@ -170,7 +179,7 @@ def _apply_layer(cfg, sig, lp, h, rope_ang, rt: Runtime, cache=None):
             cfg, lp["mixer"], x, rt,
             state=None if cache is None else cache)
         new_cache = new_state
-    h = h + mix
+    h = h + tp_reduce_out(mix, rt)
 
     x = apply_norm(lp["norm2"], h, cfg.norm_eps, rt)
     if kind == "rwkv6":
@@ -183,7 +192,7 @@ def _apply_layer(cfg, sig, lp, h, rope_ang, rt: Runtime, cache=None):
         ffn, aux = moe_lib.apply_moe(cfg, lp["ffn"], x, rt)
     else:
         ffn = apply_mlp(cfg, lp["ffn"], x, rt)
-    h = h + ffn
+    h = h + tp_reduce_out(ffn, rt)
     return h, new_cache, aux
 
 
@@ -320,19 +329,79 @@ def forward(cfg: ModelConfig, params, batch, rt: Runtime,
     return logits, new_cache, aux_total
 
 
+def pipeline_stage_runtime(rt: Runtime, rows: int) -> Runtime:
+    """The stage-body Runtime for a pipeline microbatch of ``rows`` rows —
+    the single recipe for every ``pipeline_apply`` caller (the forward
+    path below AND ``perf/pipeline_probe.py``), so the two cannot drift.
+
+    The stage body runs inside a fully-manual shard_map: named sharding
+    constraints and per-block FSDP gathers are meaningless there; MoE
+    router load stats psum over the token-sharding axes for a global aux.
+    moe_groups=1: the stage already sees only its device-local token
+    slice (the non-pp lowering's per-data-shard dispatch group) —
+    keeping the global group count would subdivide it dp times further
+    and shrink per-group expert capacity accordingly.  The manual
+    tp/cp axes are activated, and EP plans switch to the in-stage
+    ``ep_manual`` dispatch (which calls the expert all-to-all directly —
+    no nested shard_map)."""
+    from repro.core.pipeline import batch_axes_spec
+
+    kept = batch_axes_spec(rt.pipeline_mesh, rt.pipeline_batch_axes, rows)
+    tok_axes = kept + ((rt.pipeline_cp_axis,) if rt.pipeline_cp_axis else ())
+    moe_impl = rt.moe_impl
+    if rt.expert_axis and moe_impl == "ep":
+        # the in-stage all-to-all needs the microbatch actually sharded
+        # over the expert axis — with replicated tokens the duplicate
+        # dispatch rows would overcount the expert grads
+        if rt.expert_axis not in kept:
+            raise ValueError(
+                f"pipeline microbatch of {rows} rows does not shard "
+                f"over the {rt.expert_axis!r} mesh axis "
+                f"(size {rt.pipeline_mesh.shape[rt.expert_axis]}): the "
+                "expert all-to-all inside a pipeline stage needs "
+                "expert-sharded tokens — grow global_batch or lower "
+                "grad_accum x microbatches")
+        moe_impl = "ep_manual"
+    return dataclasses.replace(rt, constrain=None, gather_params=None,
+                               moe_stat_axes=tok_axes, moe_groups=1,
+                               moe_impl=moe_impl,
+                               tp_reduce_axis=rt.pipeline_tp_axis,
+                               cp_axis=rt.pipeline_cp_axis)
+
+
+def pipeline_stage_param_specs(rt: Runtime, stage_params):
+    """PartitionSpecs for a stage-param pytree via the plan's
+    ``pipeline_param_spec_fn`` (stack dim over 'pipe' + inner
+    model/expert sharding); None when the runtime carries no spec fn.
+    Shared by the forward path and the bubble probe so both lower the
+    same physical program."""
+    if rt.pipeline_param_spec_fn is None:
+        return None
+    return jax.tree_util.tree_map_with_path(
+        lambda pth, leaf: rt.pipeline_param_spec_fn(pth, leaf.ndim),
+        stage_params)
+
+
 def _pipeline_blocks(cfg: ModelConfig, params, h, rope_ang, rt: Runtime):
-    """Apply the full (uniform, stacked) layer stack under the GPipe
-    schedule: split the batch into M microbatches, pipeline them over the
-    mesh 'pipe' axis (stage p owns the contiguous layer slice the param
-    sharding already placed there), and stitch the outputs back.
+    """Apply the full (uniform, stacked) layer stack under the plan's
+    pipeline schedule (GPipe or 1F1B): split the batch into M
+    microbatches, pipeline them over the mesh 'pipe' axis (stage p owns
+    the contiguous layer slice the param sharding already placed there),
+    and stitch the outputs back.
+
+    The stage body computes over the *full inner mesh*: head_tp plans keep
+    the stage params model-sharded (``rt.pipeline_param_spec_fn``) and run
+    Megatron psums inside ``_apply_layer``; context plans shard the
+    microbatch sequence over the model axis (attention gathers KV); expert
+    plans dispatch MoE layers through ``core/expert.py``'s all-to-all on
+    the expert axis.
 
     Returns (h, aux): the MoE load-balance loss is threaded through the
     schedule alongside each microbatch's activation and averaged over the
     M microbatches — the same per-microbatch averaging grad accumulation
     applies (each microbatch's balance stats are its own, psum-reduced
-    across the batch shards so every shard sees global counts)."""
-    from repro.core.pipeline import (batch_axes_spec, make_pipelined_block_fn,
-                                     pipeline_apply)
+    across the token-sharding axes so every shard sees global counts)."""
+    from repro.core.pipeline import make_pipelined_block_fn, pipeline_apply
 
     M = rt.pipeline_microbatches
     B = h.shape[0]
@@ -340,25 +409,22 @@ def _pipeline_blocks(cfg: ModelConfig, params, h, rope_ang, rt: Runtime):
         raise ValueError(
             f"batch {B} does not split into {M} pipeline microbatches "
             "(grad_accum x microbatches must divide the global batch)")
-    # the stage body runs inside a fully-manual shard_map: named sharding
-    # constraints and per-block FSDP gathers are meaningless there; MoE
-    # router load stats psum over the kept batch axes for a global aux.
-    # moe_groups=1: the stage already sees only its device-local token
-    # slice (the non-pp lowering's per-data-shard dispatch group) —
-    # keeping the global group count would subdivide it dp times further
-    # and shrink per-group expert capacity accordingly
-    kept = batch_axes_spec(rt.pipeline_mesh, rt.pipeline_batch_axes, B // M)
-    rt_stage = dataclasses.replace(rt, constrain=None, gather_params=None,
-                                   moe_stat_axes=kept, moe_groups=1)
+    rt_stage = pipeline_stage_runtime(rt, B // M)
     stage_fn = make_pipelined_block_fn(cfg, rt_stage)
     # training positions are identical across rows -> rope with batch dim 1
     # broadcasts over the (data-sharded) local microbatch inside the stage
     rope_mb = None if rope_ang is None else rope_ang[:1]
     x_mb = h.reshape((M, B // M) + h.shape[1:])
-    out, aux = pipeline_apply(stage_fn, {"layers": params["blocks"][0]}, x_mb,
+    stage_params = {"layers": params["blocks"][0]}
+    pspecs = pipeline_stage_param_specs(rt, stage_params)
+    out, aux = pipeline_apply(stage_fn, stage_params, x_mb,
                               rt.pipeline_mesh, rt.pipeline_axis,
                               extras=rope_mb,
-                              batch_axes=rt.pipeline_batch_axes)
+                              batch_axes=rt.pipeline_batch_axes,
+                              schedule=rt.pipeline_schedule,
+                              param_specs=pspecs,
+                              seq_axis=rt.pipeline_cp_axis,
+                              tp_axis=rt.pipeline_tp_axis)
     return rt.c("act_btd", out.reshape((B,) + out.shape[2:])), aux / M
 
 

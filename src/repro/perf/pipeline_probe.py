@@ -1,20 +1,24 @@
-"""Execute the GPipe schedule and *measure* its bubble fraction.
+"""Execute a pipeline schedule and *measure* its bubble fraction.
 
 The cost model charges pipeline parallelism a bubble of (P-1)/(M+P-1)
-(``costmodel.step_time`` / ``pipeline.bubble_fraction``).  This probe
-validates that analytic term against execution: it runs the exact
-``pipeline_apply`` lowering a ``Strategy(pp>1)`` trains with (fwd + bwd,
-real stage params) at fixed microbatch *size* for M and 2M microbatches,
-fits t(M) = t_tick * (M + P - 1) + overhead, and reports
+(``costmodel.step_time`` / ``pipeline.bubble_fraction``) for *both*
+schedules — 1F1B reorders the bubble to cap activation memory, it does
+not shrink it.  This probe validates that analytic term against
+execution: it runs the exact ``pipeline_apply`` lowering a
+``Strategy(pp>1)`` trains with (fwd + bwd, real stage params, the
+strategy's own schedule) at fixed microbatch *size* for M and 2M
+microbatches, fits t(M) = t_tick * (M + P - 1) + overhead, and reports
 
     bubble_measured = (P - 1) * t_tick / t(M)
 
+A non-increasing two-point fit (noisy host) is flagged
+``fit_unreliable`` instead of masquerading as a clean 0.0 measurement.
+
 Used by ``launch/dryrun.py --measure_bubble`` (written into the dryrun
-artifact next to the prediction) and ``benchmarks/run.py --pp-sweep``.
+artifact next to the prediction) and ``benchmarks/run.py --pp-sweep``
+(which sweeps pp x schedule).
 """
 from __future__ import annotations
-
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -23,6 +27,7 @@ from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core import parallel as par
 from repro.core.pipeline import (make_pipelined_block_fn,
                                  measure_bubble_fraction, pipeline_apply)
+from repro.models import transformer as tfm
 
 
 def measure_bubble(cfg: ModelConfig, strat, topology,
@@ -30,11 +35,18 @@ def measure_bubble(cfg: ModelConfig, strat, topology,
                    n_iter: int = 3) -> dict:
     """Measured vs predicted bubble for ``strat`` (pp > 1) on live devices.
 
-    The bubble is a property of the (P, M) schedule, not of model scale,
-    so callers may pass a ``reduced()`` config to keep the probe cheap —
-    the per-tick time only needs to dominate dispatch overhead.
+    The bubble is a property of the (P, M, schedule) tick table, not of
+    model scale, so callers may pass a ``reduced()`` config to keep the
+    probe cheap — the per-tick time only needs to dominate dispatch
+    overhead.
     """
     assert strat.pp > 1, "bubble probe needs a pipeline strategy"
+    if strat.ep > 1:
+        # the in-stage expert all-to-all needs the probe's synthetic
+        # microbatch sharded over (data, expert) — round the row count up
+        # to the batch-axis group size (to_plan enforces the same)
+        g = strat.dp_degree(topology)
+        mb_rows = -(-mb_rows // g) * g
     shape = ShapeConfig("pp-probe", seq_len,
                         mb_rows * strat.microbatches * strat.grad_accum,
                         "train")
@@ -43,13 +55,16 @@ def measure_bubble(cfg: ModelConfig, strat, topology,
         cfg, plan, shape, param_dtype=jnp.float32,
         compute_dtype=jnp.float32, remat=False,
         attn_min_chunked_len=max(2048, seq_len + 1))
-    rt_stage = dataclasses.replace(rt, constrain=None, gather_params=None)
+    # the exact stage runtime the forward path builds (manual tp/cp axes,
+    # token-sharding stat axes, in-stage ep_manual MoE dispatch)
+    rt_stage = tfm.pipeline_stage_runtime(rt, mb_rows)
     stage_fn = make_pipelined_block_fn(cfg, rt_stage)
 
-    from repro.models import transformer as tfm
     from repro.models.layers import rope_angles
     params = tfm.init_params(cfg, jax.random.PRNGKey(0))
     blocks = params["blocks"][0]
+    stage_params = {"layers": blocks}
+    pspecs = tfm.pipeline_stage_param_specs(rt, stage_params)
     rope = None
     if cfg.rope == "rope":
         pos = jnp.arange(seq_len, dtype=jnp.int32)[None]
@@ -62,7 +77,11 @@ def measure_bubble(cfg: ModelConfig, strat, topology,
         def loss(p):
             out, _aux = pipeline_apply(stage_fn, {"layers": p}, x, plan.mesh,
                                        plan.pipe, extras=rope,
-                                       batch_axes=tuple(plan.dp))
+                                       batch_axes=tuple(plan.dp),
+                                       schedule=strat.sched,
+                                       param_specs=pspecs,
+                                       seq_axis=rt.pipeline_cp_axis,
+                                       tp_axis=rt.pipeline_tp_axis)
             return jnp.sum(out ** 2)
 
         with par.use_mesh(plan.mesh):
@@ -76,7 +95,8 @@ def measure_bubble(cfg: ModelConfig, strat, topology,
 
     with par.use_mesh(plan.mesh):
         rec = measure_bubble_fraction(step_for_m, strat.pp,
-                                      strat.microbatches, n_iter=n_iter)
+                                      strat.microbatches, n_iter=n_iter,
+                                      sched=strat.sched)
     rec.update(probe_cfg=cfg.name, probe_seq_len=seq_len,
                probe_mb_rows=mb_rows)
     return rec

@@ -22,11 +22,20 @@ Semantics of the degrees (mirrors DESIGN.md §4 / core/parallel.py):
             attention).  tp and cp share the single model axis, so at most
             one may exceed 1.
   * ``pp``  shards the layer stack over a 'pipe' mesh axis (contiguous
-            stages) and lowers through the differentiable GPipe schedule
+            stages) and lowers through a differentiable pipeline schedule
             in ``core/pipeline.py`` (shard_map + ppermute).  Requires a
             uniform layer stack (no prefix / period-1 ``layer_plan``), a
             layer count divisible by pp, and ``mb >= pp`` microbatches
             (under-specified mb is a StrategyError, not a silent clamp).
+            The stage body computes over the full inner mesh: head_tp
+            plans Megatron-shard heads/hidden inside the stage, context
+            plans shard the sequence, and MoE layers dispatch over the
+            expert axis — pp composes with tp, cp AND ep.
+  * ``sched``  pipeline schedule: 'gpipe' (default; M microbatch
+            activations in flight per stage) or '1f1b' (PipeDream-flush;
+            <= pp in flight — the smaller activation footprint the cost
+            model's ``mem`` term credits).  Spec token ``_1f1b``
+            (``fsdp_pp4_mb8_1f1b``); only meaningful with pp > 1.
   * ``ep``  expert parallelism: an 'expert' mesh axis factored out of
             the data axis (dp_effective = dp / ep).  MoE expert stacks
             shard their E dim over it and the dispatch/combine
@@ -47,6 +56,7 @@ from typing import Optional, Tuple
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core import costmodel as cm
 from repro.core import parallel as par
+from repro.core.pipeline import SCHEDULE_NAMES as SCHEDS
 from repro.strategy.topology import Topology, build_mesh
 
 DP_MODES = ("hsdp", "fsdp", "ddp")
@@ -66,6 +76,7 @@ class Strategy:
     tp: int = 1                      # tensor-parallel degree (model axis)
     cp: int = 1                      # context-parallel degree (model axis)
     pp: int = 1                      # pipeline degree ('pipe' mesh axis)
+    sched: str = "gpipe"             # pipeline schedule: 'gpipe' | '1f1b'
     ep: int = 1                      # expert-parallel degree ('expert' axis,
                                      # factored out of the data axis)
     zero_stage: Optional[int] = None  # None -> 0 for ddp, 3 otherwise
@@ -89,13 +100,14 @@ class Strategy:
             # predict-and-run contract honest
             raise StrategyError(
                 f"zero_stage {self.zero_stage!r} not in (None, 0, 2, 3)")
-        if self.ep > 1 and self.pp > 1:
-            # inside a pipeline stage the MoE layers run as plain
-            # (token-local) dispatch; the expert all-to-all is not
-            # composed into the stage shard_map yet (ROADMAP)
+        if self.sched not in SCHEDS:
+            raise StrategyError(f"sched {self.sched!r} not in {SCHEDS}")
+        if self.sched != "gpipe" and self.pp == 1:
+            # a schedule token without a pipeline is meaningless, and
+            # format() would drop it — reject to keep specs canonical
             raise StrategyError(
-                f"ep={self.ep} does not compose with pp={self.pp} yet; "
-                "expert parallelism inside pipeline stages is an open item")
+                f"sched={self.sched!r} needs pp > 1 (schedules pick the "
+                "pipeline's tick order)")
         if self.pp > 1 and self.microbatches < self.pp:
             # fewer microbatches than stages cannot fill the pipeline; the
             # cost model used to clamp mb up to pp silently, letting the
@@ -202,7 +214,8 @@ class Strategy:
                 f"({cfg.name}); expert stacks cannot shard evenly")
 
     def _check_pipeline(self, cfg: ModelConfig) -> None:
-        """Model-dependent pp constraints (GPipe stage assignment)."""
+        """Model-dependent pp constraints (stage assignment + the inner
+        mesh the stage body must compose)."""
         from repro.models.transformer import layer_plan
         prefix, _start, period, n_blocks = layer_plan(cfg)
         if prefix or period != 1 or not n_blocks:
@@ -218,6 +231,46 @@ class Strategy:
             raise StrategyError(
                 "mrope angles are batch-dependent and cannot broadcast "
                 "across pipeline microbatches; pp > 1 unsupported")
+        ma = self.model_axis
+        if ma <= 1:
+            return
+        # pp x tp / pp x cp composed compute: the stage body runs the
+        # model-axis collectives manually (Megatron psums / gathered-KV),
+        # implemented for attention stacks only
+        if cfg.layer_kind(0) != "attn":
+            raise StrategyError(
+                f"pp={self.pp} with a model axis of {ma} runs manual "
+                f"tensor/context parallelism inside the stage, which is "
+                f"implemented for attention stacks only ({cfg.name} is "
+                f"{cfg.layer_kind(0)})")
+        if self.resolved_attn(cfg) != "head_tp":
+            return          # context mode: stage params stay replicated
+        if cfg.n_heads % ma or cfg.kv_heads % ma:
+            raise StrategyError(
+                f"pp x tp composed stage needs n_heads={cfg.n_heads} and "
+                f"kv_heads={cfg.kv_heads} divisible by the model axis {ma}")
+        moe_stack = cfg.is_moe_layer(0)
+        if moe_stack:
+            if self.ep == 1:
+                raise StrategyError(
+                    f"MoE expert stacks cannot shard experts over the "
+                    f"model axis inside a pipeline stage; compose with "
+                    f"ep<k> instead (got tp={ma}, ep=1, pp={self.pp})")
+            if cfg.moe.expert_d_ff % ma:
+                raise StrategyError(
+                    f"pp x tp composed MoE stage needs expert_d_ff="
+                    f"{cfg.moe.expert_d_ff} divisible by the model axis {ma}")
+            if cfg.moe.n_shared_experts and \
+                    (cfg.moe.n_shared_experts * cfg.moe.expert_d_ff) % ma:
+                raise StrategyError(
+                    f"pp x tp composed MoE stage needs the shared-expert "
+                    f"hidden dim divisible by the model axis {ma}")
+        else:
+            dff = cfg.dense_d_ff or cfg.d_ff
+            if dff % ma:
+                raise StrategyError(
+                    f"pp x tp composed stage needs d_ff={dff} divisible "
+                    f"by the model axis {ma}")
 
     def lowerable(self, topology: Topology,
                   cfg: Optional[ModelConfig] = None) -> bool:
@@ -244,6 +297,31 @@ class Strategy:
                     f"global_batch={shape.global_batch} does not split "
                     f"into grad_accum={self.grad_accum} x "
                     f"microbatches={self.microbatches}")
+            if self.ep > 1:
+                # the expert all-to-all inside a stage needs the
+                # microbatch rows actually sharded over the expert axis
+                # (fit-or-drop keeps axes in (pod, data, expert) order)
+                rows = shape.global_batch // per_step
+                pods = self.n_pods(topology)
+                size = rows
+                for n in ((pods,) if pods > 1 else ()) + \
+                        (self.dp_effective(topology) // max(pods, 1),):
+                    if n > 1 and size % n == 0 and size >= n:
+                        size //= n
+                if self.ep > 1 and (size % self.ep or size < self.ep):
+                    raise StrategyError(
+                        f"pp x ep: microbatch rows={rows} do not shard "
+                        f"over the expert axis (ep={self.ep}) after the "
+                        "data axes — grow global_batch or lower "
+                        "grad_accum x microbatches")
+        if self.pp > 1 and self.model_axis > 1 and cfg is not None and \
+                shape.mode != "decode" and \
+                self.resolved_attn(cfg) == "context" and \
+                shape.seq_len % self.model_axis:
+            raise StrategyError(
+                f"pp x cp composed stage shards the sequence: seq_len="
+                f"{shape.seq_len} must divide by the model axis "
+                f"{self.model_axis}")
         pods = self.n_pods(topology)
         mesh = build_mesh(topology, model=self.model_axis, pods=pods,
                           pipe=self.pp, expert=self.ep, abstract=abstract)
@@ -277,6 +355,7 @@ class Strategy:
             seq_parallel_residuals=self.seq_parallel,
             pipe="pipe" if self.pp > 1 else "",
             microbatches=self.microbatches if self.pp > 1 else 1,
+            pipe_sched=self.sched,
             expert="expert" if has_ep else "")
 
     # ---- lowering: cost model ----------------------------------------------
@@ -311,7 +390,7 @@ class Strategy:
             n_devices=topology.n_devices, tp=tp_c, pp=self.pp, cp=cp_c,
             ep=self.ep,
             zero_stage=self.zero,
-            microbatches=self.microbatches,
+            microbatches=self.microbatches, sched=self.sched,
             fsdp_group=fsdp_group)
 
     # ---- spec strings ------------------------------------------------------
@@ -329,6 +408,8 @@ class Strategy:
             parts.append(f"mb{self.microbatches}")
         if self.grad_accum > 1:
             parts.append(f"ga{self.grad_accum}")
+        if self.sched != "gpipe":
+            parts.append(self.sched)
         if self.attn is not None:
             parts.append(_ATTN_FORMAT[self.attn])
         if not self.seq_parallel:
@@ -343,9 +424,10 @@ def parse(spec: str) -> Strategy:
     """Parse a compact spec string into a ``Strategy``.
 
     Grammar: ``<dp_mode>[_tp<k>][_cp<k>][_pp<k>][_ep<k>][_z<stage>][_mb<m>]
-    [_ga<g>][_headtp|_ctx][_nosp]`` with dp_mode in {hsdp, fsdp, ddp}.
-    Examples: ``hsdp_tp4``, ``fsdp_cp8``, ``fsdp_ep8``, ``hsdp_tp2_ep4``,
-    ``ddp``, ``hsdp_tp4_ga2_nosp``.
+    [_ga<g>][_gpipe|_1f1b][_headtp|_ctx][_nosp]`` with dp_mode in
+    {hsdp, fsdp, ddp}.  Examples: ``hsdp_tp4``, ``fsdp_cp8``,
+    ``fsdp_ep8``, ``hsdp_tp2_ep4``, ``fsdp_pp4_mb8_1f1b``, ``ddp``,
+    ``hsdp_tp4_ga2_nosp``.
     """
     tokens = spec.strip().lower().split("_")
     if not tokens or tokens[0] not in DP_MODES:
@@ -358,6 +440,12 @@ def parse(spec: str) -> Strategy:
         if tok == "nosp":
             kw["seq_parallel"] = False
             continue
+        if tok in SCHEDS:
+            if "sched" in kw:
+                raise StrategyError(
+                    f"duplicate token {tok!r} in spec {spec!r}")
+            kw["sched"] = tok
+            continue
         if tok in _ATTN_TOKENS:
             kw["attn"] = _ATTN_TOKENS[tok]
             continue
@@ -365,7 +453,8 @@ def parse(spec: str) -> Strategy:
         if not m:
             raise StrategyError(
                 f"bad token {tok!r} in spec {spec!r} (expected "
-                "tp<k>/cp<k>/pp<k>/ep<k>/z<s>/mb<m>/ga<g>/headtp/ctx/nosp)")
+                "tp<k>/cp<k>/pp<k>/ep<k>/z<s>/mb<m>/ga<g>/gpipe/1f1b/"
+                "headtp/ctx/nosp)")
         field = names[m.group(1)]
         if field in kw:
             raise StrategyError(f"duplicate token {tok!r} in spec {spec!r}")

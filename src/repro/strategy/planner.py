@@ -1,7 +1,8 @@
 """Cost-model-driven strategy planner.
 
 ``search(cfg, topology, shape)`` sweeps the executable-strategy space
-(dp_mode x tp x cp x pp x ZeRO stage), prices every candidate with the
+(dp_mode x tp x cp x pp x ep x pipeline schedule x ZeRO stage), prices
+every candidate with the
 calibrated analytic model (``costmodel.step_time``), and returns ranked
 ``PlannedStrategy`` records whose descriptors lower to real plans via
 ``Strategy.to_plan``.  This replaced the old ``costmodel.sweep_strategies``
@@ -19,6 +20,7 @@ from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core import costmodel as cm
+from repro.core.pipeline import SCHEDULE_NAMES
 from repro.strategy.descriptor import Strategy, StrategyError, parse
 from repro.strategy.topology import Topology
 
@@ -62,6 +64,7 @@ def evaluate(cfg: ModelConfig, strategy: Strategy, topology: Topology,
 
 DEFAULT_PPS = (1, 2, 4, 8)
 DEFAULT_EPS = (1, 2, 4, 8)
+DEFAULT_SCHEDS = SCHEDULE_NAMES      # sweep every registered schedule
 
 
 def candidates(topology: Topology, global_batch: int,
@@ -70,6 +73,7 @@ def candidates(topology: Topology, global_batch: int,
                cps: Iterable[int] = (1, 2, 4, 8),
                pps: Iterable[int] = DEFAULT_PPS,
                eps: Iterable[int] = DEFAULT_EPS,
+               scheds: Sequence[str] = DEFAULT_SCHEDS,
                zero_stages: Iterable[Optional[int]] = (None,),
                microbatches: int = 8) -> List[Strategy]:
     """Enumerate distinct strategy descriptors viable on ``topology``.
@@ -79,8 +83,12 @@ def candidates(topology: Topology, global_batch: int,
     batch filters mirror the original sweep: dp must divide the global
     batch (or be smaller than it).  ep > 1 candidates are only viable for
     MoE configs — ``search`` filters them via ``Strategy.check(cfg)``
-    (``ep | n_experts``, ep x pp not composed); ep stays inside the
-    island-local data group so the reduced expert gathers are whole ranks.
+    (``ep | n_experts``); ep stays inside the island-local data group so
+    the reduced expert gathers are whole ranks.  pp > 1 candidates are
+    emitted once per pipeline schedule in ``scheds`` — same mesh, same
+    bubble, different activation footprint (1F1B caps in-flight
+    microbatches at pp), so the schedule sweep is what lets the planner
+    surface memory-limited crossovers.
     """
     n = topology.n_devices
     out: List[Strategy] = []
@@ -94,8 +102,6 @@ def candidates(topology: Topology, global_batch: int,
                                                    if c > 1]:
                 for pp in pps:
                     for ep in eps:
-                        if ep > 1 and pp > 1:
-                            continue   # not composed (descriptor rejects)
                         model = tp * cp * pp
                         if model * ep > n or n % (model * ep):
                             continue
@@ -109,12 +115,19 @@ def candidates(topology: Topology, global_batch: int,
                         mb = max(microbatches, pp) if pp > 1 else 1
                         if pp > 1 and global_batch % mb:
                             continue   # microbatch split must divide batch
-                        s = Strategy(dp_mode=mode, tp=tp, cp=cp, pp=pp,
-                                     ep=ep, zero_stage=zero, microbatches=mb)
-                        if s.format() in seen:
+                        if pp > 1 and ep > 1 and \
+                                (global_batch // mb) % dp:
+                            # the in-stage expert a2a needs the microbatch
+                            # sharded over (data, expert) — to_plan rejects
                             continue
-                        seen.add(s.format())
-                        out.append(s)
+                        for sched in (scheds if pp > 1 else ("gpipe",)):
+                            s = Strategy(dp_mode=mode, tp=tp, cp=cp, pp=pp,
+                                         ep=ep, zero_stage=zero,
+                                         microbatches=mb, sched=sched)
+                            if s.format() in seen:
+                                continue
+                            seen.add(s.format())
+                            out.append(s)
     return out
 
 
@@ -126,6 +139,7 @@ def search(cfg: ModelConfig, topology: Topology, shape: ShapeConfig,
            cps: Iterable[int] = (1, 2, 4, 8),
            pps: Iterable[int] = DEFAULT_PPS,
            eps: Iterable[int] = DEFAULT_EPS,
+           scheds: Sequence[str] = DEFAULT_SCHEDS,
            zero_stages: Iterable[Optional[int]] = (None,),
            microbatches: int = 8,
            top: Optional[int] = None) -> List[PlannedStrategy]:
@@ -144,7 +158,7 @@ def search(cfg: ModelConfig, topology: Topology, shape: ShapeConfig,
     if not cfg.moe.n_experts:
         eps = (1,)                 # ep is an MoE-only degree
     cands = candidates(topology, shape.global_batch, dp_modes=dp_modes,
-                       tps=tps, cps=cps, pps=pps, eps=eps,
+                       tps=tps, cps=cps, pps=pps, eps=eps, scheds=scheds,
                        zero_stages=zero_stages, microbatches=microbatches)
     out: List[PlannedStrategy] = []
     for s in cands:

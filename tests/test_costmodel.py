@@ -85,6 +85,39 @@ def test_weak_scaling_never_superlinear(n):
     assert r2.wps_per_device <= r1.wps_per_device * 1.01
 
 
+@given(pp=st.sampled_from([2, 4, 8]), extra=st.integers(0, 56),
+       n=st.sampled_from([64, 256]))
+@settings(max_examples=60, deadline=None)
+def test_property_1f1b_memory_never_exceeds_gpipe(pp, extra, n):
+    """ISSUE 5 satellite: for every M >= P the 1F1B activation term is
+    <= GPipe's (in-flight microbatches min(M, P) vs M).  The memory win
+    is not free: the executable 1F1B bakes remat into its backward, so
+    the model charges it one extra forward pass — 1F1B is never cheaper
+    in time, only in memory."""
+    m = pp + extra
+    kw = dict(n_devices=n, pp=pp, microbatches=m, zero_stage=2)
+    r_g = cm.step_time(LLAMA2_7B, cm.H100, cm.Strategy(**kw), n * 4, 4096)
+    r_f = cm.step_time(LLAMA2_7B, cm.H100,
+                       cm.Strategy(sched="1f1b", **kw), n * 4, 4096)
+    assert r_f.memory_per_device <= r_g.memory_per_device + 1e-6
+    assert r_f.t_step > r_g.t_step
+    assert r_f.t_compute == pytest.approx(r_g.t_compute * (1 + 1 / 3))
+    # equality exactly when the pipeline is minimally filled (M == P)
+    if m == pp:
+        assert r_f.memory_per_device == pytest.approx(r_g.memory_per_device)
+    else:
+        assert r_f.memory_per_device < r_g.memory_per_device
+
+
+def test_sched_in_strategy_validity_and_row():
+    assert not cm.Strategy(64, sched="zigzag").valid()
+    assert not cm.Strategy(64, sched="1f1b").valid()      # pp == 1
+    s = cm.Strategy(64, pp=2, microbatches=4, sched="1f1b")
+    assert s.valid()
+    r = cm.step_time(LLAMA2_7B, cm.H100, s, 256, 4096)
+    assert r.row()["sched"] == "1f1b"
+
+
 def test_memory_decreases_with_sharding():
     base = cm.step_time(LLAMA2_7B, cm.H100, cm.Strategy(64, zero_stage=0),
                         128, 4096)

@@ -78,6 +78,25 @@ def test_pp_matches_baseline(eight_devices, spec):
     _assert_equivalent(_tiny_cfg(), spec)
 
 
+@pytest.mark.parametrize("spec", ["fsdp_pp2_mb8_1f1b", "fsdp_pp2_mb4_1f1b",
+                                  "fsdp_pp4_mb8_1f1b"])
+def test_1f1b_matches_baseline(eight_devices, spec):
+    """ISSUE 5 acceptance: 1F1B specs train end-to-end through the full
+    Strategy lowering and match the sequential oracle (loss + grads) —
+    the custom-vjp combined tick loop, not GPipe's transposed scan."""
+    _assert_equivalent(_tiny_cfg(), spec)
+
+
+@pytest.mark.parametrize("spec", ["fsdp_tp2_pp2_mb4", "fsdp_tp2_pp2_mb4_1f1b",
+                                  "fsdp_cp2_pp2_mb4"])
+def test_pp_composes_with_model_axis(eight_devices, spec):
+    """ISSUE 5 acceptance: pp2 x tp2 (Megatron psums inside the stage;
+    stage params stay model-sharded instead of replicated) and pp2 x cp2
+    (sequence sharded inside the stage, gathered-KV attention) lower,
+    train, and match the single-device baseline."""
+    _assert_equivalent(_tiny_cfg(), spec)
+
+
 def test_pp_composes_with_grad_accum(eight_devices):
     """GA slices the batch, the pipeline splits each slice into M
     microbatches; loss/grad scaling must match the GA-only baseline."""
@@ -120,6 +139,99 @@ def test_pp_threads_moe_aux_loss(eight_devices):
     dp = max(float(jnp.max(jnp.abs(a - jax.device_get(b))))
              for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)))
     assert dp < 1e-2, dp
+
+
+def test_pp_composes_with_ep(eight_devices):
+    """ISSUE 5 acceptance: pp2 x ep2 — impossible before this refactor
+    (StrategyError) — lowers and matches the non-pipelined dropping
+    baseline: MoE layers inside the stage dispatch through the expert
+    all-to-all on the 'expert' axis (no nested shard_map), both
+    schedules."""
+    import dataclasses as dc
+    cfg = reduced(get_config("deepseek-moe-16b"), n_layers=4, d_model=128)
+    cfg = dc.replace(cfg, moe=dc.replace(cfg.moe, moe_start_layer=0,
+                                         capacity_factor=8.0))
+    topo = strategy_lib.host_topology()
+    shape = ShapeConfig("eq", 32, 8, "train")
+    key = jax.random.PRNGKey(0)
+    params = tfm.init_params(cfg, key)
+    batch = concrete_train_batch(cfg, 8, 32, key)
+    tc = TrainConfig()
+
+    # oracle: non-pipelined dropping with 4 groups == the 4 (data, expert)
+    # token shards the pipeline stage dispatches from
+    rt1 = Runtime(attn_min_chunked_len=64, moe_impl="dropping", moe_groups=4)
+    p1, _, m1 = _run_step(cfg, rt1, tc, params, batch)
+
+    for spec in ("fsdp_pp2_ep2_mb2", "fsdp_pp2_ep2_mb2_1f1b"):
+        strat = strategy_lib.parse(spec)
+        plan = strat.to_plan(cfg, topo, shape)   # no StrategyError anymore
+        assert plan.pipe == "pipe" and plan.expert == "expert"
+        rt2 = par.make_runtime(cfg, plan, shape, param_dtype=jnp.float32,
+                               compute_dtype=jnp.float32, remat=False,
+                               attn_min_chunked_len=64)
+        p2, _, m2 = _run_step(cfg, rt2, tc, params, batch, plan)
+        assert float(m2["aux"]) > 0.0            # aux loss not dropped
+        dl = abs(float(m1["loss"]) - float(m2["loss"]))
+        assert dl < 2e-3, (spec, dl)
+        rel_g = abs(float(m1["grad_norm"]) - float(m2["grad_norm"])) \
+            / max(float(m1["grad_norm"]), 1e-6)
+        assert rel_g < 2e-3, (spec, rel_g)
+        dp = max(float(jnp.max(jnp.abs(a - jax.device_get(b))))
+                 for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)))
+        assert dp < 1e-2, (spec, dp)
+
+
+def test_pp_tp_ep_triple_composition(eight_devices):
+    """The full inner mesh at once: pipe2 x model2 x expert2 (all 8
+    devices, data axis 1) under 1F1B — Megatron psums, expert all-to-all
+    and the pipeline schedule composing in one stage body."""
+    import dataclasses as dc
+    cfg = reduced(get_config("deepseek-moe-16b"), n_layers=4, d_model=128)
+    cfg = dc.replace(cfg, moe=dc.replace(cfg.moe, moe_start_layer=0,
+                                         capacity_factor=8.0))
+    topo = strategy_lib.host_topology()
+    shape = ShapeConfig("eq", 32, 8, "train")
+    key = jax.random.PRNGKey(0)
+    params = tfm.init_params(cfg, key)
+    batch = concrete_train_batch(cfg, 8, 32, key)
+    tc = TrainConfig()
+
+    # oracle groups == the 2 expert-axis token shards the stage dispatches
+    rt1 = Runtime(attn_min_chunked_len=64, moe_impl="dropping", moe_groups=2)
+    p1, _, m1 = _run_step(cfg, rt1, tc, params, batch)
+
+    strat = strategy_lib.parse("fsdp_tp2_pp2_ep2_mb2_1f1b")
+    plan = strat.to_plan(cfg, topo, shape)
+    assert dict(plan.mesh.shape) == {"pipe": 2, "data": 1, "expert": 2,
+                                     "model": 2}
+    rt2 = par.make_runtime(cfg, plan, shape, param_dtype=jnp.float32,
+                           compute_dtype=jnp.float32, remat=False,
+                           attn_min_chunked_len=64)
+    p2, _, m2 = _run_step(cfg, rt2, tc, params, batch, plan)
+    assert float(m2["aux"]) > 0.0
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 2e-3
+    rel_g = abs(float(m1["grad_norm"]) - float(m2["grad_norm"])) \
+        / max(float(m1["grad_norm"]), 1e-6)
+    assert rel_g < 2e-3, rel_g
+    dp = max(float(jnp.max(jnp.abs(a - jax.device_get(b))))
+             for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)))
+    assert dp < 1e-2, dp
+
+
+def test_pp_ep_needs_expert_sharded_microbatch(eight_devices):
+    """pp x ep with microbatch rows that cannot shard over the expert
+    axis is rejected at to_plan (the in-stage all-to-all would overcount
+    expert grads on replicated tokens)."""
+    import dataclasses as dc
+    from repro.strategy import StrategyError
+    cfg = reduced(get_config("deepseek-moe-16b"), n_layers=4, d_model=128)
+    cfg = dc.replace(cfg, moe=dc.replace(cfg.moe, moe_start_layer=0))
+    topo = strategy_lib.host_topology()
+    shape = ShapeConfig("eq", 32, 8, "train")
+    with pytest.raises(StrategyError):
+        # 8 / mb4 = 2 rows over data2 x expert2: expert axis unoccupied
+        strategy_lib.parse("fsdp_pp2_ep2_mb4").to_plan(cfg, topo, shape)
 
 
 def test_pp_matches_executed_fsdp_strategy(eight_devices):

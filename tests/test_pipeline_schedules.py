@@ -1,0 +1,274 @@
+"""Pipeline *schedule* subsystem tests (ISSUE 5): tick-table simulations
+must reproduce the analytic bubble/memory formulas, the 1F1B custom-vjp
+execution must match the sequential oracle (forward AND gradient) on the
+shared 8-virtual-device fixture, and the probe's two-point fit must flag
+unreliable measurements instead of reporting a fabricated 0.0 bubble."""
+import logging
+import time
+
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_config, reduced
+from repro.core.parallel import use_mesh
+from repro.core.pipeline import (SCHEDULES, batch_axes_spec, bubble_fraction,
+                                 get_schedule, inflight_microbatches,
+                                 make_pipelined_block_fn,
+                                 measure_bubble_fraction, pipeline_apply)
+from repro.models.layers import Runtime
+from repro.models.transformer import (_apply_layer, _init_layer, _sig,
+                                      _tree_stack)
+
+
+# ---------------------------------------------------------------------------
+# tick-table simulation vs analytic formulas
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sched", ["gpipe", "1f1b"])
+@pytest.mark.parametrize("P_,M", [(2, 2), (2, 8), (4, 4), (4, 8), (4, 13),
+                                  (8, 8), (8, 32)])
+def test_tick_table_matches_formulas(sched, P_, M):
+    """The executable loops are index arithmetic over exactly these
+    tables: counted idle fraction == bubble_fraction, counted peak
+    in-flight == inflight_microbatches."""
+    sim = get_schedule(sched).simulate(P_, M)
+    assert sim["bubble"] == pytest.approx(bubble_fraction(P_, M, sched))
+    assert sim["peak_inflight"] == inflight_microbatches(P_, M, sched)
+
+
+@pytest.mark.parametrize("P_,M", [(2, 4), (4, 8)])
+def test_tick_table_well_formed(P_, M):
+    """Every microbatch is forwarded and backwarded exactly once per
+    stage, in order, and 1F1B's combined table is 2(M+P-1) ticks."""
+    for sched, want_ticks in (("gpipe", 2 * (M + P_ - 1)),
+                              ("1f1b", 2 * (M + P_ - 1))):
+        table = get_schedule(sched).tick_table(P_, M)
+        assert len(table) == want_ticks
+        for s in range(P_):
+            fs = [j for op, j in (row[s] for row in table) if op == "F"]
+            bs = [j for op, j in (row[s] for row in table) if op == "B"]
+            assert fs == list(range(M)), (sched, s)
+            assert sorted(bs) == list(range(M)), (sched, s)
+
+
+def test_1f1b_inflight_strictly_smaller_than_gpipe():
+    assert inflight_microbatches(4, 16, "1f1b") == 4
+    assert inflight_microbatches(4, 16, "gpipe") == 16
+    assert inflight_microbatches(4, 4, "1f1b") == 4
+    assert bubble_fraction(4, 16, "1f1b") == bubble_fraction(4, 16, "gpipe")
+
+
+def test_1f1b_rejects_underfilled_pipeline():
+    with pytest.raises(ValueError):
+        get_schedule("1f1b").tick_table(4, 2)
+    with pytest.raises(ValueError):
+        get_schedule("unknown")
+    with pytest.raises(ValueError):
+        bubble_fraction(2, 8, "interleaved")
+
+
+@settings(max_examples=60, deadline=None)
+@given(P_=st.integers(2, 6), extra=st.integers(0, 24))
+def test_property_1f1b_bubble_formula_vs_simulation(P_, extra):
+    """ISSUE 5 satellite: the 1F1B bubble formula equals the tick-count
+    simulation for every (P, M >= P), and the simulated in-flight peak is
+    exactly min(M, P)."""
+    M = P_ + extra
+    sim = get_schedule("1f1b").simulate(P_, M)
+    assert sim["bubble"] == pytest.approx((P_ - 1) / (M + P_ - 1))
+    assert sim["peak_inflight"] == min(M, P_)
+    gsim = get_schedule("gpipe").simulate(P_, M)
+    assert gsim["peak_inflight"] == M
+    assert gsim["bubble"] == pytest.approx(sim["bubble"])
+
+
+# ---------------------------------------------------------------------------
+# 1F1B execution == sequential oracle
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced(get_config("qwen3-0.6b"), n_layers=4, d_model=128)
+    rt = Runtime()
+    key = jax.random.PRNGKey(0)
+    layers = [_init_layer(cfg, i, k) for i, k in
+              enumerate(jax.random.split(key, 4))]
+    stacked = {"layers": _tree_stack(layers)}
+    return cfg, rt, layers, stacked
+
+
+def _sequential(cfg, rt, layers, x):
+    M, mb, S, d = x.shape
+    h = x.reshape(M * mb, S, d)
+    for lp in layers:
+        h, _, _ = _apply_layer(cfg, _sig(cfg, 0), lp, h, None, rt)
+    return h.reshape(M, mb, S, d)
+
+
+@pytest.mark.parametrize("mesh_axes", [("pipe",), ("pipe", "data")])
+def test_1f1b_matches_sequential_fwd_and_grad(setup, eight_devices,
+                                              mesh_axes):
+    """The 1F1B custom_vjp (combined recompute-fwd/bwd tick loop) must
+    agree with sequential application — including the composed
+    (pipe, data) mesh and gradients w.r.t. params AND inputs."""
+    cfg, rt, layers, stacked = setup
+    if mesh_axes == ("pipe",):
+        mesh = jax.make_mesh((4,), mesh_axes, devices=eight_devices[:4])
+        batch_axes = ()
+    else:
+        mesh = jax.make_mesh((4, 2), mesh_axes, devices=eight_devices)
+        batch_axes = ("data",)
+    M, mb, S, d = 8, 2, 16, cfg.d_model
+    x = jax.random.normal(jax.random.PRNGKey(0), (M, mb, S, d)) * 0.5
+    stage_fn = make_pipelined_block_fn(cfg, rt)
+
+    def pipelined(params, x):
+        out, _aux = pipeline_apply(stage_fn, params, x, mesh, "pipe",
+                                   batch_axes=batch_axes, schedule="1f1b")
+        return out
+
+    with use_mesh(mesh):
+        out_p = jax.jit(pipelined)(stacked, x)
+    out_s = _sequential(cfg, rt, layers, x)
+    assert float(jnp.max(jnp.abs(out_p - out_s))) < 1e-4
+
+    def loss_p(params, x):
+        return jnp.sum(pipelined(params, x) ** 2)
+
+    def loss_s(layers, x):
+        return jnp.sum(_sequential(cfg, rt, layers, x) ** 2)
+
+    with use_mesh(mesh):
+        g_p, gx_p = jax.jit(jax.grad(loss_p, argnums=(0, 1)))(stacked, x)
+    g_s_layers, gx_s = jax.grad(loss_s, argnums=(0, 1))(layers, x)
+    g_s = {"layers": _tree_stack(g_s_layers)}
+    errs = [float(jnp.max(jnp.abs(a - b))) for a, b in
+            zip(jax.tree.leaves(g_p), jax.tree.leaves(g_s))]
+    assert max(errs) < 5e-3, max(errs)
+    assert float(jnp.max(jnp.abs(gx_p - gx_s))) < 5e-3
+
+
+def test_1f1b_equals_gpipe_execution(setup, eight_devices):
+    """Same ticks, different order: both schedules compute the identical
+    function, so outputs and grads must agree with each other too."""
+    cfg, rt, layers, stacked = setup
+    mesh = jax.make_mesh((2,), ("pipe",), devices=eight_devices[:2])
+    M, mb, S, d = 4, 2, 16, cfg.d_model
+    x = jax.random.normal(jax.random.PRNGKey(1), (M, mb, S, d)) * 0.5
+    stage_fn = make_pipelined_block_fn(cfg, rt)
+
+    outs, grads = {}, {}
+    for sched in ("gpipe", "1f1b"):
+        def loss(params, sched=sched):
+            out, _ = pipeline_apply(stage_fn, params, x, mesh, "pipe",
+                                    schedule=sched)
+            return jnp.sum(out ** 2)
+
+        with use_mesh(mesh):
+            outs[sched], grads[sched] = jax.jit(
+                jax.value_and_grad(loss))(stacked)
+    assert float(outs["gpipe"]) == pytest.approx(float(outs["1f1b"]),
+                                                 rel=1e-5)
+    errs = [float(jnp.max(jnp.abs(a - b))) for a, b in
+            zip(jax.tree.leaves(grads["gpipe"]),
+                jax.tree.leaves(grads["1f1b"]))]
+    assert max(errs) < 5e-3, max(errs)
+
+
+def test_1f1b_apply_rejects_underfilled(setup, eight_devices):
+    cfg, rt, layers, stacked = setup
+    mesh = jax.make_mesh((4,), ("pipe",), devices=eight_devices[:4])
+    x = jnp.zeros((2, 2, 16, cfg.d_model))       # M=2 < P=4
+    stage_fn = make_pipelined_block_fn(cfg, rt)
+    with pytest.raises(ValueError):
+        with use_mesh(mesh):
+            pipeline_apply(stage_fn, stacked, x, mesh, "pipe",
+                           schedule="1f1b")
+
+
+# ---------------------------------------------------------------------------
+# probe reliability flag + batch-axis drop warning (ISSUE 5 satellites)
+# ---------------------------------------------------------------------------
+
+def test_measure_bubble_flags_unreliable_fit():
+    """A non-increasing two-point fit (t(2M) <= t(M)) is a failed
+    measurement, not a 0.0 bubble — the record must say so."""
+    def step_for_m(m):
+        delay = 0.03 if m == 4 else 0.01      # t2 < t1: noisy-host shape
+
+        def run():
+            time.sleep(delay)
+            return jnp.zeros(())
+
+        return run
+
+    rec = measure_bubble_fraction(step_for_m, n_stages=2, microbatches=4,
+                                  n_iter=1)
+    assert rec["fit_unreliable"] is True
+    assert rec["bubble_measured"] == 0.0      # the clamp is still reported
+
+    def step_ok(m):
+        delay = 0.01 * (m + 1)                # properly increasing in M
+
+        def run():
+            time.sleep(delay)
+            return jnp.zeros(())
+
+        return run
+
+    rec = measure_bubble_fraction(step_ok, n_stages=2, microbatches=4,
+                                  n_iter=1, sched="1f1b")
+    assert rec["fit_unreliable"] is False
+    assert rec["sched"] == "1f1b"
+    assert rec["bubble_measured"] > 0.0
+
+
+def test_batch_axes_spec_warns_once_on_dropped_axis(eight_devices, caplog):
+    """pp with microbatch rows that cannot occupy the data axis runs with
+    replicated (redundant) data-parallel compute; that used to be fully
+    silent — now it logs a warning, once per configuration."""
+    import repro.core.pipeline as pl
+    mesh = jax.make_mesh((2, 4), ("pipe", "data"), devices=eight_devices)
+    pl._warned_dropped.clear()
+    with caplog.at_level(logging.WARNING, logger="repro.core.pipeline"):
+        kept = batch_axes_spec(mesh, ("data",), 3)      # 3 % 4 -> dropped
+        assert kept == ()
+        n1 = sum("replicated" in r.message for r in caplog.records)
+        kept = batch_axes_spec(mesh, ("data",), 3)      # same config again
+        n2 = sum("replicated" in r.message for r in caplog.records)
+    assert n1 == 1 and n2 == 1                           # warned exactly once
+    with caplog.at_level(logging.WARNING, logger="repro.core.pipeline"):
+        caplog.clear()
+        assert batch_axes_spec(mesh, ("data",), 8) == ("data",)
+        assert not caplog.records                        # clean fit: silent
+
+
+def test_probe_handles_pp_ep_strategy(eight_devices):
+    """Regression: the bubble probe builds its stage runtime via the same
+    recipe as the forward path (`transformer.pipeline_stage_runtime`), so
+    a pp x ep strategy probes through the in-stage ep_manual dispatch
+    instead of crashing on a nested shard_map — and its synthetic
+    microbatch is rounded up to occupy the expert axis."""
+    import dataclasses as dc
+    from repro import strategy as strategy_lib
+    from repro.configs import get_config
+    from repro.perf.pipeline_probe import measure_bubble
+
+    cfg = reduced(get_config("deepseek-moe-16b"), n_layers=4, d_model=128)
+    cfg = dc.replace(cfg, moe=dc.replace(cfg.moe, moe_start_layer=0))
+    rec = measure_bubble(cfg, strategy_lib.parse("fsdp_pp2_ep2_mb2"),
+                         strategy_lib.host_topology(), seq_len=32, n_iter=1)
+    assert rec["pp"] == 2 and rec["sched"] == "gpipe"
+    assert rec["probe_mb_rows"] % 4 == 0       # data2 x expert2 occupied
+    assert rec["bubble_predicted"] == pytest.approx(1 / 3)
+    assert "fit_unreliable" in rec
+
+
+def test_schedule_registry():
+    assert set(SCHEDULES) == {"gpipe", "1f1b"}
+    for name, sched in SCHEDULES.items():
+        assert sched.name == name
+        assert get_schedule(name) is sched

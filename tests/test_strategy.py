@@ -47,6 +47,11 @@ POD1 = strategy_lib.pod_topology(pods=1)
     Strategy(dp_mode="hsdp", tp=8, attn="head_tp", zero_stage=3),
     Strategy(dp_mode="fsdp", ep=8),
     Strategy(dp_mode="hsdp", tp=2, ep=4),
+    Strategy(dp_mode="fsdp", pp=4, microbatches=8, sched="1f1b"),
+    Strategy(dp_mode="fsdp", tp=2, pp=2, ep=2, microbatches=4,
+             sched="1f1b"),
+    Strategy(dp_mode="hsdp", pp=2, microbatches=4, grad_accum=2,
+             sched="1f1b", seq_parallel=False),
 ])
 def test_spec_round_trip(s):
     assert parse(s.format()) == s
@@ -63,7 +68,8 @@ def test_spec_defaults_and_aliases():
 
 
 @pytest.mark.parametrize("bad", ["", "zorp_tp2", "hsdp_tp", "hsdp_xp4",
-                                 "hsdp_tp4_tp8", "tp4"])
+                                 "hsdp_tp4_tp8", "tp4", "fsdp_1f1b",
+                                 "fsdp_pp2_mb4_1f1b_gpipe"])
 def test_spec_parse_rejects(bad):
     with pytest.raises(StrategyError):
         parse(bad)
@@ -74,6 +80,10 @@ def test_descriptor_validation():
         Strategy(tp=0)
     with pytest.raises(StrategyError):
         Strategy(dp_mode="zorp")
+    with pytest.raises(StrategyError):
+        Strategy(sched="interleaved")
+    with pytest.raises(StrategyError):
+        Strategy(sched="1f1b")        # sched token without a pipeline
     # tp and cp share the model axis
     with pytest.raises(StrategyError):
         Strategy(tp=2, cp=2).check(POD1)
@@ -127,7 +137,8 @@ def test_pp_model_constraints():
 
 def test_ep_model_constraints():
     """ep needs an MoE config whose expert count it divides; ep stays
-    inside the data axis and does not compose with pp yet."""
+    inside the data axis.  ep x pp now composes (ISSUE 5): the expert
+    all-to-all runs inside the pipeline stage body."""
     moe = get_config("deepseek-moe-16b")          # 64 routed experts
     Strategy(dp_mode="fsdp", ep=8).check(POD1, moe)
     with pytest.raises(StrategyError):
@@ -136,8 +147,13 @@ def test_ep_model_constraints():
         moe, moe=dataclasses.replace(moe.moe, n_experts=48))
     with pytest.raises(StrategyError):
         Strategy(dp_mode="fsdp", ep=32).check(POD1, odd_e)      # 48 % 32
-    with pytest.raises(StrategyError):
-        Strategy(dp_mode="fsdp", pp=2, ep=2, microbatches=8)    # ep x pp
+    # ep x pp is a constructible, lowerable composition now — the old
+    # StrategyError is gone (the uniform-stack rule still applies)
+    uniform_moe = dataclasses.replace(
+        moe, moe=dataclasses.replace(moe.moe, moe_start_layer=0))
+    s = Strategy(dp_mode="fsdp", pp=2, ep=2, microbatches=8)
+    s.check(POD1, uniform_moe)
+    assert s.lowerable(POD1, uniform_moe)
     # hsdp: ep must divide the island-local data group
     assert Strategy(dp_mode="hsdp", ep=8).lowerable(POD2, moe)
     cost = Strategy(dp_mode="fsdp", ep=8).to_cost_strategy(moe, POD1)
@@ -239,6 +255,7 @@ def _strategy_kwargs():
         tp=st.sampled_from([1, 2, 4, 8]),
         cp=st.sampled_from([1, 2, 4]),
         pp=st.sampled_from([1, 2, 4]),
+        sched=st.sampled_from(["gpipe", "1f1b"]),
         ep=st.sampled_from([1, 2, 4, 8]),
         zero_stage=st.sampled_from([None, 0, 2, 3]),
         microbatches=st.sampled_from([1, 4, 8, 16]),
@@ -258,7 +275,8 @@ def _build(kw):
 @settings(max_examples=200, deadline=None)
 @given(st.fixed_dictionaries(_strategy_kwargs()))
 def test_property_spec_round_trip(kw):
-    """parse(format(s)) == s for every constructible strategy."""
+    """parse(format(s)) == s for every constructible strategy — including
+    the pipeline-schedule token (ISSUE 5 satellite)."""
     s = _build(kw)
     assert parse(s.format()) == s
     # and format is canonical: a second round-trip is a fixed point
@@ -287,6 +305,7 @@ def test_property_group_sizes_match_mesh(kw):
     assert plan.pipe_size == cost.pp, s.format()
     assert plan.ep_size == cost.ep, s.format()
     assert plan.microbatches == (s.microbatches if s.pp > 1 else 1)
+    assert plan.pipe_sched == s.sched == cost.sched
     if s.ep > 1:
         assert plan.expert in plan.dp      # ep factored out of the data axes
         assert plan.axis_size(plan.dp) == s.dp_effective(POD2) * s.ep
@@ -362,6 +381,36 @@ def test_pp_on_pareto_front_when_node_bandwidth_constrained():
     best_pp = max(p.score for p in ranked if p.strategy.pp > 1)
     best_flat = max(p.score for p in ranked if p.strategy.pp == 1)
     assert best_pp > best_flat
+
+
+def test_1f1b_memory_flips_fits_in_planner_sweep():
+    """ISSUE 5 acceptance (pinned): the planner sweeps schedules by
+    default, and there is a topology where 1F1B's smaller in-flight
+    activation footprint flips ``fits`` relative to the same-mesh GPipe
+    point — i.e. the schedule choice changes which strategies are
+    feasible, exactly the memory-forces-strategy-changes effect the
+    paper models."""
+    s_g = Strategy(dp_mode="fsdp", pp=4, microbatches=16)
+    s_f = dataclasses.replace(s_g, sched="1f1b")
+    # long sequences make activations dominate; pick hbm between the two
+    # schedules' predicted footprints so the flip is by construction
+    shape = ShapeConfig("flip", 16384, 256, "train")
+    base = Topology("flip", 256, island=8, hardware="H100", hbm=80e9)
+    mem = {s.sched: strategy_lib.evaluate(LLAMA2_7B, s, base, shape)
+           .memory_per_device for s in (s_g, s_f)}
+    assert mem["1f1b"] < mem["gpipe"]
+    topo = dataclasses.replace(base, hbm=(mem["1f1b"] + mem["gpipe"]) / 2)
+    r_g = strategy_lib.evaluate(LLAMA2_7B, s_g, topo, shape)
+    r_f = strategy_lib.evaluate(LLAMA2_7B, s_f, topo, shape)
+    assert r_f.fits and not r_g.fits
+    # and the default planner sweep surfaces the 1f1b point as fitting
+    # while its gpipe twin is excluded by the fits filter
+    ranked = search(LLAMA2_7B, topo, shape, microbatches=16,
+                    dp_modes=("fsdp",))
+    specs = {p.spec for p in ranked}
+    assert s_f.format() in specs, sorted(specs)
+    assert s_g.format() not in specs
+    assert all(p.report.fits for p in ranked)
 
 
 def test_pareto_front_subset_and_contains_best():

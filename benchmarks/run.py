@@ -350,6 +350,162 @@ def _ep_sweep(out_path: str = "results/benchmarks/BENCH_moe.json",
     return summary
 
 
+def _serve_sweep(out_path: str = "results/benchmarks/BENCH_serve.json",
+                 batches=(1, 2, 4, 8), prompt_len: int = 16,
+                 n_new: int = 64, n_iter: int = 3):
+    """Serving-engine sweep: continuous-batching paged engine vs the
+    static dense-cache baseline across offered batch sizes ->
+    BENCH_serve.json (CI artifact).
+
+    Per batch size it records, for both engines, end-to-end tokens/s and
+    the p50/p99 *effective per-token latency* (continuous: each token's
+    share of the wall time of the tick that delivered it; static: the
+    wall time of each synchronized host step).  It also isolates the
+    decode inner-loop dispatch comparison the paged engine is built
+    around: the same jitted paged decode kernel run as one on-device
+    ``lax.fori_loop`` segment of ``steps`` iterations vs ``steps``
+    single-step host dispatches over identical mid-flight state.  CPU
+    wall time is a regression signal, not a TPU claim; the dispatch
+    ratio is the comparable trend.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config, reduced
+    from repro.models import transformer as tfm
+    from repro.models.layers import Runtime
+    from repro.serve import ServeEngine
+
+    # small enough that per-step dispatch overhead is visible next to
+    # compute — the regime where the on-device segment loop matters
+    cfg = reduced(get_config("qwen3-0.6b"), n_layers=2, d_model=128)
+    rt = Runtime()
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    steps = 32
+    rows, summary = [], []
+    for B in batches:
+        eng = ServeEngine(cfg, params, rt, max_len=prompt_len + n_new + 8,
+                          n_slots=B, block_size=16, prefill_chunk=prompt_len,
+                          steps_per_tick=steps)
+        prompts = jax.random.randint(
+            jax.random.PRNGKey(1), (B, prompt_len), 0, cfg.vocab_size)
+        pnp = np.asarray(prompts)
+        eng.generate(prompts, n_new)             # compile the paged path
+        eng.generate_static(prompts, n_new)      # compile the dense path
+
+        # -- continuous: timed tick loop over the paged engine ----------
+        def run_continuous():
+            for i in range(B):
+                eng.submit(pnp[i], n_new, stream=i)
+            base = eng._base_key(None)
+            sched = eng._sched
+            lat, n_ticks = [], 0
+            t0 = time.perf_counter()
+            while sched.has_work():
+                gen0 = {r.rid: len(r.generated)
+                        for r in sched.running.values()}
+                t1 = time.perf_counter()
+                eng._tick(base)
+                wall = time.perf_counter() - t1
+                n_ticks += 1
+                for r in list(sched.running.values()) + \
+                        list(sched.finished.values()):
+                    g = len(r.generated) - gen0.get(r.rid, 0)
+                    if g:
+                        lat += [wall / g] * g
+            t_total = time.perf_counter() - t0
+            sched.finished.clear()
+            return t_total, lat, n_ticks
+
+        t_cont, lat, n_ticks = min(
+            (run_continuous() for _ in range(n_iter)), key=lambda r: r[0])
+        cont = {"batch": B, "mode": "continuous",
+                "tokens_per_s": round(B * n_new / t_cont, 1),
+                "p50_token_ms": round(float(np.percentile(lat, 50)) * 1e3, 3),
+                "p99_token_ms": round(float(np.percentile(lat, 99)) * 1e3, 3),
+                "total_s": round(t_cont, 4), "n_ticks": n_ticks}
+
+        # -- decode dispatch: on-device segment vs per-step host loop ---
+        # identical mid-flight paged state (all B slots decode-active
+        # after one tick), identical kernel, identical token count
+        for i in range(B):
+            eng.submit(pnp[i], n_new, stream=i)
+        eng._tick(eng._base_key(None))
+        cache = eng._cache_dict()
+        last = jnp.asarray(eng._last)
+        streams = jnp.asarray(eng._streams)
+        temps = jnp.asarray(eng._temps)
+        kseg = jax.random.PRNGKey(7)
+
+        def seg(c, l, rem, n):
+            return eng._segment_fn(eng.params, c, l,
+                                   jnp.full((B,), rem, jnp.int32),
+                                   streams, temps, kseg, steps=n)
+
+        jax.block_until_ready(seg(cache, last, 1, 1)[1])   # compile steps=1
+        t_dev = t_host = float("inf")
+        for _ in range(n_iter):
+            t1 = time.perf_counter()
+            jax.block_until_ready(seg(cache, last, steps, steps)[1])
+            t_dev = min(t_dev, time.perf_counter() - t1)
+            t1 = time.perf_counter()
+            c, l = cache, last
+            for _ in range(steps):
+                c, out = seg(c, l, 1, 1)
+                l = out[:, 0]
+            jax.block_until_ready(l)
+            t_host = min(t_host, time.perf_counter() - t1)
+        eng.run_until_drained()                  # leave the engine clean
+        cont.update(
+            decode_on_device_ms_per_step=round(t_dev / steps * 1e3, 4),
+            decode_host_dispatch_ms_per_step=round(t_host / steps * 1e3, 4),
+            decode_dispatch_speedup=round(t_host / t_dev, 3))
+
+        # -- static baseline: batch prefill + one host step per token ---
+        t_stat = float("inf")
+        for _ in range(n_iter):
+            t0 = time.perf_counter()
+            jax.block_until_ready(eng.generate_static(prompts, n_new))
+            t_stat = min(t_stat, time.perf_counter() - t0)
+        # per-token latency needs per-step walls -> synchronized replay
+        logits, cache = eng._prefill(eng.params, {"tokens": prompts})
+        last = jax.block_until_ready(logits[:, -1])
+        walls = []
+        for t in range(n_new):
+            t1 = time.perf_counter()
+            nxt = jnp.argmax(last, axis=-1)[:, None].astype(jnp.int32)
+            logits, cache = eng._step(eng.params, cache, nxt,
+                                      jnp.asarray(prompt_len + t, jnp.int32))
+            last = jax.block_until_ready(logits[:, 0])
+            walls.append(time.perf_counter() - t1)
+        stat = {"batch": B, "mode": "static",
+                "tokens_per_s": round(B * n_new / t_stat, 1),
+                "p50_token_ms": round(float(np.percentile(walls, 50)) * 1e3, 3),
+                "p99_token_ms": round(float(np.percentile(walls, 99)) * 1e3, 3),
+                "total_s": round(t_stat, 4)}
+        rows += [cont, stat]
+        summary.append((f"serve_b{B}_continuous", t_cont * 1e6,
+                        f"tok/s{cont['tokens_per_s']:.0f}"
+                        f"_p50{cont['p50_token_ms']:.2f}ms"
+                        f"_devstep{cont['decode_on_device_ms_per_step']:.2f}ms"
+                        f"_hoststep{cont['decode_host_dispatch_ms_per_step']:.2f}ms"))
+        summary.append((f"serve_b{B}_static", t_stat * 1e6,
+                        f"tok/s{stat['tokens_per_s']:.0f}"
+                        f"_p50{stat['p50_token_ms']:.2f}ms"))
+        if B >= 4 and t_host <= t_dev:
+            print(f"[bench] warn: B={B} on-device segment "
+                  f"({t_dev/steps*1e3:.3f}ms/step) did not beat host "
+                  f"dispatch ({t_host/steps*1e3:.3f}ms/step) — noisy host?")
+
+    import jax as _jax
+    _write_bench(out_path, {
+        "backend": _jax.default_backend(), "arch": cfg.name,
+        "prompt_len": prompt_len, "n_new": n_new,
+        "steps_per_tick": steps, "block_size": 16,
+        "prefill_chunk": prompt_len, "n_iter": n_iter,
+        "rows": rows}, len(rows))
+    return summary
+
+
 def _strategy_benchmark(spec: str, hw_name: str, gpus: int, global_batch: int,
                         seq_len: int):
     """Price one spec (or the planner's 'auto' pick) via the unified API."""
@@ -400,6 +556,14 @@ def main() -> None:
                          "devices) and write BENCH_moe.json")
     ap.add_argument("--moe_json",
                     default="results/benchmarks/BENCH_moe.json")
+    ap.add_argument("--serve-sweep", dest="serve_sweep", action="store_true",
+                    help="only run the serving-engine sweep (continuous-"
+                         "batching paged engine vs static dense baseline: "
+                         "tokens/s, p50/p99 per-token latency, and the "
+                         "on-device decode segment vs per-step host "
+                         "dispatch comparison) and write BENCH_serve.json")
+    ap.add_argument("--serve_json",
+                    default="results/benchmarks/BENCH_serve.json")
     args = ap.parse_args()
 
     if args.micro_kernels:
@@ -418,6 +582,13 @@ def main() -> None:
 
     if args.ep_sweep:
         rows = _ep_sweep(args.moe_json)
+        print("name,us_per_call,derived")
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},{derived}")
+        return
+
+    if args.serve_sweep:
+        rows = _serve_sweep(args.serve_json)
         print("name,us_per_call,derived")
         for name, us, derived in rows:
             print(f"{name},{us:.1f},{derived}")

@@ -225,6 +225,13 @@ class StepReport:
     tokens_per_joule: float
     memory_per_device: float     # bytes (params+opt+grads+activations)
     fits: bool
+    # decode-mode latency percentiles (s/token); 0.0 for train/prefill
+    # pricing, where a per-token latency distribution is not meaningful.
+    # p50 is the steady-state decode step; p99 adds the worst-case
+    # continuous-batching interference (a decode step that lands behind
+    # one chunked-prefill tick waits that chunk out).
+    latency_p50: float = 0.0
+    latency_p99: float = 0.0
 
     def row(self) -> Dict:
         d = dataclasses.asdict(self)
@@ -447,6 +454,98 @@ def step_time(cfg: ModelConfig, hw: Hardware, strat: Strategy,
         power_per_device=power,
         tokens_per_joule=wps / (power * strat.n_devices),
         memory_per_device=mem, fits=mem < hbm_capacity)
+
+
+# ---------------------------------------------------------------------------
+# decode-step model (serving)
+# ---------------------------------------------------------------------------
+
+def decode_step_time(cfg: ModelConfig, hw: Hardware, strat: Strategy,
+                     batch: int, context_len: int,
+                     hbm_capacity: float = 80e9,
+                     prefill_chunk: int = 32) -> StepReport:
+    """Analytic latency of one decode step (one token per sequence).
+
+    Decode is memory-bound, not FLOP-bound: each step streams the device's
+    *active* parameter shard plus the batch's KV slice from HBM, so the
+    roofline is max(flops, bytes) — the reason the training objective
+    (wps) misranks serving strategies, and what the planner's decode-mode
+    latency objectives price instead.  Model-parallel collectives sit on
+    the critical path per token: TP all-reduces are latency-dominated at
+    decode's tiny activation sizes (alpha terms, not bandwidth), and a
+    pipeline adds its depth in p2p hops to every token.  Throughput-side
+    fields (wps, mfu, ...) are filled for the same step so one report
+    serves both rankings.
+    """
+    assert strat.valid(), strat
+    shape = ShapeConfig("x", context_len, batch, "decode")
+    L, d = cfg.n_layers, cfg.d_model
+    P_bytes = _model_bytes(cfg)
+
+    flops = flops_lib.forward_flops(cfg, shape)
+    t_flops = flops / strat.n_devices / (hw.flops_bf16 * hw.kernel_eff)
+
+    # HBM traffic: active params (MoE reads top_k experts' rows only) and
+    # the local KV slice — batch shards over (dp, cp), heads over tp,
+    # layers over pp
+    local_batch = max(batch // (strat.dp * strat.cp), 1)
+    active_bytes = cfg.active_param_count() * 2 / (strat.tp * strat.pp)
+    kv_bytes = (local_batch * context_len * (L / strat.pp) *
+                cfg.kv_heads * cfg.head_dim_ * 2 * 2 / strat.tp)
+    t_mem = (active_bytes + kv_bytes) / hw.hbm_bw
+
+    comm: Dict[str, float] = {"tp_ar": 0.0, "pp_p2p": 0.0, "moe_a2a": 0.0}
+    act_bytes = local_batch * d * 2
+    if strat.tp > 1:
+        comm["tp_ar"] = L * 2 * t_all_reduce(hw, act_bytes, strat.tp)
+    if strat.pp > 1:
+        comm["pp_p2p"] = (strat.pp - 1) * t_p2p(
+            hw, act_bytes, strat.pp * strat.tp > hw.island)
+    if cfg.moe.n_experts:
+        n_moe = sum(cfg.is_moe_layer(i) for i in range(L))
+        ep_group = (strat.ep if strat.ep > 1
+                    else min(strat.tp * strat.cp, cfg.moe.n_experts))
+        if ep_group > 1:
+            tok_bytes = (local_batch * cfg.moe.top_k *
+                         cfg.moe.capacity_factor * d * 2)
+            span = (ep_group * strat.tp * strat.cp if strat.ep > 1
+                    else strat.tp * strat.cp)
+            bw, alpha = _bw_alpha(hw, span)
+            comm["moe_a2a"] = n_moe * 2 * (ep_group - 1) * max(
+                tok_bytes / (ep_group * bw), alpha)
+
+    t_exposed = sum(comm.values())       # all on the per-token critical path
+    t_token = max(t_flops, t_mem) + t_exposed
+
+    # p99: one chunked-prefill tick of interference (continuous batching
+    # admits mid-stream; the colliding decode step waits the chunk out)
+    chunk_shape = ShapeConfig("x", prefill_chunk, 1, "prefill")
+    t_chunk = flops_lib.forward_flops(cfg, chunk_shape) / strat.n_devices \
+        / (hw.flops_bf16 * hw.kernel_eff)
+    p50 = t_token
+    p99 = t_token + t_chunk
+
+    # memory: full param shard resident + KV cache + working activations
+    mem = P_bytes / (strat.tp * strat.pp) / \
+        (strat.fsdp_n if strat.zero_stage >= 3 else 1)
+    mem += kv_bytes + act_bytes * 4
+
+    wps = batch / t_token
+    model_fl = flops_lib.model_flops(cfg, shape)
+    mfu = model_fl / t_token / (strat.n_devices * hw.flops_bf16)
+    util = t_flops / t_token
+    power = hw.power_idle + (hw.power_peak - hw.power_idle) * util
+
+    return StepReport(
+        strategy=strat, hardware=hw.name, t_step=t_token, t_compute=t_flops,
+        t_comm_total=t_exposed, t_comm_exposed=t_exposed,
+        comm_breakdown=comm, tokens=batch, wps=wps,
+        wps_per_device=wps / strat.n_devices,
+        tflops_per_device=flops / t_token / strat.n_devices / 1e12, mfu=mfu,
+        power_per_device=power,
+        tokens_per_joule=wps / (power * strat.n_devices),
+        memory_per_device=mem, fits=mem < hbm_capacity,
+        latency_p50=p50, latency_p99=p99)
 
 
 # The deprecated ``sweep_strategies`` / ``best_strategy`` shims are gone:

@@ -60,6 +60,18 @@ from jax.sharding import PartitionSpec as P
 from repro.core.compat import shard_map as _shard_map
 
 
+# Trace-time dispatch accounting: which EP entry each apply_moe lowering
+# took.  Incremented when a call is *traced* (once per compiled shape, not
+# per executed step) — the dry-run records deltas around its lowerings so
+# the artifact shows whether a decode shape really ran the all-to-all,
+# took the padded path, or fell back to GSPMD dropping.
+DISPATCH_STATS = {"ep_calls": 0, "ep_padded_calls": 0, "ep_fallback_calls": 0}
+
+
+def dispatch_stats_snapshot() -> dict:
+    return dict(DISPATCH_STATS)
+
+
 def token_shards(rt) -> int:
     """Number of shards the flattened token dim splits into."""
     mesh = rt.expert_mesh
@@ -78,6 +90,38 @@ def can_shard_tokens(cfg, rt, n_tokens: int) -> bool:
         return False
     shards = token_shards(rt)
     return n_tokens % shards == 0 and n_tokens >= shards
+
+
+def can_pad_tokens(cfg, rt) -> bool:
+    """True when ``moe_expert_parallel_padded`` can serve a token count
+    that ``can_shard_tokens`` rejects: the mesh/expert-divisibility
+    constraints must hold — only the token count is fixable by padding."""
+    return bool(rt.expert_axis and rt.expert_mesh is not None and
+                cfg.moe.n_experts % rt.expert_mesh.shape[rt.expert_axis] == 0)
+
+
+def moe_expert_parallel_padded(cfg, p, xf, rt):
+    """EP dispatch for token counts that do not tile the mesh (decode
+    batches): zero-pad the token dim up to a multiple of the shard count,
+    run the normal shard_map dispatch, slice the padding back off.
+
+    The pad rows are appended *after* every real token, and
+    ``_route_capacity``'s stable argsort preserves token order within an
+    expert — so wherever a pad row competes with a real token for expert
+    capacity, the real token wins; padding can only ever drop padding.
+    The router's aux stats do see the pad rows (their expert counts shift
+    the balance loss), which is irrelevant for the decode-only shapes
+    this path exists for — training shapes always satisfy
+    ``can_shard_tokens``.
+    """
+    T, d = xf.shape
+    shards = token_shards(rt)
+    T_pad = max(-(-T // shards) * shards, shards)
+    if T_pad == T:
+        return moe_expert_parallel(cfg, p, xf, rt)
+    xp = jnp.pad(xf, ((0, T_pad - T), (0, 0)))
+    y, aux = moe_expert_parallel(cfg, p, xp, rt)
+    return y[:T], aux
 
 
 def expert_dispatch_local(cfg, router, stack, x_loc, rt, axis: str, ep: int):

@@ -13,6 +13,7 @@ from __future__ import annotations
 import jax
 
 from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.flash_decode import flash_decode as _flash_decode
 from repro.kernels.rmsnorm import rmsnorm as _rmsnorm
 from repro.kernels.rwkv6 import wkv6 as _wkv6
 
@@ -32,6 +33,15 @@ def attention(q, k, v, *, causal=True, window=0, block_q=128, block_kv=256,
               interpret="auto"):
     return _flash(q, k, v, causal=causal, window=window, block_q=block_q,
                   block_kv=block_kv, interpret=_interp(interpret))
+
+
+def paged_decode_attention(q, k_pool, v_pool, tbl, ctx, *, n_splits=4,
+                           interpret="auto"):
+    """Flash-decode over a paged KV cache (forward-only; decode has no
+    backward).  q (B,1,H,D); pools (P,bs,Kv,D); tbl (B,max_blocks) int32;
+    ctx (B,) int32 valid positions per request."""
+    return _flash_decode(q, k_pool, v_pool, tbl, ctx, n_splits=n_splits,
+                         interpret=_interp(interpret))
 
 
 def rmsnorm(x, scale, *, eps=1e-6, block_rows=256, interpret="auto"):

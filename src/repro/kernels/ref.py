@@ -32,6 +32,36 @@ def attention_ref(q, k, v, *, causal=True, window=0):
     return out.reshape(B, Sq, H, D).astype(q.dtype)
 
 
+def paged_attention_ref(q, k_pool, v_pool, tbl, ctx, *, window=0):
+    """Decode attention over a paged KV cache (fp32 softmax oracle).
+
+    q (B, 1, H, D) one query token per request; k_pool/v_pool
+    (P, bs, Kv, D) shared block pools; tbl (B, max_blocks) int32 block
+    table (-1 = unallocated); ctx (B,) int32 valid KV positions per
+    request (the query sits at position ctx[b] - 1).  Position p of
+    request b lives at pool slot (tbl[b, p // bs], p % bs).
+    """
+    B, Sq, H, D = q.shape
+    P, bs, Kv, _ = k_pool.shape
+    G = H // Kv
+    nb = tbl.shape[1]
+    safe = jnp.clip(tbl, 0, P - 1)
+    k = k_pool[safe].reshape(B, nb * bs, Kv, D)          # (B, Skv, Kv, D)
+    v = v_pool[safe].reshape(B, nb * bs, Kv, D)
+    k_pos = jnp.arange(nb * bs)
+    valid = (k_pos[None] < ctx[:, None]) & \
+        (tbl >= 0).repeat(bs, axis=1)                    # (B, Skv)
+    if window:
+        valid &= k_pos[None] > (ctx[:, None] - 1 - window)
+    qg = q.reshape(B, Sq, Kv, G, D)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (D ** -0.5)
+    s = jnp.where(valid[:, None, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, D).astype(q.dtype)
+
+
 def rmsnorm_ref(x, scale, eps=1e-6):
     xf = x.astype(jnp.float32)
     ms = jnp.mean(xf * xf, axis=-1, keepdims=True)

@@ -217,6 +217,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
 
     t0 = time.time()
     try:
+        from repro.core.expert import dispatch_stats_snapshot
+        stats0 = dispatch_stats_snapshot()
         cfg, shape, strat, plan, lowered = lower_one(
             arch, shape_name, multi_pod, dp_mode, attn_override,
             rt_overrides, donate, seq_parallel, grad_accum, strategy,
@@ -265,6 +267,13 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
                              if not callable(v)},
             "donate": donate,
         }
+        if cfg.moe.n_experts:
+            # which EP entry this lowering's apply_moe calls actually took
+            # (trace-time deltas): 'ep_padded_calls' means small token
+            # counts ran the padded all-to-all, 'ep_fallback_calls' means
+            # the plan's dispatch was NOT what lowered (GSPMD dropping)
+            stats1 = dispatch_stats_snapshot()
+            rec["moe_dispatch"] = {k: stats1[k] - stats0[k] for k in stats1}
         if strat.pp > 1:
             # pipeline section: the analytic per-schedule bubble and
             # in-flight activation count, plus (on a live host mesh with

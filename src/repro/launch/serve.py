@@ -37,9 +37,17 @@ def main():
     ap.add_argument("--topology", default="host",
                     help="host | pod | multipod[<k>]")
     ap.add_argument("--kernels", default="jnp", choices=["jnp", "pallas"],
-                    help="attention/norm impl for prefill (decode steps use "
-                         "the dense cache path either way)")
+                    help="attention/norm impl; with 'pallas' the paged "
+                         "engine's decode segments run the flash-decode "
+                         "kernel over the block pool")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--engine", default="auto",
+                    choices=["auto", "paged", "static"],
+                    help="auto routes through the paged continuous-batching "
+                         "path when it applies; static forces the dense-"
+                         "cache per-token loop")
+    ap.add_argument("--n_slots", type=int, default=8,
+                    help="in-flight batch bound of the paged engine")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -72,16 +80,25 @@ def main():
         rt = Runtime(rwkv_chunk=16, mamba_chunk=32, moe_impl="auto",
                      attn_impl=args.kernels, norm_impl=args.kernels)
         params = init_params(cfg, key)
-    engine = ServeEngine(cfg, params, rt, max_len=max_len, plan=plan)
+    engine = ServeEngine(cfg, params, rt, max_len=max_len, plan=plan,
+                         seed=args.seed, n_slots=args.n_slots)
+    if args.engine == "paged" and not engine.paged_ok:
+        raise SystemExit("--engine paged needs a single-device plan and an "
+                         "attention-only stack")
+    use_paged = engine.paged_ok and args.engine != "static"
 
     prompts = jax.random.randint(key, (args.batch, args.prompt_len),
                                  0, cfg.vocab_size)
     t0 = time.time()
-    out = engine.generate(prompts, args.n_new, temperature=args.temperature,
-                          key=key)
+    if use_paged:
+        out = engine.generate(prompts, args.n_new,
+                              temperature=args.temperature, key=key)
+    else:
+        out = engine.generate_static(prompts, args.n_new,
+                                     temperature=args.temperature, key=key)
     dt = time.time() - t0
     print(f"arch={cfg.name} batch={args.batch} prompt={args.prompt_len} "
-          f"new={args.n_new}")
+          f"new={args.n_new} engine={'paged' if use_paged else 'static'}")
     print(f"generated {args.batch * args.n_new} tokens in {dt:.2f}s "
           f"({args.batch * args.n_new / dt:.1f} tok/s on "
           f"{jax.default_backend()})")

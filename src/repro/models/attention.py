@@ -175,6 +175,83 @@ def sdpa_decode(q, k_cache, v_cache, k_pos, cur_pos, window=0):
 
 
 # ---------------------------------------------------------------------------
+# paged KV cache path (serving: shared block pools + per-request tables)
+# ---------------------------------------------------------------------------
+
+def _paged_write(pool, vals, tbl, pos):
+    """Scatter vals (B, S, Kv, D) into pool (P, bs, Kv, D) at absolute
+    positions pos (B, S) via the block table tbl (B, max_blocks).
+
+    Position p of request b lands at (tbl[b, p // bs], p % bs).  Writes
+    to unallocated blocks (tbl -1) or past the table are *dropped* — this
+    is what makes inactive slots in a fixed-shape decode batch harmless:
+    their sentinel positions fall outside any allocated block.
+    """
+    P, bs = pool.shape[0], pool.shape[1]
+    nb = tbl.shape[1]
+    blk_log = pos // bs
+    blk = jnp.take_along_axis(tbl, jnp.clip(blk_log, 0, nb - 1), axis=1)
+    blk = jnp.where((blk < 0) | (blk_log >= nb), P, blk)   # P = out of bounds
+    off = pos % bs
+    B, S = pos.shape
+    return pool.at[blk.reshape(-1), off.reshape(-1)].set(
+        vals.reshape((B * S,) + vals.shape[2:]).astype(pool.dtype),
+        mode="drop")
+
+
+def _paged_attend(q, k_pool, v_pool, tbl, q_pos, n_valid, window=0):
+    """Attention over pool-gathered KV with per-request positions (jnp
+    reference path; the Pallas flash-decode kernel replaces it on TPU).
+
+    q (B, Sq, H, D) at absolute positions q_pos (B, Sq); n_valid (B,)
+    counts KV entries present per request (the just-written chunk
+    included), so both chunked prefill (Sq > 1) and decode (Sq == 1) are
+    the same computation.
+    """
+    P, bs, Kv, D = k_pool.shape
+    B, Sq = q_pos.shape
+    nb = tbl.shape[1]
+    safe = jnp.clip(tbl, 0, P - 1)
+    k = k_pool[safe].reshape(B, nb * bs, Kv, D)
+    v = v_pool[safe].reshape(B, nb * bs, Kv, D)
+    k_pos = jnp.broadcast_to(jnp.arange(nb * bs)[None], (B, nb * bs))
+    valid = (k_pos < n_valid[:, None]) & (tbl >= 0).repeat(bs, axis=1)
+    mask = valid[:, None, :] & (k_pos[:, None, :] <= q_pos[:, :, None])
+    if window:
+        mask &= k_pos[:, None, :] > (q_pos[:, :, None] - window)
+    G = q.shape[2] // Kv
+    qg = q.reshape(B, Sq, Kv, G, D)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32) * \
+        (D ** -0.5)
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, v)
+    return out.reshape(B, Sq, Kv * G, D)
+
+
+def _paged_attention_block(cfg, q, k, v, cache, paged, rt: Runtime):
+    """Write the new chunk into the layer's pools and attend against the
+    request's full paged context.  cache: {'k_pool', 'v_pool'}; paged:
+    {'tbl' (B, max_blocks), 'ctx' (B,)} shared across layers (the engine
+    advances ctx between steps — layers only read it)."""
+    B, S = q.shape[0], q.shape[1]
+    tbl, ctx = paged["tbl"], paged["ctx"]
+    pos = ctx[:, None] + jnp.arange(S, dtype=jnp.int32)[None]   # (B, S)
+    k_pool = _paged_write(cache["k_pool"], k, tbl, pos)
+    v_pool = _paged_write(cache["v_pool"], v, tbl, pos)
+    n_valid = ctx + S
+    if (S == 1 and rt.attn_impl == "pallas" and not cfg.sliding_window
+            and cfg.head_dim_ % 8 == 0):
+        from repro.kernels import ops as kernel_ops
+        out = kernel_ops.paged_decode_attention(q, k_pool, v_pool, tbl,
+                                                n_valid)
+    else:
+        out = _paged_attend(q, k_pool, v_pool, tbl, pos, n_valid,
+                            cfg.sliding_window)
+    return out, {"k_pool": k_pool, "v_pool": v_pool}
+
+
+# ---------------------------------------------------------------------------
 # full attention block (projections + rope + cache plumbing)
 # ---------------------------------------------------------------------------
 
@@ -213,11 +290,14 @@ def _cp_attend(q, k, v, window, scale, axis):
 
 
 def attention_block(cfg, p, x, rope_ang, rt: Runtime, cache=None,
-                    want_cache: bool = False):
+                    want_cache: bool = False, paged=None):
     """Full attention sublayer.
 
     Train/prefill: x (B,S,d), cache None -> (out, new_cache | None).
     Decode:        x (B,1,d), cache dict  -> (out, updated cache).
+    Paged serving: cache {'k_pool','v_pool'} + paged {'tbl','ctx'} —
+                   chunked prefill (S>1) and decode (S==1) both append at
+                   the request's ctx and attend over its block chain.
     """
     B, S, _ = x.shape
     if rt.cp_axis and rope_ang is not None:
@@ -233,7 +313,9 @@ def attention_block(cfg, p, x, rope_ang, rt: Runtime, cache=None,
     k = rt.c("heads_kv", k)
     v = rt.c("heads_kv", v)
 
-    if cache is None:
+    if paged is not None:
+        out, new_cache = _paged_attention_block(cfg, q, k, v, cache, paged, rt)
+    elif cache is None:
         if rt.cp_axis:
             out = _cp_attend(q, k, v, cfg.sliding_window,
                              q.shape[-1] ** -0.5, rt.cp_axis)

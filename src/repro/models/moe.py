@@ -15,6 +15,7 @@ Two dispatch implementations:
 from __future__ import annotations
 
 import math
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -231,14 +232,28 @@ def apply_moe(cfg, p, x, rt: Runtime):
     if impl == "auto":
         impl = "dense" if B * S * cfg.moe.n_experts <= (1 << 22) else "dropping"
     if impl == "ep":
-        # expert-parallel shard_map dispatch; token counts that cannot
-        # occupy every mesh axis (tiny decode batches) fall back to the
-        # GSPMD dropping path — still correct against the 'expert'-sharded
-        # params, just without the explicit all-to-all
+        # expert-parallel shard_map dispatch.  Token counts that cannot
+        # tile every mesh axis (tiny decode batches) are zero-padded up to
+        # the shard count and still run the real all-to-all — the plan the
+        # planner priced.  Only a genuinely unshardable mesh (experts not
+        # divisible over the axis) falls back to GSPMD dropping, loudly:
+        # a silent fallback serves a different physical program than the
+        # one the strategy ranking chose.
         from repro.core import expert as expert_lib
         if expert_lib.can_shard_tokens(cfg, rt, B * S):
+            expert_lib.DISPATCH_STATS["ep_calls"] += 1
             y, aux = expert_lib.moe_expert_parallel(cfg, p, xf, rt)
+        elif expert_lib.can_pad_tokens(cfg, rt):
+            expert_lib.DISPATCH_STATS["ep_padded_calls"] += 1
+            y, aux = expert_lib.moe_expert_parallel_padded(cfg, p, xf, rt)
         else:
+            expert_lib.DISPATCH_STATS["ep_fallback_calls"] += 1
+            warnings.warn(
+                f"EP dispatch unavailable for {B * S} tokens on this mesh "
+                f"(experts={cfg.moe.n_experts} do not shard over "
+                f"{rt.expert_axis!r}); falling back to GSPMD dropping — "
+                "this is a different physical program than the planned "
+                "expert-parallel dispatch", stacklevel=2)
             impl = "dropping"
     if impl == "ep_manual":
         # already inside a manual shard_map (pipeline stage body): the

@@ -150,7 +150,8 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype, rt: Runtime):
 # layer application
 # ---------------------------------------------------------------------------
 
-def _apply_layer(cfg, sig, lp, h, rope_ang, rt: Runtime, cache=None):
+def _apply_layer(cfg, sig, lp, h, rope_ang, rt: Runtime, cache=None,
+                 paged=None):
     """-> (h, new_cache, aux_loss).
 
     With ``rt.tp_reduce_axis`` set (Megatron-TP inside a manual pipeline
@@ -167,7 +168,7 @@ def _apply_layer(cfg, sig, lp, h, rope_ang, rt: Runtime, cache=None):
     if kind == "attn":
         mix, new_mix_cache = attn_lib.attention_block(
             cfg, lp["mixer"], x, rope_ang, rt,
-            cache=None if cache is None else cache["kv"])
+            cache=None if cache is None else cache["kv"], paged=paged)
         new_cache = None if cache is None else {"kv": new_mix_cache}
     elif kind == "rwkv6":
         mix, new_att = rwkv_lib.rwkv_time_mix(
@@ -258,6 +259,11 @@ def forward(cfg: ModelConfig, params, batch, rt: Runtime,
 
     prefix, start, period, n_blocks = layer_plan(cfg)
     aux_total = jnp.zeros((), jnp.float32)
+    # paged serving state (block table + per-request context lengths) is
+    # shared, read-only, across every layer: it rides next to the per-layer
+    # pools in the cache dict and is closed over by the scan body rather
+    # than threaded through it — the engine advances ctx between steps
+    paged = cache.get("paged") if cache is not None else None
 
     if rt.pipeline_axis and cache is None:
         # GPipe path: the whole layer stack runs under core/pipeline.py's
@@ -277,7 +283,7 @@ def forward(cfg: ModelConfig, params, batch, rt: Runtime,
     for j, i in enumerate(prefix):
         c = None if cache is None else cache["prefix"][j]
         h, nc, aux = _apply_layer(cfg, _sig(cfg, i), params["prefix"][j],
-                                  h, rope_ang, rt, c)
+                                  h, rope_ang, rt, c, paged)
         aux_total += aux
         new_prefix_caches.append(nc)
 
@@ -304,7 +310,7 @@ def forward(cfg: ModelConfig, params, batch, rt: Runtime,
                     # gather) instead of being hoisted over the whole stack.
                     lp = rt.gather_params(lp)
                 h_, nc, a = apply(cfg, sigs[pos], lp, h_,
-                                  rope_ang, rt, caches[pos])
+                                  rope_ang, rt, caches[pos], paged)
                 aux_ += a
                 new_caches.append(nc)
             ys = tuple(new_caches) if cache is not None else None
@@ -326,6 +332,8 @@ def forward(cfg: ModelConfig, params, batch, rt: Runtime,
     new_cache = None
     if cache is not None:
         new_cache = {"prefix": new_prefix_caches, "blocks": new_block_caches or []}
+        if paged is not None:
+            new_cache["paged"] = paged
     return logits, new_cache, aux_total
 
 

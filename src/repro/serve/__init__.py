@@ -1,3 +1,10 @@
 from repro.serve.engine import ServeEngine, make_serve_step, make_prefill
+from repro.serve.paged_cache import (BlockAllocator, PagedCacheError,
+                                     init_paged_cache, init_paged_pools)
+from repro.serve.scheduler import Request, Scheduler
 
-__all__ = ["ServeEngine", "make_serve_step", "make_prefill"]
+__all__ = [
+    "ServeEngine", "make_serve_step", "make_prefill",
+    "BlockAllocator", "PagedCacheError", "init_paged_cache",
+    "init_paged_pools", "Request", "Scheduler",
+]

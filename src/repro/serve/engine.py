@@ -1,4 +1,38 @@
-"""Batched serving engine: prefill + step-wise decode over sharded caches.
+"""Serving engine: paged KV cache, on-device decode loop, continuous batching.
+
+Two execution paths:
+
+  * **paged / continuous** (the production path, single-device attention
+    stacks): requests enter through ``submit`` and are drained by
+    ``run_until_drained``.  Prefill is *chunked* (one chunk per tick) into
+    a shared block pool via per-request block tables
+    (``serve/paged_cache.py``); decode runs as a jitted
+    ``lax.fori_loop`` *segment* of ``steps_per_tick`` tokens — sampling
+    happens inside the loop, so the host dispatches once per segment
+    instead of once per token (the orchestration-overhead term the paper
+    shows dominating when per-step compute shrinks).  The
+    ``serve/scheduler.py`` tick model lets requests join and leave the
+    running batch at segment boundaries.
+  * **static batch** (``generate_static``): the seed's host-dispatched
+    per-token loop over the dense seq_len-sized cache.  Kept as the
+    numerical baseline (paged greedy decode must bit-match it) and for
+    sharded plans / hybrid (RWKV/Mamba) stacks, which keep dense caches.
+
+``generate`` stays the compatibility entry point: it routes through the
+request queue when the paged path applies and falls back to the static
+loop otherwise.
+
+Determinism contract: the token sampled at absolute position ``p`` of
+a request on sampling stream ``s`` (= its request id unless pinned at
+``submit``; ``generate`` pins the batch row index) uses
+``fold_in(fold_in(base_key, s), p)`` — independent
+of batch composition, tick boundaries, and chunk sizes, so a generation
+is reproducible across scheduler layouts given the same ``base_key``.
+``base_key`` is the explicit ``key=`` argument when given; otherwise it
+is derived from ``ServeEngine.seed`` *and a per-call counter* — repeated
+``generate`` calls draw fresh samples instead of silently reusing
+``PRNGKey(0)`` (the seed engine's bug), and reproducibility is opt-in via
+``key=`` or a fresh engine.
 
 ``make_serve_step`` is the function the decode-shape dry-runs lower:
 (params, cache, tokens, pos) -> (logits, cache'), one new token per request
@@ -12,11 +46,18 @@ from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import parallel as par
 from repro.models import transformer as tfm
 from repro.models.layers import Runtime
+from repro.serve.paged_cache import BlockAllocator, init_paged_pools
+from repro.serve.scheduler import Scheduler
+
+# sentinel context for slots that must not write this step: the block
+# lookup lands past every table and the write is dropped
+_INACTIVE_POS = jnp.int32(1 << 30)
 
 
 def make_serve_step(cfg: ModelConfig, rt: Runtime):
@@ -34,26 +75,282 @@ def make_prefill(cfg: ModelConfig, rt: Runtime, max_len: int):
 
 @dataclasses.dataclass
 class ServeEngine:
-    """Greedy/temperature batched generation over the public model API."""
+    """Batched generation over the public model API.
+
+    ``n_slots`` bounds the in-flight batch; ``block_size`` is the paged-
+    cache granularity; ``n_blocks=0`` sizes the pool so every slot can
+    hold ``max_len`` context.  ``prefill_chunk`` / ``steps_per_tick`` set
+    the tick shape (one prefill chunk per prefilling request and one
+    decode segment per tick).
+    """
     cfg: ModelConfig
     params: Any
     rt: Runtime
     max_len: int
     plan: Optional[par.ParallelPlan] = None
+    seed: int = 0
+    n_slots: int = 8
+    block_size: int = 16
+    n_blocks: int = 0
+    prefill_chunk: int = 32
+    steps_per_tick: int = 8
 
     def __post_init__(self):
         self._prefill = jax.jit(make_prefill(self.cfg, self.rt, self.max_len))
         self._step = jax.jit(make_serve_step(self.cfg, self.rt))
+        self._calls = 0
+        cfg = self.cfg
+        self.paged_ok = (
+            self.plan is None and cfg.input_mode == "tokens" and
+            all(cfg.layer_kind(i) == "attn" for i in range(cfg.n_layers)))
+        self._paged_cache = None
+        if self.paged_ok:
+            self._max_blocks = BlockAllocator(1, self.block_size).blocks_for(
+                self.max_len + self.prefill_chunk + 1)
+            if not self.n_blocks:
+                self.n_blocks = self.n_slots * self._max_blocks
+            self._prefill_chunk_fn = jax.jit(self._paged_prefill_chunk)
+            self._segment_fn = jax.jit(self._paged_decode_segment,
+                                       static_argnames=("steps",))
+            self._reset_queue()
+
+    # ------------------------------------------------------------------
+    # request-queue API (paged continuous batching)
+    # ------------------------------------------------------------------
+
+    def _reset_queue(self):
+        self._sched = Scheduler(
+            self.n_slots, BlockAllocator(self.n_blocks, self.block_size),
+            prefill_chunk=self.prefill_chunk,
+            steps_per_tick=self.steps_per_tick)
+        if self._paged_cache is None:
+            self._paged_cache = init_paged_pools(
+                self.cfg, self.n_blocks, self.block_size,
+                self.rt.compute_dtype, self.rt)
+        self._tbl = np.full((self.n_slots, self._max_blocks), -1, np.int32)
+        self._ctx = np.zeros((self.n_slots,), np.int32)
+        self._last = np.zeros((self.n_slots,), np.int32)
+        self._temps = np.zeros((self.n_slots,), np.float32)
+        self._streams = np.zeros((self.n_slots,), np.int32)
+
+    def submit(self, prompt, n_new: int, temperature: float = 0.0,
+               stream: Optional[int] = None) -> int:
+        """Enqueue one request; returns its request id.  ``stream``
+        selects the sampling stream (see module docstring); it defaults
+        to the request id."""
+        if not self.paged_ok:
+            raise RuntimeError(
+                "request-queue serving needs the paged cache path "
+                "(single-device plan, attention-only stack, token inputs); "
+                "use generate()/generate_static() instead")
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.shape[0] + n_new > self.max_len:
+            raise ValueError(
+                f"prompt({prompt.shape[0]}) + n_new({n_new}) exceeds "
+                f"max_len({self.max_len})")
+        return self._sched.submit(prompt, n_new, temperature, stream=stream)
+
+    def _base_key(self, key=None):
+        if key is not None:
+            return key
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), self._calls)
+        self._calls += 1
+        return key
+
+    def _token_key(self, base_key, stream: int, pos: int):
+        return jax.random.fold_in(jax.random.fold_in(base_key, stream), pos)
+
+    def _sample_host(self, base_key, stream, pos, logits, temperature):
+        lg = jnp.asarray(logits, jnp.float32)
+        if temperature > 0:
+            return int(jax.random.categorical(
+                self._token_key(base_key, stream, pos), lg / temperature))
+        return int(jnp.argmax(lg))
+
+    def run_until_drained(self, key=None) -> Dict[int, np.ndarray]:
+        """Tick until every submitted request completed; returns
+        {rid: generated tokens (n_new,)}."""
+        base_key = self._base_key(key)
+        sched = self._sched
+        while sched.has_work():
+            self._tick(base_key)
+        out = {r.rid: np.asarray(r.generated, np.int32)
+               for r in sched.finished.values()}
+        sched.finished.clear()
+        return out
+
+    def _tick(self, base_key):
+        sched = self._sched
+        for req in sched.admit():
+            # lay the reserved block chain into the slot's table row
+            self._tbl[req.slot] = -1
+            self._tbl[req.slot, :len(req.blocks)] = req.blocks
+            self._ctx[req.slot] = 0
+            self._temps[req.slot] = req.temperature
+            self._streams[req.slot] = req.stream
+        for req in sched.prefill_candidates():
+            self._do_prefill_chunk(base_key, req)
+        active = sched.decode_slots()
+        if active:
+            self._do_decode_segment(base_key, active)
+        for req in list(sched.running.values()):
+            if req.prefill_done and req.remaining <= 0:
+                self._tbl[req.slot] = -1
+                sched.complete(req)
+        if (req is None and not active and sched.waiting
+                and not sched.running):
+            raise RuntimeError(
+                "scheduler stalled: waiting requests cannot be admitted "
+                f"(pool of {self.n_blocks} blocks too small?)")
+
+    def _cache_dict(self):
+        return {**self._paged_cache,
+                "paged": {"tbl": jnp.asarray(self._tbl),
+                          "ctx": jnp.asarray(self._ctx)}}
+
+    def _store_pools(self, cache):
+        self._paged_cache = {"prefix": cache["prefix"],
+                             "blocks": cache["blocks"]}
+
+    def _do_prefill_chunk(self, base_key, req):
+        C = self.prefill_chunk
+        start = req.prefilled
+        chunk = req.prompt[start:start + C]
+        real = int(chunk.shape[0])
+        if real < C:
+            chunk = np.pad(chunk, (0, C - real))
+        logits, cache = self._prefill_chunk_fn(
+            self.params, self._cache_dict(), jnp.asarray(chunk[None]),
+            jnp.int32(req.slot), jnp.int32(start))
+        self._store_pools(cache)
+        req.prefilled = start + real
+        self._ctx[req.slot] = req.prefilled
+        if req.prefill_done and req.remaining > 0:
+            # the last real prompt token's logits give the first sampled
+            # token, at absolute position prompt_len
+            tok = self._sample_host(base_key, req.stream, req.prompt_len,
+                                    logits[real - 1], req.temperature)
+            req.generated.append(tok)
+            self._last[req.slot] = tok
+
+    def _do_decode_segment(self, base_key, active):
+        steps = self.steps_per_tick
+        remaining = np.zeros((self.n_slots,), np.int32)
+        for req in active:
+            remaining[req.slot] = req.remaining
+        cache, seg_out = self._segment_fn(
+            self.params, self._cache_dict(), jnp.asarray(self._last),
+            jnp.asarray(remaining), jnp.asarray(self._streams),
+            jnp.asarray(self._temps), base_key, steps=steps)
+        self._store_pools(cache)
+        seg_out = np.asarray(seg_out)
+        for req in active:
+            n = min(req.remaining, steps)
+            toks = seg_out[req.slot, :n]
+            req.generated.extend(int(t) for t in toks)
+            self._ctx[req.slot] += n
+            if n:
+                self._last[req.slot] = int(toks[-1])
+
+    # ------------------------------------------------------------------
+    # jitted paged bodies
+    # ------------------------------------------------------------------
+
+    def _paged_prefill_chunk(self, params, cache, tokens, slot, ctx0):
+        """One prompt chunk (1, C) of one slot through the model, writing
+        its KV into the slot's block chain; returns the chunk logits
+        (C, V) and the updated cache."""
+        paged = cache["paged"]
+        tbl_row = jax.lax.dynamic_slice_in_dim(paged["tbl"], slot, 1, 0)
+        view = {"prefix": cache["prefix"], "blocks": cache["blocks"],
+                "paged": {"tbl": tbl_row, "ctx": ctx0[None]}}
+        batch = {"tokens": tokens, "pos": jnp.reshape(ctx0, (1, 1))}
+        logits, newc, _ = tfm.forward(self.cfg, params, batch, self.rt,
+                                      cache=view)
+        cache = {"prefix": newc["prefix"], "blocks": newc["blocks"],
+                 "paged": paged}
+        return logits[0], cache
+
+    def _paged_decode_segment(self, params, cache, last, remaining,
+                              streams, temps, base_key, *, steps: int):
+        """``steps`` decode iterations entirely on device: forward one
+        token per slot, sample in-loop (greedy where temperature == 0,
+        categorical otherwise, keyed by (stream, position)), advance
+        active slot's context.  Slots with remaining == 0 (empty,
+        each active slot's context.  Slots with remaining == 0 ride
+        along with their writes dropped and outputs masked to 0."""
+        cfg, rt = self.cfg, self.rt
+        paged = cache["paged"]
+        pools = {"prefix": cache["prefix"], "blocks": cache["blocks"]}
+        B = last.shape[0]
+
+        def body(t, carry):
+            pools, ctx, last, remaining, out = carry
+            active = remaining > 0
+            ctx_eff = jnp.where(active, ctx, _INACTIVE_POS)
+            cdict = {**pools, "paged": {"tbl": paged["tbl"], "ctx": ctx_eff}}
+            logits, newc, _ = tfm.forward(
+                cfg, params, {"tokens": last[:, None], "pos": ctx_eff[:, None]},
+                rt, cache=cdict)
+            lg = logits[:, 0].astype(jnp.float32)
+            pos_new = ctx + 1
+            keys = jax.vmap(functools.partial(self._token_key, base_key))(
+                streams, pos_new)
+            sampled = jax.vmap(
+                lambda k, l, T: jax.random.categorical(
+                    k, l / jnp.maximum(T, 1e-6)))(keys, lg, temps)
+            greedy = jnp.argmax(lg, axis=-1)
+            nxt = jnp.where(temps > 0, sampled, greedy).astype(jnp.int32)
+            nxt = jnp.where(active, nxt, 0)
+            out = out.at[:, t].set(nxt)
+            last = jnp.where(active, nxt, last)
+            ctx = ctx + active.astype(jnp.int32)
+            remaining = remaining - active.astype(jnp.int32)
+            pools = {"prefix": newc["prefix"], "blocks": newc["blocks"]}
+            return pools, ctx, last, remaining, out
+
+        out0 = jnp.zeros((B, steps), jnp.int32)
+        pools, ctx, last, remaining, out = jax.lax.fori_loop(
+            0, steps, body, (pools, paged["ctx"], last, remaining, out0))
+        cache = {**pools, "paged": {"tbl": paged["tbl"], "ctx": ctx}}
+        return cache, out
+
+    # ------------------------------------------------------------------
+    # batch entry points
+    # ------------------------------------------------------------------
 
     def generate(self, prompts: jnp.ndarray, n_new: int,
                  temperature: float = 0.0, key=None) -> jnp.ndarray:
-        """prompts: (B, S0) int32 -> (B, S0 + n_new)."""
+        """prompts: (B, S0) int32 -> (B, S0 + n_new).
+
+        Routes through the paged continuous-batching queue when it
+        applies (see module docstring); falls back to the static dense-
+        cache loop for sharded plans and hybrid stacks.
+        """
+        B, S0 = prompts.shape
+        assert S0 + n_new <= self.max_len
+        if not self.paged_ok:
+            return self.generate_static(prompts, n_new, temperature, key)
+        prompts_np = np.asarray(prompts, np.int32)
+        # stream = row index: the same (prompts, key) pair reproduces
+        # the same tokens regardless of prior engine traffic
+        rids = [self.submit(prompts_np[i], n_new, temperature, stream=i)
+                for i in range(B)]
+        done = self.run_until_drained(key=key)
+        new = np.stack([done[r] for r in rids])
+        return jnp.concatenate([jnp.asarray(prompts_np),
+                                jnp.asarray(new)], axis=1)
+
+    def generate_static(self, prompts: jnp.ndarray, n_new: int,
+                        temperature: float = 0.0, key=None) -> jnp.ndarray:
+        """The seed engine: whole batch prefilled together into dense
+        caches, one host-dispatched jitted step per token."""
         B, S0 = prompts.shape
         assert S0 + n_new <= self.max_len
         logits, cache = self._prefill(self.params, {"tokens": prompts})
         out = [prompts]
         last = logits[:, -1]
-        key = key if key is not None else jax.random.PRNGKey(0)
+        key = self._base_key(key)
         for t in range(n_new):
             if temperature > 0:
                 key, sub = jax.random.split(key)

@@ -1,0 +1,145 @@
+"""Continuous-batching scheduler: admission, chunked prefill, completion.
+
+The engine runs in *ticks*.  Each tick the scheduler:
+
+  1. **admits** waiting requests FIFO into free batch slots, reserving
+     their full block footprint (padded prompt + new tokens + one step of
+     headroom) up front — all-or-nothing reservation means a running
+     request can never fail an allocation mid-flight, and strict FIFO
+     admission (the head of the queue blocks the tail) means no request
+     starves behind later, smaller ones;
+  2. advances every admitted request with prompt tokens left by one
+     **prefill chunk** (oldest first), so long prompts never monopolize
+     a tick yet same-age requests enter decode together instead of
+     trickling in one tick apart behind full-cost decode segments; and
+  3. reports the set of **decode-active** slots for the engine's
+     on-device decode segment.
+
+Completion (token budget exhausted) returns the request's blocks to the
+:class:`~repro.serve.paged_cache.BlockAllocator` and frees its slot, so
+the next waiting request joins the running batch on the following tick.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.serve.paged_cache import BlockAllocator
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request and its in-flight state."""
+    rid: int
+    prompt: np.ndarray                  # (S0,) int32
+    n_new: int
+    temperature: float = 0.0
+    # sampling-stream id: the PRNG key for the token at position p is
+    # fold_in(fold_in(base_key, stream), p).  Defaults to rid (every
+    # request draws an independent stream); callers wanting reproducible
+    # batches across engine lifetimes pin it explicitly.
+    stream: int = -1
+    # scheduler-owned runtime state
+    slot: int = -1                      # batch slot (-1 = not admitted)
+    blocks: List[int] = dataclasses.field(default_factory=list)
+    prefilled: int = 0                  # prompt tokens written so far
+    generated: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def prefill_done(self) -> bool:
+        return self.prefilled >= self.prompt_len
+
+    @property
+    def remaining(self) -> int:
+        return self.n_new - len(self.generated)
+
+
+class Scheduler:
+    def __init__(self, n_slots: int, allocator: BlockAllocator,
+                 prefill_chunk: int = 32, steps_per_tick: int = 8):
+        self.n_slots = n_slots
+        self.alloc = allocator
+        self.prefill_chunk = prefill_chunk
+        self.steps_per_tick = steps_per_tick
+        self.waiting: List[Request] = []
+        self.running: Dict[int, Request] = {}       # slot -> request
+        self.finished: Dict[int, Request] = {}      # rid -> request
+        self._next_rid = 0
+
+    # -- submission / bookkeeping -------------------------------------------
+
+    def submit(self, prompt: np.ndarray, n_new: int,
+               temperature: float = 0.0, stream: Optional[int] = None) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self.waiting.append(Request(rid, np.asarray(prompt, np.int32),
+                                    n_new, temperature,
+                                    stream=rid if stream is None else stream))
+        return rid
+
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)
+
+    def _footprint(self, req: Request) -> int:
+        """Blocks reserved at admission: the prompt padded to a whole
+        number of prefill chunks (pad tokens of the last chunk write
+        beyond the real prompt before being overwritten), the new tokens,
+        and one decode step of headroom (an inactive slot in a running
+        segment writes one sentinel position past its budget)."""
+        chunks = -(-req.prompt_len // self.prefill_chunk)
+        return self.alloc.blocks_for(
+            chunks * self.prefill_chunk + req.n_new + 1)
+
+    def admit(self) -> List[Request]:
+        """FIFO admission into free slots; head-of-line blocking on
+        purpose (skipping the head to admit a smaller later request is
+        what starves big requests)."""
+        admitted = []
+        free = sorted(set(range(self.n_slots)) - set(self.running))
+        while self.waiting and free:
+            req = self.waiting[0]
+            blocks = self.alloc.allocate(self._footprint(req))
+            if blocks is None:
+                break
+            req.blocks = blocks
+            req.slot = free.pop(0)
+            self.running[req.slot] = req
+            admitted.append(self.waiting.pop(0))
+        return admitted
+
+    # -- per-tick work selection --------------------------------------------
+
+    def prefill_candidates(self) -> List[Request]:
+        """Admitted requests with prompt tokens still to write, oldest
+        first.  The engine feeds each one chunk per tick: a single long
+        prompt still spreads over many ticks (bounded per-tick stall),
+        but concurrent prompts prefill in the same tick rather than
+        serializing one request per tick."""
+        cands = [r for r in self.running.values() if not r.prefill_done]
+        return sorted(cands, key=lambda r: r.rid)
+
+    def next_prefill(self) -> Optional[Request]:
+        """Oldest admitted request with prompt tokens still to write."""
+        cands = self.prefill_candidates()
+        return cands[0] if cands else None
+
+    def decode_slots(self) -> List[Request]:
+        return [r for r in self.running.values()
+                if r.prefill_done and r.remaining > 0]
+
+    def complete(self, req: Request) -> None:
+        """Token budget exhausted: free blocks and slot."""
+        assert req.slot in self.running and self.running[req.slot] is req
+        del self.running[req.slot]
+        self.alloc.free(req.blocks)
+        req.blocks = []
+        req.slot = -1
+        req.done = True
+        self.finished[req.rid] = req

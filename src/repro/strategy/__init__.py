@@ -11,14 +11,15 @@
 from repro.strategy.descriptor import (DP_MODES, Strategy, StrategyError,
                                        format_spec, parse)
 from repro.strategy.planner import (OBJECTIVES, PlannedStrategy, best,
-                                    candidates, evaluate, pareto_front,
-                                    resolve, search)
+                                    candidates, default_objective, evaluate,
+                                    pareto_front, resolve, search)
 from repro.strategy.topology import (Topology, build_mesh, get_topology,
                                      host_topology, pod_topology)
 
 __all__ = [
     "DP_MODES", "OBJECTIVES", "PlannedStrategy", "Strategy", "StrategyError",
-    "Topology", "best", "build_mesh", "candidates", "evaluate", "format_spec",
+    "Topology", "best", "build_mesh", "candidates", "default_objective",
+    "evaluate", "format_spec",
     "get_topology", "host_topology", "parse", "pareto_front", "pod_topology",
     "resolve", "search",
 ]

@@ -9,9 +9,16 @@ calibrated analytic model (``costmodel.step_time``), and returns ranked
 / ``best_strategy`` pair (now deleted) and — unlike them — sweeps
 context-parallel and expert-parallel degrees.
 
-Objectives: 'wps' (tokens/s, default), 'mfu', 'tokens_per_joule',
-'memory' (min bytes/device).  ``pareto_front`` keeps the strategies that
-are not dominated on a set of objectives (e.g. throughput vs energy).
+Objectives: 'wps' (tokens/s, the train/prefill default), 'mfu',
+'tokens_per_joule', 'memory' (min bytes/device), and the decode-mode
+latency percentiles 'p50_latency' / 'p99_latency' (min s/token; priced by
+``costmodel.decode_step_time``, which ``evaluate`` routes decode shapes
+through).  When no objective is named, ``search``/``resolve`` pick
+'p50_latency' for ``shape.mode == "decode"`` and 'wps' otherwise — a
+serving planner that ranks by training throughput would happily trade
+per-token latency for batch efficiency the serving path cannot use.
+``pareto_front`` keeps the strategies that are not dominated on a set of
+objectives (e.g. throughput vs energy).
 """
 from __future__ import annotations
 
@@ -30,7 +37,16 @@ OBJECTIVES: Dict[str, Callable[[cm.StepReport], float]] = {
     "mfu": lambda r: r.mfu,
     "tokens_per_joule": lambda r: r.tokens_per_joule,
     "memory": lambda r: -r.memory_per_device,
+    # latency percentiles only exist on decode-mode reports (0.0
+    # elsewhere -> score -inf, so a latency objective never ranks a
+    # train/prefill pricing)
+    "p50_latency": lambda r: -(r.latency_p50 or float("inf")),
+    "p99_latency": lambda r: -(r.latency_p99 or float("inf")),
 }
+
+
+def default_objective(shape: ShapeConfig) -> str:
+    return "p50_latency" if shape.mode == "decode" else "wps"
 
 
 @dataclasses.dataclass
@@ -54,8 +70,18 @@ class PlannedStrategy:
 def evaluate(cfg: ModelConfig, strategy: Strategy, topology: Topology,
              shape: ShapeConfig, train: Optional[bool] = None,
              remat: bool = False) -> cm.StepReport:
-    """Price one strategy on one topology with the analytic model."""
+    """Price one strategy on one topology with the analytic model.
+
+    Decode shapes route to ``costmodel.decode_step_time`` (per-token
+    latency roofline + latency percentiles); train/prefill shapes to
+    ``costmodel.step_time``.  An explicit ``train=`` override forces the
+    step-time model either way.
+    """
     cost = strategy.to_cost_strategy(cfg, topology)
+    if shape.mode == "decode" and train is None:
+        return cm.decode_step_time(cfg, topology.hw, cost,
+                                   shape.global_batch, shape.seq_len,
+                                   hbm_capacity=topology.hbm)
     return cm.step_time(cfg, topology.hw, cost, shape.global_batch,
                         shape.seq_len, hbm_capacity=topology.hbm,
                         train=shape.mode == "train" if train is None
@@ -132,7 +158,7 @@ def candidates(topology: Topology, global_batch: int,
 
 
 def search(cfg: ModelConfig, topology: Topology, shape: ShapeConfig,
-           objective: str = "wps", require_fits: bool = True,
+           objective: Optional[str] = None, require_fits: bool = True,
            require_lowerable: bool = True,
            dp_modes: Sequence[str] = ("hsdp",),
            tps: Iterable[int] = (1, 2, 4, 8, 16),
@@ -145,12 +171,16 @@ def search(cfg: ModelConfig, topology: Topology, shape: ShapeConfig,
            top: Optional[int] = None) -> List[PlannedStrategy]:
     """Rank executable strategies for (model, topology, shape).
 
-    Returns PlannedStrategy records sorted by ``objective`` (best first).
-    ``require_lowerable`` keeps only descriptors whose ``to_plan``
-    succeeds on the topology; ``require_fits`` keeps only strategies whose
-    predicted memory fits per-chip HBM — if none fit, the non-fitting
-    ranking is returned anyway (callers can see *why* via .report.fits).
+    Returns PlannedStrategy records sorted by ``objective`` (best first;
+    ``None`` -> mode default: 'p50_latency' for decode shapes, 'wps'
+    otherwise).  ``require_lowerable`` keeps only descriptors whose
+    ``to_plan`` succeeds on the topology; ``require_fits`` keeps only
+    strategies whose predicted memory fits per-chip HBM — if none fit,
+    the non-fitting ranking is returned anyway (callers can see *why* via
+    .report.fits).
     """
+    if objective is None:
+        objective = default_objective(shape)
     if objective not in OBJECTIVES:
         raise StrategyError(
             f"objective {objective!r} not in {sorted(OBJECTIVES)}")
@@ -199,7 +229,7 @@ def pareto_front(planned: Sequence[PlannedStrategy],
 
 
 def resolve(spec: str, cfg: ModelConfig, topology: Topology,
-            shape: ShapeConfig, objective: str = "wps",
+            shape: ShapeConfig, objective: Optional[str] = None,
             **search_kw) -> Tuple[Strategy, Optional[PlannedStrategy]]:
     """CLI entry: '--strategy auto' plans, anything else parses.
 

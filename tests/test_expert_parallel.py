@@ -128,10 +128,13 @@ def test_ep_lowers_to_all_to_all(eight_devices):
     assert "all-to-all" in txt
 
 
-def test_ep_decode_falls_back_and_serves(eight_devices):
-    """Decode batches too small to occupy every mesh axis fall back to the
-    GSPMD dropping path against the same expert-sharded params (EP for
-    decode serving is an open ROADMAP item)."""
+def test_ep_decode_pads_and_serves(eight_devices):
+    """Decode batches too small to tile every mesh axis are zero-padded
+    up to the shard count and still run the genuine EP all-to-all (the
+    old silent fallback to GSPMD dropping served a different physical
+    program than the planned one).  Numerics must match the dense oracle:
+    pad rows lose every capacity race to real tokens."""
+    from repro.core import expert as expert_lib
     cfg = _tiny_moe_cfg()
     shape = ShapeConfig("d", 64, 4, "decode")
     topo = strategy_lib.host_topology()
@@ -139,6 +142,8 @@ def test_ep_decode_falls_back_and_serves(eight_devices):
     rt_s = par.make_runtime(cfg, plan, shape, param_dtype=jnp.float32,
                             compute_dtype=jnp.float32, remat=False)
     assert rt_s.moe_impl == "ep"      # derived from the plan, not hardcoded
+    assert expert_lib.can_pad_tokens(cfg, rt_s)
+    stats0 = expert_lib.dispatch_stats_snapshot()
     rt0 = Runtime(moe_impl="dense")
 
     key = jax.random.PRNGKey(1)
@@ -160,6 +165,9 @@ def test_ep_decode_falls_back_and_serves(eight_devices):
                 params_s, cache_s, tokens[:, S0:], jnp.asarray(S0, jnp.int32))
     err = float(jnp.max(jnp.abs(logits0 - jax.device_get(logits_s))))
     assert err < TOL, err
+    stats1 = expert_lib.dispatch_stats_snapshot()
+    assert stats1["ep_padded_calls"] > stats0["ep_padded_calls"]
+    assert stats1["ep_fallback_calls"] == stats0["ep_fallback_calls"]
 
 
 def test_train_cli_ep_smoke(eight_devices):

@@ -506,6 +506,107 @@ def _serve_sweep(out_path: str = "results/benchmarks/BENCH_serve.json",
     return summary
 
 
+def _goodput_sweep(out_path: str = "results/benchmarks/BENCH_goodput.json",
+                   n_devices=(256, 512, 1024, 2048, 4096, 8192),
+                   mtbfs=(0.0, 1.8e8, 3e6, 1e6)):
+    """Failure-aware diminishing returns -> BENCH_goodput.json (CI artifact).
+
+    Two halves:
+
+    * **analytic**: effective tokens/s vs device count for llama2-7b on
+      H100 islands, with and without failures at swept per-device MTBFs
+      (0.0 = no failures).  At each point the planner picks its best
+      strategy under both 'wps' and 'effective_wps' over the
+      {hsdp, fsdp} dp-mode sweep — where the picks differ, the goodput
+      objective changed the sharding decision (few checkpoint writers
+      vs many), the paper's diminishing-returns curve bending further
+      down once failures are priced.
+    * **measured**: per-step checkpoint stall of the sync writer vs the
+      AsyncCheckpointer (snapshot-only stall) for a real train state on
+      the host devices — the number that justifies ``--async_ckpt``.
+    """
+    import dataclasses as _dc
+    import shutil
+    import tempfile
+
+    from repro.launch.devices import force_host_device_count
+    force_host_device_count(8)
+    import jax
+    from repro import strategy as strategy_lib
+    from repro.configs import ShapeConfig, get_config
+    from repro.core import costmodel as cm
+
+    cfg = get_config("llama2-7b")
+    shape = ShapeConfig("goodput-sweep", 4096, 1024, "train")
+    modes = ("hsdp", "fsdp")
+    rows, summary = [], []
+    n_flips = 0
+    for mtbf in mtbfs:
+        for n in n_devices:
+            hw = cm.HARDWARE["H100"]
+            if mtbf:
+                hw = _dc.replace(hw, mtbf=mtbf)
+            topo = strategy_lib.Topology("goodput", n, hw.island,
+                                         hardware="H100", hbm=80e9,
+                                         hw_obj=hw if mtbf else None)
+            a = strategy_lib.best(cfg, topo, shape, objective="wps",
+                                  dp_modes=modes)
+            b = strategy_lib.best(cfg, topo, shape,
+                                  objective="effective_wps", dp_modes=modes)
+            if a is None or b is None:
+                continue
+            r = b.report
+            eff = r.wps * (r.goodput_frac if mtbf else 1.0)
+            flip = a.spec != b.spec
+            n_flips += flip
+            rows.append({
+                "mtbf_device_s": mtbf or None,   # None = failure-free
+                "n_devices": n,
+                "wps_pick": a.spec, "effective_pick": b.spec,
+                "objectives_disagree": flip,
+                "wps": a.report.wps,
+                "effective_wps": eff,
+                "goodput": r.goodput_frac if mtbf else 1.0,
+                "t_ckpt_s": r.t_ckpt,
+                "young_daly_interval_s": r.ckpt_interval,
+                "distinct_writers": cm.distinct_writers(
+                    b.strategy.to_cost_strategy(cfg, topo)),
+            })
+    # measured: sync full-write stall vs async snapshot-only stall
+    from repro import checkpointing as ckpt_lib
+    key = jax.random.PRNGKey(0)
+    state = {"params": {f"w{i}": jax.random.normal(
+        jax.random.fold_in(key, i), (256, 256)) for i in range(8)}}
+    tmp = tempfile.mkdtemp(prefix="goodput-bench-")
+    try:
+        t0 = time.perf_counter()
+        ckpt_lib.save_checkpoint(os.path.join(tmp, "sync"), 1, state)
+        t_sync = time.perf_counter() - t0
+        with ckpt_lib.AsyncCheckpointer(os.path.join(tmp, "async")) as ck:
+            t_async = ck.save(1, state)
+            ck.wait()
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+    measured = {
+        "state_bytes": int(sum(a.size * a.dtype.itemsize for a in
+                               jax.tree.leaves(state))),
+        "sync_save_stall_s": round(t_sync, 5),
+        "async_save_stall_s": round(t_async, 5),
+        "async_stall_fraction": round(t_async / max(t_sync, 1e-9), 4),
+    }
+    _write_bench(out_path, {
+        "backend": jax.default_backend(), "arch": cfg.name,
+        "shape": {"seq_len": shape.seq_len,
+                  "global_batch": shape.global_batch},
+        "hardware": "H100", "dp_modes": list(modes),
+        "objective_flips": n_flips,
+        "rows": rows, "checkpoint_stall": measured}, len(rows))
+    summary.append(("goodput_sweep_flips", float(n_flips),
+                    f"{len(rows)}pts_async_stall"
+                    f"{measured['async_stall_fraction']:.3f}x_sync"))
+    return summary
+
+
 def _strategy_benchmark(spec: str, hw_name: str, gpus: int, global_batch: int,
                         seq_len: int):
     """Price one spec (or the planner's 'auto' pick) via the unified API."""
@@ -564,6 +665,16 @@ def main() -> None:
                          "dispatch comparison) and write BENCH_serve.json")
     ap.add_argument("--serve_json",
                     default="results/benchmarks/BENCH_serve.json")
+    ap.add_argument("--goodput-sweep", dest="goodput_sweep",
+                    action="store_true",
+                    help="only run the failure-aware goodput sweep "
+                         "(analytic effective tokens/s vs device count "
+                         "w/wo failures at swept MTBFs, planner picks "
+                         "under wps vs effective_wps, and the measured "
+                         "async-vs-sync checkpoint stall) and write "
+                         "BENCH_goodput.json")
+    ap.add_argument("--goodput_json",
+                    default="results/benchmarks/BENCH_goodput.json")
     args = ap.parse_args()
 
     if args.micro_kernels:
@@ -589,6 +700,13 @@ def main() -> None:
 
     if args.serve_sweep:
         rows = _serve_sweep(args.serve_json)
+        print("name,us_per_call,derived")
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},{derived}")
+        return
+
+    if args.goodput_sweep:
+        rows = _goodput_sweep(args.goodput_json)
         print("name,us_per_call,derived")
         for name, us, derived in rows:
             print(f"{name},{us:.1f},{derived}")

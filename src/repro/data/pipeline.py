@@ -59,19 +59,38 @@ class BinTokenSource:
 
 @dataclasses.dataclass
 class Batcher:
+    """Fixed-length batch packer with a restorable stream position.
+
+    ``start_batch`` is the data-pipeline position: iteration replays the
+    source stream from the beginning (sources are deterministic given
+    their construction args) and discards that many packed batches before
+    yielding — so a resumed training run sees exactly the batches an
+    uninterrupted run would have seen from that step.  The checkpoint
+    ``meta`` records the position as ``batches_consumed``; ``at(n)``
+    builds the repositioned batcher.
+    """
     source: object
     seq_len: int
     global_batch: int
     sharding: Optional[jax.sharding.NamedSharding] = None
+    start_batch: int = 0
+
+    def at(self, position: int) -> "Batcher":
+        """This batcher repositioned to ``position`` packed batches in."""
+        return dataclasses.replace(self, start_batch=position)
 
     def __iter__(self):
         buf = np.empty((0,), np.int64)
         stream = self.source.stream()
         need = self.global_batch * (self.seq_len + 1)
+        position = 0
         while True:
             while len(buf) < need:
                 buf = np.concatenate([buf, next(stream).astype(np.int64)])
             flat, buf = buf[:need], buf[need:]
+            position += 1
+            if position <= self.start_batch:
+                continue
             grid = flat.reshape(self.global_batch, self.seq_len + 1)
             tokens = grid[:, :-1].astype(np.int32)
             labels = grid[:, 1:].astype(np.int32)

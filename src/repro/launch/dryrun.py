@@ -267,6 +267,30 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
                              if not callable(v)},
             "donate": donate,
         }
+        # resilience prediction: what the goodput model says failures cost
+        # this exact (strategy, topology) point — system MTBF, the
+        # strategy-aware checkpoint write time (distinct-writer
+        # parallelism), the Young/Daly interval, and the effective
+        # throughput fraction left after checkpoint stalls + lost work +
+        # restarts
+        from repro.core import costmodel as cm
+        topo_res = _topology(topology, multi_pod)
+        cost_strat = strat.to_cost_strategy(cfg, topo_res)
+        hw = topo_res.hw
+        t_ck = cm.checkpoint_write_time(cfg, hw, cost_strat)
+        mtbf_sys = cm.system_mtbf(hw, cost_strat.n_devices)
+        g = cm.goodput(t_ck, mtbf_sys,
+                       t_restart=cm.restart_time(cfg, hw, cost_strat))
+        rec["resilience"] = {
+            "mtbf_device_s": hw.mtbf,
+            "mtbf_system_s": round(mtbf_sys, 1),
+            "ckpt_bytes": cm.checkpoint_bytes(cfg),
+            "distinct_writers": cm.distinct_writers(cost_strat),
+            "t_ckpt_s": round(t_ck, 4),
+            "young_daly_interval_s": round(
+                cm.young_daly_interval(t_ck, mtbf_sys), 1),
+            "goodput": round(g, 5),
+        }
         if cfg.moe.n_experts:
             # which EP entry this lowering's apply_moe calls actually took
             # (trace-time deltas): 'ep_padded_calls' means small token

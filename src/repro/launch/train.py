@@ -84,6 +84,21 @@ def main():
                     help="attention/norm impl: 'pallas' runs the fwd+bwd "
                          "Pallas kernels (interpret mode off-TPU)")
     ap.add_argument("--seed", type=int, default=0)
+    # resilience: supervised restarts, fault injection, async checkpointing
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the newest valid checkpoint in ckpt_dir")
+    ap.add_argument("--async_ckpt", action="store_true",
+                    help="snapshot on-thread, write checkpoints in background")
+    ap.add_argument("--ckpt_keep", type=int, default=0,
+                    help="gc all but the newest N checkpoints (0 = keep all)")
+    ap.add_argument("--max_restarts", type=int, default=0,
+                    help="supervise the run: restart up to N times on "
+                         "failure, restoring from the latest valid ckpt")
+    ap.add_argument("--fault_plan", default="",
+                    help="inject faults: 'crash@<step>[,..]' or a FaultPlan "
+                         "JSON path")
+    ap.add_argument("--event_log", default="",
+                    help="write the supervisor's structured event log here")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -112,11 +127,14 @@ def main():
                           attn_min_chunked_len=max(2048, args.seq_len + 1)
                           if args.seq_len <= 2048 else 2048)
 
-    if args.data == "synthetic":
-        src = SyntheticSource(cfg.vocab_size, seed=args.seed)
-    else:
-        src = BinTokenSource(args.data)
-    batches = Batcher(src, args.seq_len, args.global_batch)
+    def make_batches():
+        # fresh per attempt: sources are stateful; a resumed attempt
+        # replays the stream and skips to the restored position
+        if args.data == "synthetic":
+            src = SyntheticSource(cfg.vocab_size, seed=args.seed)
+        else:
+            src = BinTokenSource(args.data)
+        return Batcher(src, args.seq_len, args.global_batch)
 
     grad_accum = args.grad_accum or strat.grad_accum
     tc = TrainConfig(steps=args.steps, warmup=max(args.steps // 20, 1),
@@ -124,9 +142,39 @@ def main():
                      ckpt_dir=args.ckpt_dir or os.path.join("results", "ckpt",
                                                             cfg.name),
                      grad_accum=grad_accum,
-                     opt=AdamWConfig(lr=args.lr))
-    params, opt_state, history = train_loop(
-        cfg, plan, rt, tc, batches, key=jax.random.PRNGKey(args.seed))
+                     opt=AdamWConfig(lr=args.lr),
+                     ckpt_async=args.async_ckpt, ckpt_keep=args.ckpt_keep,
+                     resume=args.resume)
+
+    fault_plan = None
+    if args.fault_plan:
+        from repro.resilience import load_fault_plan
+        fault_plan = load_fault_plan(args.fault_plan)
+
+    if args.max_restarts > 0:
+        from repro.resilience.supervisor import (SupervisorConfig,
+                                                 supervise_training)
+        rt_overrides = dict(
+            param_dtype=jnp.float32, compute_dtype=jnp.float32,
+            remat=False, rwkv_chunk=32, mamba_chunk=64,
+            attn_impl=args.kernels, norm_impl=args.kernels,
+            attn_min_chunked_len=max(2048, args.seq_len + 1)
+            if args.seq_len <= 2048 else 2048)
+        params, opt_state, history, sup = supervise_training(
+            cfg, strat, topo, shape, tc, make_batches,
+            rt_overrides=rt_overrides, key=jax.random.PRNGKey(args.seed),
+            fault_plan=fault_plan,
+            sup_cfg=SupervisorConfig(max_restarts=args.max_restarts,
+                                     event_log_path=args.event_log))
+        n_failures = sum(e["kind"] == "failure" for e in sup.events)
+        if n_failures:
+            print(f"[supervisor] recovered from {n_failures} failure(s)"
+                  + (f"; event log: {args.event_log}" if args.event_log
+                     else ""))
+    else:
+        params, opt_state, history = train_loop(
+            cfg, plan, rt, tc, make_batches(),
+            key=jax.random.PRNGKey(args.seed), fault_plan=fault_plan)
     losses = [h["loss"] for h in history]
     print(f"done: loss {losses[0]:.4f} -> {losses[-1]:.4f} "
           f"over {args.steps} steps")

@@ -1,0 +1,9 @@
+from repro.resilience.faults import (FaultEvent, FaultPlan, SimulatedFailure,
+                                     load_fault_plan)
+from repro.resilience.supervisor import (RestartBudgetExceeded, Supervisor,
+                                         SupervisorConfig)
+
+__all__ = [
+    "FaultEvent", "FaultPlan", "SimulatedFailure", "load_fault_plan",
+    "RestartBudgetExceeded", "Supervisor", "SupervisorConfig",
+]

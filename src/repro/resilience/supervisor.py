@@ -1,0 +1,210 @@
+"""Elastic restart supervisor: retry, restore, re-plan, record.
+
+The supervisor owns the outermost loop of a fault-tolerant run.  One
+*attempt* is a full ``train_loop`` invocation (with ``tc.resume=True`` so
+each attempt restores from the newest CRC-valid checkpoint); the
+supervisor catches :class:`~repro.resilience.faults.SimulatedFailure`
+(and real exceptions), applies exponential backoff under a max-restart
+budget, optionally **re-plans the strategy for a degraded device count**
+(a crash reporting lost devices shrinks the topology and asks the
+planner for the best strategy that still lowers — the data/fsdp axis
+absorbs the loss), and records a structured event log (failures,
+restarts, lost steps, recovery wall time) that the dryrun/benchmark
+artifacts fold in.
+
+The supervisor is deliberately generic over the attempt body: ``run``
+drives any ``attempt_fn(attempt, strategy, topology) -> result``, so
+tests can exercise backoff/budget/fallback logic without a real model,
+and :func:`supervise_training` provides the production wiring used by
+``launch/train.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.resilience.faults import SimulatedFailure
+
+
+class RestartBudgetExceeded(RuntimeError):
+    """More failures than ``max_restarts`` allows; the last cause chains."""
+
+
+@dataclasses.dataclass
+class SupervisorConfig:
+    max_restarts: int = 3
+    backoff_base_s: float = 0.05      # first restart waits this long
+    backoff_factor: float = 2.0       # then base * factor**n, capped
+    backoff_max_s: float = 5.0
+    replan_on_degrade: bool = True    # lost devices -> planner re-pick
+    event_log_path: str = ""          # write the structured log here
+
+
+class Supervisor:
+    """Retry loop with backoff, checkpoint fallback, and elastic re-plan."""
+
+    def __init__(self, config: SupervisorConfig, ckpt_dir: str = ""):
+        self.config = config
+        self.ckpt_dir = ckpt_dir
+        self.events: List[Dict[str, Any]] = []
+
+    # ---- bookkeeping -------------------------------------------------------
+
+    def _record(self, **kw) -> Dict[str, Any]:
+        event = {"t": time.time(), **kw}
+        self.events.append(event)
+        return event
+
+    def backoff_s(self, n_restarts: int) -> float:
+        c = self.config
+        return min(c.backoff_base_s * c.backoff_factor ** n_restarts,
+                   c.backoff_max_s)
+
+    def restore_step(self) -> Optional[int]:
+        """Newest CRC-valid checkpoint step (corrupt/partial skipped)."""
+        if not self.ckpt_dir:
+            return None
+        from repro import checkpointing as ckpt_lib
+        return ckpt_lib.latest_valid_step(self.ckpt_dir, verify=True)
+
+    def write_event_log(self) -> Optional[str]:
+        path = self.config.event_log_path
+        if not path:
+            return None
+        out_dir = os.path.dirname(path)
+        if out_dir:
+            os.makedirs(out_dir, exist_ok=True)
+        failures = [e for e in self.events if e.get("kind") == "failure"]
+        with open(path, "w") as f:
+            json.dump({
+                "n_failures": len(failures),
+                "total_lost_steps": sum(e.get("lost_steps") or 0
+                                        for e in failures),
+                "total_recovery_s": sum(e.get("recovery_wall_s") or 0.0
+                                        for e in failures),
+                "events": self.events}, f, indent=1)
+        return path
+
+    # ---- elastic re-plan ---------------------------------------------------
+
+    def degrade(self, cfg, strategy, topology, shape, lost_devices: int):
+        """Shrink the topology by the lost devices and re-plan.
+
+        The surviving count is rounded down to a multiple of the current
+        model-parallel footprint (the data/fsdp axis is what shrinks —
+        the model axes must stay whole), then the planner picks the best
+        strategy that still lowers there.  Returns (strategy, topology);
+        falls back to the current pair when nothing viable survives.
+        """
+        from repro.strategy import best
+        n = topology.n_devices - lost_devices
+        mp = strategy.model_parallel
+        n -= n % mp
+        if n < mp:
+            return strategy, topology
+        topo2 = dataclasses.replace(topology, name=topology.name + "-deg",
+                                    n_devices=n,
+                                    island=min(topology.island, n))
+        planned = best(cfg, topo2, shape)
+        if planned is None:
+            return strategy, topology
+        return planned.strategy, topo2
+
+    # ---- driver ------------------------------------------------------------
+
+    def run(self, attempt_fn: Callable[[int, Any, Any], Any],
+            strategy: Any = None, topology: Any = None,
+            cfg: Any = None, shape: Any = None) -> Any:
+        """Drive ``attempt_fn`` to completion under the restart budget.
+
+        ``attempt_fn(attempt, strategy, topology)`` runs one attempt; the
+        strategy/topology pair evolves across attempts when a failure
+        reports lost devices and re-planning is on.  Raises
+        :class:`RestartBudgetExceeded` (chaining the last cause) once
+        ``max_restarts`` restarts are spent.
+        """
+        n_restarts = 0
+        while True:
+            t_start = time.time()
+            try:
+                result = attempt_fn(n_restarts, strategy, topology)
+                self._record(kind="completed", attempt=n_restarts,
+                             n_restarts=n_restarts)
+                self.write_event_log()
+                return result
+            except (SimulatedFailure, Exception) as e:  # noqa: BLE001
+                t_fail = time.time()
+                step_failed = getattr(e, "step", None)
+                lost = getattr(e, "lost_devices", 0)
+                restore = self.restore_step()
+                event = self._record(
+                    kind="failure", attempt=n_restarts,
+                    error=repr(e),
+                    simulated=isinstance(e, SimulatedFailure),
+                    step_failed=step_failed,
+                    restore_step=restore,
+                    lost_steps=(step_failed - (restore or 0)
+                                if step_failed is not None else None),
+                    lost_devices=lost,
+                    run_wall_s=round(t_fail - t_start, 4))
+                if n_restarts >= self.config.max_restarts:
+                    event["budget_exhausted"] = True
+                    self.write_event_log()
+                    raise RestartBudgetExceeded(
+                        f"{n_restarts + 1} failures exceed "
+                        f"max_restarts={self.config.max_restarts} "
+                        f"(last: {e!r})") from e
+                backoff = self.backoff_s(n_restarts)
+                event["backoff_s"] = backoff
+                if backoff:
+                    time.sleep(backoff)
+                if lost and self.config.replan_on_degrade and \
+                        cfg is not None and topology is not None:
+                    old_spec = strategy.format() if strategy is not None \
+                        else None
+                    strategy, topology = self.degrade(
+                        cfg, strategy, topology, shape, lost)
+                    self._record(kind="replan", attempt=n_restarts,
+                                 lost_devices=lost,
+                                 old_spec=old_spec,
+                                 new_spec=strategy.format(),
+                                 n_devices=topology.n_devices)
+                n_restarts += 1
+                event["recovery_wall_s"] = round(time.time() - t_fail, 4)
+
+
+def supervise_training(cfg, strategy, topology, shape, tc, make_batches,
+                       rt_overrides: Optional[Dict] = None, key=None,
+                       fault_plan=None,
+                       sup_cfg: Optional[SupervisorConfig] = None):
+    """Production wiring: supervised ``train_loop`` attempts.
+
+    Each attempt rebuilds the plan/runtime/data from the (possibly
+    re-planned) strategy and topology and runs with ``tc.resume=True``,
+    so a restart restores the newest valid checkpoint and replays the
+    data stream from the restored position.  ``make_batches()`` must
+    return a *fresh* batch iterable per call (sources are stateful).
+    Returns ``(params, opt_state, history, supervisor)``.
+    """
+    import jax
+
+    from repro.core import parallel as par
+    from repro.train.trainer import train_loop
+
+    sup = Supervisor(sup_cfg or SupervisorConfig(), ckpt_dir=tc.ckpt_dir)
+
+    def attempt(n_restarts, strat, topo):
+        plan = strat.to_plan(cfg, topo, shape)
+        rt = par.make_runtime(cfg, plan, shape, **(rt_overrides or {}))
+        tc_run = dataclasses.replace(tc, resume=tc.resume or n_restarts > 0)
+        return train_loop(cfg, plan, rt, tc_run, make_batches(),
+                          key=key if key is not None
+                          else jax.random.PRNGKey(0),
+                          fault_plan=fault_plan)
+
+    params, opt_state, history = sup.run(
+        attempt, strategy=strategy, topology=topology, cfg=cfg, shape=shape)
+    return params, opt_state, history, sup

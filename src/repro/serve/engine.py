@@ -134,10 +134,12 @@ class ServeEngine:
         self._streams = np.zeros((self.n_slots,), np.int32)
 
     def submit(self, prompt, n_new: int, temperature: float = 0.0,
-               stream: Optional[int] = None) -> int:
+               stream: Optional[int] = None, ttl_s: float = 0.0) -> int:
         """Enqueue one request; returns its request id.  ``stream``
         selects the sampling stream (see module docstring); it defaults
-        to the request id."""
+        to the request id.  ``ttl_s`` > 0 sets a deadline after which the
+        request is retired with finish_reason='timeout' (partial output
+        kept, KV blocks freed) whether it is waiting or mid-generation."""
         if not self.paged_ok:
             raise RuntimeError(
                 "request-queue serving needs the paged cache path "
@@ -148,7 +150,20 @@ class ServeEngine:
             raise ValueError(
                 f"prompt({prompt.shape[0]}) + n_new({n_new}) exceeds "
                 f"max_len({self.max_len})")
-        return self._sched.submit(prompt, n_new, temperature, stream=stream)
+        return self._sched.submit(prompt, n_new, temperature, stream=stream,
+                                  ttl_s=ttl_s)
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel one request (waiting or running).  Frees its seat and
+        KV blocks; partial output stays available under finish_reason
+        'cancelled'.  Returns False for unknown/finished rids."""
+        out = self._sched.cancel(rid)
+        if out is None:
+            return False
+        slot, _ = out
+        if slot >= 0:
+            self._tbl[slot] = -1
+        return True
 
     def _base_key(self, key=None):
         if key is not None:
@@ -181,6 +196,12 @@ class ServeEngine:
 
     def _tick(self, base_key):
         sched = self._sched
+        # expire first: a timed-out running request frees its seat before
+        # admission, and a timed-out waiting request stops blocking the
+        # queue head this same tick
+        for slot, _ in sched.expire():
+            if slot >= 0:
+                self._tbl[slot] = -1
         for req in sched.admit():
             # lay the reserved block chain into the slot's table row
             self._tbl[req.slot] = -1

@@ -18,11 +18,22 @@ The engine runs in *ticks*.  Each tick the scheduler:
 Completion (token budget exhausted) returns the request's blocks to the
 :class:`~repro.serve.paged_cache.BlockAllocator` and frees its slot, so
 the next waiting request joins the running batch on the following tick.
+
+Requests can also leave early: a per-request **TTL** (``submit(...,
+ttl_s=...)``) expires the request once its deadline passes — whether it
+is still waiting or mid-generation — and ``cancel(rid)`` removes one
+explicitly.  Both paths free blocks+slot exactly like completion and
+record why in ``Request.finish_reason`` ('length' | 'timeout' |
+'cancelled'), so a client that stops listening cannot pin KV blocks
+forever and a stuck head-of-queue request cannot starve the tail
+indefinitely.  Time comes from an injectable ``clock`` (tests pass a
+fake; production defaults to ``time.monotonic``).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+import time
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -47,6 +58,8 @@ class Request:
     prefilled: int = 0                  # prompt tokens written so far
     generated: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    deadline: float = 0.0               # absolute clock time; 0 = no TTL
+    finish_reason: str = ""             # 'length' | 'timeout' | 'cancelled'
 
     @property
     def prompt_len(self) -> int:
@@ -63,11 +76,13 @@ class Request:
 
 class Scheduler:
     def __init__(self, n_slots: int, allocator: BlockAllocator,
-                 prefill_chunk: int = 32, steps_per_tick: int = 8):
+                 prefill_chunk: int = 32, steps_per_tick: int = 8,
+                 clock: Callable[[], float] = time.monotonic):
         self.n_slots = n_slots
         self.alloc = allocator
         self.prefill_chunk = prefill_chunk
         self.steps_per_tick = steps_per_tick
+        self.clock = clock
         self.waiting: List[Request] = []
         self.running: Dict[int, Request] = {}       # slot -> request
         self.finished: Dict[int, Request] = {}      # rid -> request
@@ -76,12 +91,15 @@ class Scheduler:
     # -- submission / bookkeeping -------------------------------------------
 
     def submit(self, prompt: np.ndarray, n_new: int,
-               temperature: float = 0.0, stream: Optional[int] = None) -> int:
+               temperature: float = 0.0, stream: Optional[int] = None,
+               ttl_s: float = 0.0) -> int:
         rid = self._next_rid
         self._next_rid += 1
         self.waiting.append(Request(rid, np.asarray(prompt, np.int32),
                                     n_new, temperature,
-                                    stream=rid if stream is None else stream))
+                                    stream=rid if stream is None else stream,
+                                    deadline=(self.clock() + ttl_s
+                                              if ttl_s > 0 else 0.0)))
         return rid
 
     def has_work(self) -> bool:
@@ -134,12 +152,62 @@ class Scheduler:
         return [r for r in self.running.values()
                 if r.prefill_done and r.remaining > 0]
 
-    def complete(self, req: Request) -> None:
-        """Token budget exhausted: free blocks and slot."""
+    def complete(self, req: Request, reason: str = "length") -> None:
+        """Request leaving the running set: free blocks and slot."""
         assert req.slot in self.running and self.running[req.slot] is req
         del self.running[req.slot]
         self.alloc.free(req.blocks)
         req.blocks = []
         req.slot = -1
         req.done = True
+        req.finish_reason = reason
         self.finished[req.rid] = req
+
+    # -- early exit: TTL expiry and explicit cancellation -------------------
+
+    def _retire_waiting(self, req: Request, reason: str) -> None:
+        self.waiting.remove(req)
+        req.done = True
+        req.finish_reason = reason
+        self.finished[req.rid] = req
+
+    def expire(self, now: Optional[float] = None) -> List[Tuple[int, Request]]:
+        """Retire every request whose deadline has passed.
+
+        Covers both the running set (blocks + slot freed like completion)
+        and the waiting queue — an expired head-of-queue request must not
+        keep blocking admission of the tail forever.  Returns
+        ``(slot, request)`` pairs — slot is the seat the request *held*
+        (-1 if never admitted) so the engine can clear its block-table
+        row; the request keeps whatever tokens it generated.
+        """
+        now = self.clock() if now is None else now
+        expired: List[Tuple[int, Request]] = []
+        for req in [r for r in self.running.values()
+                    if r.deadline and now >= r.deadline]:
+            slot = req.slot
+            self.complete(req, reason="timeout")
+            expired.append((slot, req))
+        for req in [r for r in self.waiting
+                    if r.deadline and now >= r.deadline]:
+            self._retire_waiting(req, "timeout")
+            expired.append((-1, req))
+        return expired
+
+    def cancel(self, rid: int) -> Optional[Tuple[int, Request]]:
+        """Explicitly remove one request, waiting or running.
+
+        Returns ``(slot, request)`` with the seat it held (-1 if it was
+        still waiting), or None if the rid is unknown / already finished
+        (cancelling a finished request is a no-op, not an error).
+        """
+        for req in self.running.values():
+            if req.rid == rid:
+                slot = req.slot
+                self.complete(req, reason="cancelled")
+                return slot, req
+        for req in self.waiting:
+            if req.rid == rid:
+                self._retire_waiting(req, "cancelled")
+                return -1, req
+        return None

@@ -34,6 +34,13 @@ from repro.strategy.topology import Topology
 OBJECTIVES: Dict[str, Callable[[cm.StepReport], float]] = {
     "wps": lambda r: r.wps,
     "throughput": lambda r: r.wps,
+    # failure-aware throughput: wps * goodput (checkpoint overhead + lost
+    # work + restarts at the Young/Daly interval, strategy-aware writer
+    # parallelism).  Diverges from 'wps' at scale/low MTBF — a strategy
+    # with few distinct checkpoint writers (HSDP replicas, DDP) pays more
+    # per failure than one that writes n-ways (full FSDP).
+    "effective_wps": lambda r: r.effective_wps,
+    "goodput": lambda r: r.goodput_frac,
     "mfu": lambda r: r.mfu,
     "tokens_per_joule": lambda r: r.tokens_per_joule,
     "memory": lambda r: -r.memory_per_device,

@@ -14,6 +14,7 @@ from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import parallel as par
@@ -32,6 +33,11 @@ class TrainConfig:
     ckpt_dir: str = ""
     grad_accum: int = 1
     opt: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+    # resilience: async checkpointing + kill/resume (resilience subsystem)
+    ckpt_async: bool = False        # snapshot on-thread, write in background
+    ckpt_max_in_flight: int = 2     # bounded queued background writes
+    ckpt_keep: int = 0              # gc all but the newest N (0 = keep all)
+    resume: bool = False            # restore latest *valid* ckpt_dir state
 
 
 def make_train_step(cfg: ModelConfig, rt: Runtime, tc: TrainConfig,
@@ -121,17 +127,91 @@ def shard_train_state(cfg: ModelConfig, plan: par.ParallelPlan, key,
     return params, opt_state, pshard, oshard
 
 
+def _restore_state(tc: TrainConfig, params, opt_state, pshard, oshard):
+    """Resume support: restore (params, opt_state, meta) from the newest
+    checkpoint in ``tc.ckpt_dir`` that passes CRC validation, or return
+    the freshly initialized state when none exists."""
+    from repro import checkpointing as ckpt_lib
+
+    step = ckpt_lib.latest_valid_step(tc.ckpt_dir, verify=True)
+    if step is None:
+        return params, opt_state, 0, {}
+    tree = ckpt_lib.restore_checkpoint(
+        tc.ckpt_dir, step, {"params": params, "opt": opt_state},
+        shardings={"params": pshard, "opt": oshard})
+    meta = ckpt_lib.load_meta(tc.ckpt_dir, step)
+    start = int(meta.get("step", step))
+    print(f"[resume] restored step {start} from {tc.ckpt_dir}", flush=True)
+    return tree["params"], tree["opt"], start, meta
+
+
 def train_loop(cfg: ModelConfig, plan: par.ParallelPlan, rt: Runtime,
                tc: TrainConfig, batches, key=None,
-               hooks: Optional[Callable] = None):
-    """Full driver: init, jit with shardings, iterate, log, checkpoint."""
-    from repro.checkpointing import save_checkpoint
+               hooks: Optional[Callable] = None, fault_plan=None):
+    """Full driver: init, jit with shardings, iterate, log, checkpoint.
+
+    ``tc.resume`` restores params/opt_state/PRNG/data position from the
+    newest *valid* checkpoint in ``tc.ckpt_dir`` (CRC-verified; corrupt
+    or partial saves are skipped), and the resumed run consumes the data
+    stream from the restored position — a killed-and-resumed run is
+    bit-identical to an uninterrupted one.  ``fault_plan``
+    (:class:`repro.resilience.FaultPlan`) injects crashes (raised as
+    ``SimulatedFailure`` before the scheduled step runs), straggler
+    sleeps, and transient checkpoint-I/O errors (retried once).
+    """
+    from repro import checkpointing as ckpt_lib
 
     key = key if key is not None else jax.random.PRNGKey(0)
     with par.use_mesh(plan.mesh):
         params, opt_state, pshard, oshard = shard_train_state(cfg, plan, key, rt)
+        start_step = 0
+        if tc.resume and tc.ckpt_dir:
+            params, opt_state, start_step, _ = _restore_state(
+                tc, params, opt_state, pshard, oshard)
         step_fn = make_train_step(cfg, rt, tc)
-        first = next(iter(batches))
+
+        checkpointer = None
+        if tc.ckpt_every and tc.ckpt_async:
+            checkpointer = ckpt_lib.AsyncCheckpointer(
+                tc.ckpt_dir, max_in_flight=tc.ckpt_max_in_flight,
+                keep=tc.ckpt_keep)
+
+        def save(step, params, opt_state):
+            kd = (jax.random.key_data(key)
+                  if jax.dtypes.issubdtype(key.dtype, jax.dtypes.prng_key)
+                  else key)
+            meta = {"step": step, "batches_consumed": step,
+                    "prng": np.asarray(kd).tolist()}
+            tree = {"params": params, "opt": opt_state}
+            # one retry: the injected checkpoint-I/O faults are transient
+            for attempt in range(2):
+                try:
+                    if fault_plan is not None:
+                        fault_plan.ckpt_io_check(step)
+                    if checkpointer is not None:
+                        checkpointer.save(step, tree, meta=meta)
+                    else:
+                        ckpt_lib.save_checkpoint(tc.ckpt_dir, step, tree,
+                                                 meta=meta)
+                        if tc.ckpt_keep:
+                            ckpt_lib.gc_checkpoints(tc.ckpt_dir,
+                                                    keep=tc.ckpt_keep)
+                    return
+                except ckpt_lib.CheckpointIOError as e:
+                    if attempt:
+                        raise
+                    print(f"[ckpt] transient I/O error at step {step}, "
+                          f"retrying: {e}", flush=True)
+
+        # data-pipeline position: a resumed run must see exactly the
+        # batches an uninterrupted run would have seen from this step
+        if start_step and hasattr(batches, "at"):
+            it = iter(batches.at(start_step))
+        else:
+            it = iter(batches)
+            for _ in range(start_step):
+                next(it)
+        first = next(it)
         bshard = par.batch_specs(cfg, plan, first)
         jstep = jax.jit(step_fn,
                         in_shardings=(pshard, oshard, bshard),
@@ -140,24 +220,39 @@ def train_loop(cfg: ModelConfig, plan: par.ParallelPlan, rt: Runtime,
 
         history = []
         t0 = time.time()
-        it = iter(batches)
+        t_step_ema = 0.0
         batch = first
-        for step in range(tc.steps):
-            params, opt_state, metrics = jstep(params, opt_state, batch)
-            if step + 1 < tc.steps:
-                batch = next(it)
-            if (step + 1) % tc.log_every == 0 or step == 0:
-                m = {k: float(v) for k, v in metrics.items()
-                     if getattr(v, "ndim", 0) == 0}
-                dt = time.time() - t0
-                m["steps_per_s"] = (step + 1) / dt
-                history.append({"step": step + 1, **m})
-                print(f"step {step+1:5d}  loss {m.get('loss', float('nan')):.4f}"
-                      f"  gnorm {m.get('grad_norm', float('nan')):.3f}"
-                      f"  {m['steps_per_s']:.2f} it/s", flush=True)
-                if hooks:
-                    hooks(step + 1, params, m)
-            if tc.ckpt_every and (step + 1) % tc.ckpt_every == 0:
-                save_checkpoint(tc.ckpt_dir, step + 1,
-                                {"params": params, "opt": opt_state})
+        try:
+            for step in range(start_step, tc.steps):
+                if fault_plan is not None:
+                    fault_plan.check_crash(step)
+                    mult = fault_plan.delay_multiplier(step)
+                    if mult > 1.0 and t_step_ema > 0.0:
+                        time.sleep((mult - 1.0) * t_step_ema)
+                t1 = time.time()
+                params, opt_state, metrics = jstep(params, opt_state, batch)
+                if step + 1 < tc.steps:
+                    batch = next(it)
+                if tc.ckpt_every and (step + 1) % tc.ckpt_every == 0:
+                    save(step + 1, params, opt_state)
+                if fault_plan is not None:
+                    # sync so the straggler sleep scales a real step time
+                    jax.block_until_ready(metrics["loss"])
+                    dt_step = time.time() - t1
+                    t_step_ema = dt_step if t_step_ema == 0.0 else \
+                        0.7 * t_step_ema + 0.3 * dt_step
+                if (step + 1) % tc.log_every == 0 or step == start_step:
+                    m = {k: float(v) for k, v in metrics.items()
+                         if getattr(v, "ndim", 0) == 0}
+                    dt = time.time() - t0
+                    m["steps_per_s"] = (step + 1 - start_step) / dt
+                    history.append({"step": step + 1, **m})
+                    print(f"step {step+1:5d}  loss {m.get('loss', float('nan')):.4f}"
+                          f"  gnorm {m.get('grad_norm', float('nan')):.3f}"
+                          f"  {m['steps_per_s']:.2f} it/s", flush=True)
+                    if hooks:
+                        hooks(step + 1, params, m)
+        finally:
+            if checkpointer is not None:
+                checkpointer.close()
         return params, opt_state, history

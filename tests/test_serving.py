@@ -251,6 +251,80 @@ def test_scheduler_prefill_oldest_first():
 
 
 # ---------------------------------------------------------------------------
+# request TTL + cancellation (resilience satellite)
+# ---------------------------------------------------------------------------
+
+def _mk_timed_sched(clock, n_slots=2, n_blocks=16):
+    from repro.serve import Scheduler
+    return Scheduler(n_slots, BlockAllocator(n_blocks, 8),
+                     prefill_chunk=8, steps_per_tick=4, clock=clock)
+
+
+def test_scheduler_ttl_expires_running_and_waiting():
+    """A passed deadline retires the request wherever it is: a running one
+    frees blocks+slot like completion, a waiting one stops blocking the
+    queue; both keep partial state and record finish_reason='timeout'."""
+    now = [0.0]
+    s = _mk_timed_sched(lambda: now[0], n_slots=1, n_blocks=8)
+    r1 = s.submit(np.zeros(8, np.int32), 3, ttl_s=5.0)   # will run
+    r2 = s.submit(np.zeros(8, np.int32), 3, ttl_s=2.0)   # stuck waiting
+    r3 = s.submit(np.zeros(8, np.int32), 3)              # no TTL
+    (req1,) = s.admit()
+    req1.prefilled = req1.prompt_len
+    req1.generated = [7]                                 # partial output
+    assert s.expire() == []                              # nothing due yet
+    now[0] = 3.0                                         # r2's deadline only
+    expired = s.expire()
+    assert [(slot, r.rid) for slot, r in expired] == [(-1, r2)]
+    assert s.finished[r2].finish_reason == "timeout"
+    assert [r.rid for r in s.waiting] == [r3]            # head unblocked
+    now[0] = 6.0                                         # r1's deadline
+    (slot, req) = s.expire()[0]
+    assert (slot, req.rid) == (0, r1)
+    assert req.finish_reason == "timeout" and req.slot == -1
+    assert req.generated == [7]                          # partial kept
+    assert s.alloc.n_free == 8                           # blocks returned
+    assert [r.rid for r in s.admit()] == [r3]            # seat reusable
+
+
+def test_scheduler_cancel_waiting_running_and_unknown():
+    now = [0.0]
+    s = _mk_timed_sched(lambda: now[0], n_slots=1, n_blocks=8)
+    r1 = s.submit(np.zeros(8, np.int32), 3)
+    r2 = s.submit(np.zeros(8, np.int32), 3)
+    s.admit()
+    slot, req = s.cancel(r1)                             # running
+    assert slot == 0 and req.finish_reason == "cancelled"
+    assert s.alloc.n_free == 8 and not s.running
+    assert s.cancel(r2) == (-1, s.finished[r2])          # waiting
+    assert s.finished[r2].finish_reason == "cancelled"
+    assert s.cancel(r1) is None                          # already finished
+    assert s.cancel(999) is None                         # unknown rid
+
+
+def test_engine_ttl_and_cancel_free_seats_and_drain(small_model):
+    """End-to-end: an immediately-expiring request and a cancelled one
+    must not wedge run_until_drained or leak blocks; survivors complete
+    with full budgets and 'length' finish reason."""
+    cfg, params = small_model
+    eng = ServeEngine(cfg, params, RT, max_len=64, n_slots=2, block_size=8,
+                      prefill_chunk=8, steps_per_tick=4)
+    p = np.asarray(_prompts(cfg, jax.random.PRNGKey(21), 3, 9))
+    ok = eng.submit(p[0], 5)
+    doomed = eng.submit(p[1], 5, ttl_s=1e-9)             # expires first tick
+    gone = eng.submit(p[2], 5)
+    assert eng.cancel(gone)
+    assert not eng.cancel(gone)                          # second time: no-op
+    assert not eng.cancel(12345)
+    sched = eng._sched
+    out = eng.run_until_drained(key=jax.random.PRNGKey(3))
+    assert len(out[ok]) == 5
+    assert len(out[doomed]) < 5                          # retired early
+    assert sched.alloc.n_free == eng.n_blocks            # nothing leaked
+    assert not sched.running and not sched.waiting
+
+
+# ---------------------------------------------------------------------------
 # planner decode mode (satellite)
 # ---------------------------------------------------------------------------
 

@@ -178,7 +178,6 @@ def _measure_strategy_step(cfg, spec: str, shape, n_iter: int = 3):
     (strat, report, plan, rt, row) where ``row`` carries the common
     predicted/measured fields — the pp/ep sweeps add their own columns."""
     import jax
-    import jax.numpy as jnp
     from repro import strategy as strategy_lib
     from repro.core import parallel as par
     from repro.launch.specs import concrete_train_batch
@@ -192,8 +191,9 @@ def _measure_strategy_step(cfg, spec: str, shape, n_iter: int = 3):
     strat = strategy_lib.parse(spec)
     report = strategy_lib.evaluate(cfg, strat, topo, shape)
     plan = strat.to_plan(cfg, topo, shape)
-    rt = par.make_runtime(cfg, plan, shape, param_dtype=jnp.float32,
-                          compute_dtype=jnp.float32, remat=False,
+    # dtypes follow the spec's precision policy (f32 default, _bf16/_fp8
+    # opt in) so precision-suffixed specs measure what they claim
+    rt = par.make_runtime(cfg, plan, shape, remat=False,
                           attn_min_chunked_len=256)
     params = tfm.init_params(cfg, key)
     batch = concrete_train_batch(cfg, shape.global_batch, shape.seq_len, key)
@@ -211,6 +211,7 @@ def _measure_strategy_step(cfg, spec: str, shape, n_iter: int = 3):
     row = {
         "spec": spec,
         "mesh": {k: int(v) for k, v in plan.mesh.shape.items()},
+        "precision": strat.precision,
         "predicted_hw": topo.hardware,
         "predicted_t_step_s": report.t_step,
         "measured_t_step_s": round(t_best, 4),
@@ -607,6 +608,122 @@ def _goodput_sweep(out_path: str = "results/benchmarks/BENCH_goodput.json",
     return summary
 
 
+def _precision_sweep(out_path: str = "results/benchmarks/BENCH_precision.json",
+                     n_iter: int = 3):
+    """Mixed-precision sweep -> BENCH_precision.json (CI artifact).
+
+    Three sections:
+
+    * **measured**: the same FSDP mesh executed under the _f32 / _bf16 /
+      _fp8 precision policies on 8 virtual host devices.  CPU wall time
+      is a regression signal, not a TPU claim — what the section proves
+      is that each policy lowers and runs end-to-end (bf16 compute with
+      f32 master params; fp8 additionally quantizing the per-layer ZeRO
+      gather wire) and that the loss stays finite.
+    * **kernels**: Pallas flash-attention / rmsnorm fwd at f32 vs bf16
+      inputs with the dtype-resolved block defaults (bf16 doubles the
+      tile: same VMEM footprint, half the grid steps).
+    * **analytic**: the dtype-aware cost model pricing llama2-7b on a
+      TPU v5e pod per precision — the byte terms that move the paper's
+      EP/PP/FSDP crossovers when precision changes — plus the spec the
+      planner picks once precision is a swept degree (bf16 dominates f32
+      on any fixed mesh: half the wire bytes, double the matmul rate).
+    """
+    import dataclasses as _dc
+
+    from repro.launch.devices import force_host_device_count
+    force_host_device_count(8)
+    import jax
+    import jax.numpy as jnp
+    from repro import strategy as strategy_lib
+    from repro.configs import ShapeConfig, get_config, reduced
+    from repro.core import costmodel as cm
+    from repro.kernels import ops as kernel_ops
+
+    rows, summary = [], []
+
+    # -- measured: one mesh, three policies -----------------------------
+    cfg = reduced(get_config("qwen3-0.6b"), n_layers=4)
+    shape = ShapeConfig("precision-sweep", 128, 16, "train")
+    for spec in ("fsdp", "fsdp_bf16", "fsdp_fp8"):
+        strat, report, plan, rt, row = _measure_strategy_step(
+            cfg, spec, shape, n_iter)
+        row.update(section="measured",
+                   compute_dtype=str(rt.compute_dtype),
+                   comm_dtype=plan.policy.comm_dtype
+                   or str(jnp.dtype(rt.param_dtype)),
+                   predicted_wps=report.wps)
+        rows.append(row)
+        summary.append((f"precision_step_{spec}",
+                        row["measured_t_step_s"] * 1e6,
+                        f"compute{row['compute_dtype']}"
+                        f"_comm{row['comm_dtype']}"))
+
+    # -- kernels: dtype-resolved block defaults -------------------------
+    def bench(fn, *args):
+        fn(*args)                                  # compile / first trace
+        jax.block_until_ready(fn(*args))
+        t0 = time.perf_counter()
+        for _ in range(n_iter):
+            jax.block_until_ready(fn(*args))
+        return (time.perf_counter() - t0) / n_iter * 1e6
+
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(0), 3)
+    for dt in (jnp.float32, jnp.bfloat16):
+        name = str(jnp.dtype(dt))
+        q = jax.random.normal(kq, (1, 512, 4, 64), dt)
+        k = jax.random.normal(kk, (1, 512, 2, 64), dt)
+        v = jax.random.normal(kv, (1, 512, 2, 64), dt)
+        t_attn = bench(jax.jit(
+            lambda q, k, v: kernel_ops.attention(q, k, v)), q, k, v)
+        x = jax.random.normal(kq, (2048, 256), dt)
+        s = jax.random.normal(kk, (256,), dt)
+        t_norm = bench(jax.jit(
+            lambda x, s: kernel_ops.rmsnorm(x, s)), x, s)
+        rows.append({"section": "kernels", "dtype": name,
+                     "block_q": kernel_ops._dtype_blocks(dt, 128),
+                     "block_kv": kernel_ops._dtype_blocks(dt, 256),
+                     "block_rows": kernel_ops._dtype_blocks(dt, 256),
+                     "attn_fwd_us": round(t_attn, 1),
+                     "rmsnorm_fwd_us": round(t_norm, 1)})
+        summary.append((f"precision_kern_{name}", t_attn,
+                        f"rms{t_norm:.0f}us"
+                        f"_bq{kernel_ops._dtype_blocks(dt, 128)}"))
+
+    # -- analytic: dtype-aware byte terms + planner pick -----------------
+    cfg7 = get_config("llama2-7b")
+    hw = cm.HARDWARE["TPUv5e"]
+    for prec in ("f32", "bf16", "fp8"):
+        s = _dc.replace(cm.Strategy(256, zero_stage=3), precision=prec)
+        r = cm.step_time(cfg7, hw, s, 1024, 2048)
+        rows.append({"section": "analytic", "precision": prec,
+                     "arch": cfg7.name, "hardware": hw.name,
+                     "n_devices": 256, "zero_stage": 3,
+                     "t_step_s": r.t_step, "mfu": r.mfu,
+                     "fsdp_ag_s": r.comm_breakdown["fsdp_ag"],
+                     "fsdp_rs_s": r.comm_breakdown["fsdp_rs"],
+                     "memory_per_device": r.memory_per_device})
+        summary.append((f"precision_analytic_{prec}", r.t_step * 1e6,
+                        f"mfu{r.mfu:.3f}"
+                        f"_ag{rows[-1]['fsdp_ag_s'] * 1e3:.1f}ms"))
+    topo = strategy_lib.Topology("v5e-pod", 256, hw.island,
+                                 hardware=hw.name, hbm=16e9)
+    shape7 = ShapeConfig("precision-analytic", 2048, 1024, "train")
+    pick = strategy_lib.best(cfg7, topo, shape7)
+    if pick is not None:
+        rows.append({"section": "planner", "pick": pick.spec,
+                     "precision": pick.strategy.precision,
+                     "wps": pick.report.wps, "mfu": pick.report.mfu})
+        summary.append(("precision_planner_pick", pick.report.t_step * 1e6,
+                        pick.spec))
+
+    _write_bench(out_path, {
+        "backend": jax.default_backend(), "n_iter": n_iter,
+        "measured_arch": cfg.name, "analytic_arch": cfg7.name,
+        "rows": rows}, len(rows))
+    return summary
+
+
 def _strategy_benchmark(spec: str, hw_name: str, gpus: int, global_batch: int,
                         seq_len: int):
     """Price one spec (or the planner's 'auto' pick) via the unified API."""
@@ -675,6 +792,15 @@ def main() -> None:
                          "BENCH_goodput.json")
     ap.add_argument("--goodput_json",
                     default="results/benchmarks/BENCH_goodput.json")
+    ap.add_argument("--precision-sweep", dest="precision_sweep",
+                    action="store_true",
+                    help="only run the mixed-precision sweep (f32/bf16/fp8 "
+                         "train-step execution on one mesh, dtype-tuned "
+                         "kernel blocks, and the dtype-aware cost-model "
+                         "column with the planner's precision pick) and "
+                         "write BENCH_precision.json")
+    ap.add_argument("--precision_json",
+                    default="results/benchmarks/BENCH_precision.json")
     args = ap.parse_args()
 
     if args.micro_kernels:
@@ -707,6 +833,13 @@ def main() -> None:
 
     if args.goodput_sweep:
         rows = _goodput_sweep(args.goodput_json)
+        print("name,us_per_call,derived")
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},{derived}")
+        return
+
+    if args.precision_sweep:
+        rows = _precision_sweep(args.precision_json)
         print("name,us_per_call,derived")
         for name, us, derived in rows:
             print(f"{name},{us:.1f},{derived}")

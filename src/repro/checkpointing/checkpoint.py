@@ -79,6 +79,28 @@ def _stored_view(arr: np.ndarray) -> np.ndarray:
     return arr
 
 
+def _logical_dtype(name: str) -> Optional[np.dtype]:
+    """Resolve a manifest dtype name to a numpy dtype — ml_dtypes supplies
+    the extended-float families (bfloat16, float8_*) numpy lacks.  None
+    for names neither knows."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        pass
+    try:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+    except (ImportError, AttributeError, TypeError):
+        return None
+
+
+def _store_dtype(dtype: np.dtype) -> np.dtype:
+    """The on-disk dtype ``_stored_view`` writes for a logical dtype."""
+    if dtype.kind == "V":
+        return np.dtype(np.uint16 if dtype.itemsize == 2 else np.uint8)
+    return dtype
+
+
 # ---------------------------------------------------------------------------
 # snapshot (device -> host) and write (host -> disk), split so the async
 # checkpointer can pay only the snapshot on the training thread
@@ -288,9 +310,24 @@ def restore_checkpoint(directory: str, step: int, target: Any,
             problems.append(f"{key}: CRC32 mismatch in {entry['file']} "
                             "(corrupt leaf)")
             continue
-        if entry["dtype"] not in str(arr.dtype):   # bit-stored bf16 etc.
-            import ml_dtypes
-            arr = arr.view(np.dtype(getattr(ml_dtypes, entry["dtype"])))
+        if str(arr.dtype) != entry["dtype"]:
+            # bit-stored leaf (``_stored_view`` writes bf16/fp8 as
+            # uint16/uint8): view back to the exact logical dtype.  Exact
+            # comparison, not substring — 'int8' is a substring of
+            # 'uint8' and 'float16' of 'bfloat16', so the old
+            # ``entry["dtype"] not in str(arr.dtype)`` check silently
+            # loaded conflated dtypes without viewing back.
+            logical = _logical_dtype(entry["dtype"])
+            if logical is None:
+                problems.append(f"{key}: unknown manifest dtype "
+                                f"{entry['dtype']!r}")
+                continue
+            if arr.dtype != _store_dtype(logical):
+                problems.append(
+                    f"{key}: stored dtype {arr.dtype} cannot hold "
+                    f"manifest dtype {entry['dtype']}")
+                continue
+            arr = arr.view(logical)
         loaded[key] = arr
 
     shape_problems: List[str] = []

@@ -91,6 +91,40 @@ HARDWARE = {h.name: h for h in (V100, A100, H100, TPU_V5E)}
 
 
 # ---------------------------------------------------------------------------
+# precision policies (byte widths per tensor class + matmul throughput)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Precision:
+    """Byte widths the analytic model charges per tensor class.
+
+    ``param_bytes`` is the stored-parameter width (what the memory term and
+    checkpoint size see), ``comm_bytes`` the width the ZeRO param gathers
+    move on the wire (fp8 communicates a quantized copy of bf16-stored
+    params — the FSDP2 fp8-all-gather extension point), ``act_bytes`` the
+    activation width driving TP/CP/PP/MoE collective sizes, and
+    ``grad_bytes`` the gradient reduce-scatter width (f32 everywhere:
+    low-precision grad reduction is not modeled).  ``flops_scale``
+    multiplies the hardware's bf16 matmul peak — f32 matmuls run at half
+    rate on every generation modeled here.
+    """
+    name: str
+    param_bytes: int
+    comm_bytes: int
+    act_bytes: int
+    grad_bytes: int
+    flops_scale: float
+
+
+PRECISIONS = {
+    "f32": Precision("f32", 4, 4, 4, 4, 0.5),
+    "bf16": Precision("bf16", 2, 2, 2, 4, 1.0),
+    # emulated fp8: bf16 storage/compute, fp8 on the gather wire only
+    "fp8": Precision("fp8", 2, 1, 2, 4, 1.0),
+}
+
+
+# ---------------------------------------------------------------------------
 # collectives
 # ---------------------------------------------------------------------------
 
@@ -180,6 +214,12 @@ class Strategy:
     fsdp_group: int = 0         # param-shard group size; 0 -> full dp (FSDP).
                                 # HSDP: the island-local group, with the
                                 # cross-island grad AR charged separately.
+    precision: str = "bf16"     # PRECISIONS key.  The analytic default is
+                                # bf16 — the byte widths this model always
+                                # silently assumed — so calibrated anchors
+                                # are unchanged; the descriptor passes the
+                                # executable policy (default f32) through
+                                # to_cost_strategy.
 
     @property
     def dp(self) -> int:
@@ -195,7 +235,8 @@ class Strategy:
         return self.tp * self.pp * self.cp
 
     def valid(self) -> bool:
-        return (self.sched in SCHEDULE_NAMES and
+        return (self.precision in PRECISIONS and
+                self.sched in SCHEDULE_NAMES and
                 # a schedule token without a pipeline is not a real point
                 (self.pp > 1 or self.sched == "gpipe") and
                 self.dp >= 1 and
@@ -224,9 +265,9 @@ class Strategy:
 RESTART_BASE_S = 120.0   # detect + reschedule + reinit before the restore
 
 
-def checkpoint_bytes(cfg: ModelConfig) -> float:
-    """Global checkpoint size: bf16 params + fp32 Adam m/v."""
-    return cfg.param_count() * (2 + 8)
+def checkpoint_bytes(cfg: ModelConfig, precision: str = "bf16") -> float:
+    """Global checkpoint size: stored-dtype params + fp32 Adam m/v."""
+    return cfg.param_count() * (PRECISIONS[precision].param_bytes + 8)
 
 
 def distinct_writers(strat: Strategy) -> int:
@@ -243,7 +284,8 @@ def distinct_writers(strat: Strategy) -> int:
 
 def checkpoint_write_time(cfg: ModelConfig, hw: Hardware,
                           strat: Strategy) -> float:
-    return checkpoint_bytes(cfg) / (distinct_writers(strat) * hw.ckpt_bw)
+    return checkpoint_bytes(cfg, strat.precision) / (
+        distinct_writers(strat) * hw.ckpt_bw)
 
 
 def system_mtbf(hw: Hardware, n_devices: int) -> float:
@@ -326,7 +368,7 @@ class StepReport:
         d.pop("strategy")
         s = self.strategy
         d.update(n=s.n_devices, tp=s.tp, pp=s.pp, cp=s.cp, ep=s.ep,
-                 dp=s.dp, sched=s.sched)
+                 dp=s.dp, sched=s.sched, precision=s.precision)
         return d
 
 
@@ -345,12 +387,14 @@ def step_time(cfg: ModelConfig, hw: Hardware, strat: Strategy,
     tokens = global_batch * seq_len
     L = cfg.n_layers
     d = cfg.d_model
-    P_bytes = _model_bytes(cfg)
+    px = PRECISIONS[strat.precision]
+    P_bytes = _model_bytes(cfg, px.param_bytes)
 
     # ---- compute -----------------------------------------------------------
     total_flops = flops_lib.compiled_flops(cfg, shape, remat=remat and train)
     flops_per_dev = total_flops / strat.n_devices
-    t_compute = flops_per_dev / (hw.flops_bf16 * hw.kernel_eff)
+    t_compute = flops_per_dev / (hw.flops_bf16 * px.flops_scale *
+                                 hw.kernel_eff)
     # forward is 1/4 of compute with remat (1/3 without); AG prefetch hides
     # under the *forward* layer, grad RS under the *backward* layer.
     fwd_frac = (1 / 4 if remat else 1 / 3) if train else 1.0
@@ -366,7 +410,7 @@ def step_time(cfg: ModelConfig, hw: Hardware, strat: Strategy,
 
     # per-device local batch (examples)
     local_batch = max(global_batch // (strat.dp * strat.cp), 1)
-    act_bytes_layer = local_batch * seq_len * d * 2 / strat.cp  # bf16
+    act_bytes_layer = local_batch * seq_len * d * px.act_bytes / strat.cp
 
     comm: Dict[str, float] = {"fsdp_ag": 0.0, "fsdp_rs": 0.0, "ddp_ar": 0.0,
                               "hsdp_ar": 0.0, "tp_ar": 0.0, "pp_p2p": 0.0,
@@ -382,22 +426,28 @@ def step_time(cfg: ModelConfig, hw: Hardware, strat: Strategy,
     mult = 3 if cfg.glu else 2
     n_moe = sum(cfg.is_moe_layer(i) for i in range(L))
     expert_bytes = (n_moe * cfg.moe.n_experts * mult * d *
-                    cfg.moe.expert_d_ff * 2) if cfg.moe.n_experts else 0.0
+                    cfg.moe.expert_d_ff * px.param_bytes
+                    ) if cfg.moe.n_experts else 0.0
     dense_layer_bytes = (P_bytes - expert_bytes) / L / (strat.tp * strat.pp)
     moe_layer_bytes = (expert_bytes / n_moe / (strat.tp * strat.pp)
                        if n_moe else 0.0)
     n_dp = strat.dp
     n_fsdp = strat.fsdp_n       # param-shard group (== dp unless HSDP)
     if strat.zero_stage >= 2 and n_fsdp > 1:
-        # AllGather params fwd (+ bwd re-gather for ZeRO-3), ReduceScatter grads
+        # AllGather params fwd (+ bwd re-gather for ZeRO-3) at the *wire*
+        # width (fp8 gathers a quantized copy), ReduceScatter grads at the
+        # reduce width (f32)
         n_fsdp_e = max(n_fsdp // strat.ep, 1)
-        ag_dense = t_all_gather(hw, dense_layer_bytes, n_fsdp)
-        ag_moe = t_all_gather(hw, moe_layer_bytes / strat.ep, n_fsdp_e)
+        comm_scale = px.comm_bytes / px.param_bytes
+        grad_scale = px.grad_bytes / px.param_bytes
+        ag_dense = t_all_gather(hw, dense_layer_bytes * comm_scale, n_fsdp)
+        ag_moe = t_all_gather(hw, moe_layer_bytes / strat.ep * comm_scale,
+                              n_fsdp_e)
         n_ag = 2 if strat.zero_stage == 3 else 1
         rs_dense = t_reduce_scatter(
-            hw, dense_layer_bytes * GRAD_DTYPE_BYTES / 2, n_fsdp)
+            hw, dense_layer_bytes * grad_scale, n_fsdp)
         rs_moe = t_reduce_scatter(
-            hw, moe_layer_bytes / strat.ep * GRAD_DTYPE_BYTES / 2, n_fsdp_e)
+            hw, moe_layer_bytes / strat.ep * grad_scale, n_fsdp_e)
         comm["fsdp_ag"] = n_ag * (L * ag_dense + n_moe * ag_moe)
         comm["fsdp_rs"] = (L * rs_dense + n_moe * rs_moe) if train else 0.0
         win_fwd = PREFETCH_EFF * t_layer_fwd
@@ -420,7 +470,8 @@ def step_time(cfg: ModelConfig, hw: Hardware, strat: Strategy,
             # replicas once per step, ring over the slow inter-island
             # fabric shared by the island's n_fsdp concurrent rings.
             replicas = n_dp // n_fsdp
-            grad_shard = layer_param_bytes * L * GRAD_DTYPE_BYTES / 2 / n_fsdp
+            grad_shard = (layer_param_bytes * L * px.grad_bytes /
+                          px.param_bytes / n_fsdp)
             # every chip in the island — n_fsdp data ranks x tp*cp model
             # ranks — holds a distinct shard and rings concurrently over
             # the shared cross-island fabric (same sharing as _bw_alpha)
@@ -432,7 +483,8 @@ def step_time(cfg: ModelConfig, hw: Hardware, strat: Strategy,
             # overlaps the backward tail like DDP, but spans fewer layers
             exposed_fsdp += 0.5 * comm["hsdp_ar"]
     elif n_dp > 1 and train:
-        comm["ddp_ar"] = t_all_reduce(hw, P_bytes * GRAD_DTYPE_BYTES / 2, n_dp)
+        comm["ddp_ar"] = t_all_reduce(
+            hw, cfg.param_count() * px.grad_bytes, n_dp)
         # DDP grad all-reduce overlaps with backward (non-blocking, §2.1)
         exposed_fsdp = max(0.0, comm["ddp_ar"] - PREFETCH_EFF * t_compute * 2 / 3)
     else:
@@ -452,7 +504,7 @@ def step_time(cfg: ModelConfig, hw: Hardware, strat: Strategy,
     if strat.cp > 1:
         # ring attention: pass KV around the cp ring each layer
         kv_bytes = local_batch * seq_len / strat.cp * cfg.kv_heads * \
-            cfg.head_dim_ * 2 * 2
+            cfg.head_dim_ * px.act_bytes * 2
         t_ring = (strat.cp - 1) * t_p2p(hw, kv_bytes, strat.cp > hw.island)
         comm["cp"] = L * t_ring * (3 if train else 1)
         exposed_cp = 0.25 * comm["cp"]       # mostly overlapped with attn math
@@ -463,7 +515,7 @@ def step_time(cfg: ModelConfig, hw: Hardware, strat: Strategy,
     exposed_moe = 0.0
     if cfg.moe.n_experts:
         tok_bytes = (tokens / strat.dp / strat.cp) * cfg.moe.top_k * \
-            cfg.moe.capacity_factor * d * 2
+            cfg.moe.capacity_factor * d * px.act_bytes
         # the dispatch/combine exchange crosses the expert-sharding group:
         # the explicit 'expert' axis when ep > 1, else the model axis (the
         # GSPMD dropping path reshards the (E, C, d) buffer over the whole
@@ -492,7 +544,7 @@ def step_time(cfg: ModelConfig, hw: Hardware, strat: Strategy,
         # ((P-1)/(M+P-1)) at equal per-tick cost — 1F1B reorders the
         # bubble to cap in-flight activations, it does not shrink it
         bubble_frac = bubble_fraction(strat.pp, m, strat.sched)
-        act_boundary = local_batch * seq_len * d * 2 / m
+        act_boundary = local_batch * seq_len * d * px.act_bytes / m
         comm["pp_p2p"] = (strat.pp - 1) * m * t_p2p(
             hw, act_boundary, strat.pp * strat.tp > hw.island) * (2 if train else 1)
         bubble = bubble_frac            # fraction of step, applied below
@@ -507,7 +559,8 @@ def step_time(cfg: ModelConfig, hw: Hardware, strat: Strategy,
     # where replicas across islands each hold a full shard set).
     opt_shard = strat.tp * strat.pp * (n_fsdp if strat.zero_stage >= 2 else 1)
     mem = (P_bytes / (strat.tp * strat.pp)) / (n_fsdp if strat.zero_stage >= 3 else 1)
-    mem += 2 * P_bytes / (strat.tp * strat.pp) / (n_fsdp if strat.zero_stage >= 2 else 1)  # grads(bf16)+..
+    mem += px.grad_bytes * cfg.param_count() / (strat.tp * strat.pp) / \
+        (n_fsdp if strat.zero_stage >= 2 else 1)    # grads at reduce width
     mem += 8 * cfg.param_count() / opt_shard       # adam m+v fp32
     if train:
         # remat-boundary activations.  With a pipeline this is the
@@ -575,22 +628,25 @@ def decode_step_time(cfg: ModelConfig, hw: Hardware, strat: Strategy,
     assert strat.valid(), strat
     shape = ShapeConfig("x", context_len, batch, "decode")
     L, d = cfg.n_layers, cfg.d_model
-    P_bytes = _model_bytes(cfg)
+    px = PRECISIONS[strat.precision]
+    P_bytes = _model_bytes(cfg, px.param_bytes)
 
     flops = flops_lib.forward_flops(cfg, shape)
-    t_flops = flops / strat.n_devices / (hw.flops_bf16 * hw.kernel_eff)
+    t_flops = flops / strat.n_devices / (hw.flops_bf16 * px.flops_scale *
+                                         hw.kernel_eff)
 
     # HBM traffic: active params (MoE reads top_k experts' rows only) and
     # the local KV slice — batch shards over (dp, cp), heads over tp,
     # layers over pp
     local_batch = max(batch // (strat.dp * strat.cp), 1)
-    active_bytes = cfg.active_param_count() * 2 / (strat.tp * strat.pp)
+    active_bytes = (cfg.active_param_count() * px.param_bytes /
+                    (strat.tp * strat.pp))
     kv_bytes = (local_batch * context_len * (L / strat.pp) *
-                cfg.kv_heads * cfg.head_dim_ * 2 * 2 / strat.tp)
+                cfg.kv_heads * cfg.head_dim_ * px.act_bytes * 2 / strat.tp)
     t_mem = (active_bytes + kv_bytes) / hw.hbm_bw
 
     comm: Dict[str, float] = {"tp_ar": 0.0, "pp_p2p": 0.0, "moe_a2a": 0.0}
-    act_bytes = local_batch * d * 2
+    act_bytes = local_batch * d * px.act_bytes
     if strat.tp > 1:
         comm["tp_ar"] = L * 2 * t_all_reduce(hw, act_bytes, strat.tp)
     if strat.pp > 1:
@@ -602,7 +658,7 @@ def decode_step_time(cfg: ModelConfig, hw: Hardware, strat: Strategy,
                     else min(strat.tp * strat.cp, cfg.moe.n_experts))
         if ep_group > 1:
             tok_bytes = (local_batch * cfg.moe.top_k *
-                         cfg.moe.capacity_factor * d * 2)
+                         cfg.moe.capacity_factor * d * px.act_bytes)
             span = (ep_group * strat.tp * strat.cp if strat.ep > 1
                     else strat.tp * strat.cp)
             bw, alpha = _bw_alpha(hw, span)

@@ -40,6 +40,38 @@ from repro.core.compat import use_mesh  # noqa: F401  (canonical home:
 
 
 @dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    """Execution-side mixed-precision policy (dtype names, not jnp dtypes,
+    so the plan stays hashable and importable without jax.numpy).
+
+    ``param_dtype`` is the stored-parameter dtype the runtime computes
+    from; master parameters always stay f32 (``init_params`` initializes
+    f32 and the optimizer updates in f32 — torchtitan's
+    ``MixedPrecisionPolicy`` split).  ``compute_dtype`` is the activation/
+    matmul dtype, ``grad_dtype`` the grad-accumulation/reduce dtype, and
+    ``comm_dtype`` (when set) the wire dtype of the per-layer ZeRO param
+    all-gathers — the emulated-fp8-comms path: quantize, gather, and
+    dequantize back to ``compute_dtype`` (FSDP2's fp8 all-gather
+    extension point).
+    """
+    name: str
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"
+    grad_dtype: str = "float32"
+    comm_dtype: str = ""                 # '' = gather at param_dtype
+
+
+PRECISION_POLICIES = {
+    "f32": PrecisionPolicy("f32"),
+    "bf16": PrecisionPolicy("bf16", param_dtype="float32",
+                            compute_dtype="bfloat16"),
+    "fp8": PrecisionPolicy("fp8", param_dtype="float32",
+                           compute_dtype="bfloat16",
+                           comm_dtype="float8_e4m3fn"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
 class ParallelPlan:
     mesh: Mesh
     dp: Tuple[str, ...]                  # batch-dim axes ('pod','data') or ('data',)
@@ -56,6 +88,11 @@ class ParallelPlan:
     expert: str = ""                     # expert mesh axis ('' = no EP);
                                          # factored out of the data axis, so
                                          # it also appears in dp/fsdp
+    precision: str = "f32"               # PRECISION_POLICIES key
+
+    @property
+    def policy(self) -> PrecisionPolicy:
+        return PRECISION_POLICIES[self.precision]
 
     @property
     def tp_size(self) -> int:
@@ -321,14 +358,33 @@ def make_param_gatherer(cfg: ModelConfig, plan: ParallelPlan):
     """Per-layer FSDP de-gather: constraint mapping a (sliced, per-iteration)
     layer-param pytree to its *replicated-over-fsdp* layout (model-axis
     sharding kept).  Applied inside the scan body so the all-gather is
-    loop-variant and cannot be hoisted over the whole layer stack."""
+    loop-variant and cannot be hoisted over the whole layer stack.
+
+    When the plan's precision policy sets ``comm_dtype`` (the fp8 policy),
+    floating leaves are quantized to that dtype *before* the gather
+    constraint and dequantized to ``compute_dtype`` after — the all-gather
+    moves fp8 bytes on the wire while compute stays bf16 (FSDP2's fp8
+    all-gather extension point; ``convert_element_type`` is differentiable,
+    so the backward re-gather takes the same quantized path).
+    """
+    import jax.numpy as jnp
     gplan = dataclasses.replace(plan, fsdp=())
+    pol = plan.policy
+    comm_dtype = jnp.dtype(pol.comm_dtype) if pol.comm_dtype else None
+    compute_dtype = jnp.dtype(pol.compute_dtype)
 
     def gather(lp):
         def one(path, leaf):
             spec = _param_spec(cfg, gplan, path, len(leaf.shape))
-            return jax.lax.with_sharding_constraint(
+            quant = (comm_dtype is not None and
+                     jnp.issubdtype(leaf.dtype, jnp.floating))
+            if quant:
+                leaf = leaf.astype(comm_dtype)
+            leaf = jax.lax.with_sharding_constraint(
                 leaf, fitted(plan, spec, leaf.shape))
+            if quant:
+                leaf = leaf.astype(compute_dtype)
+            return leaf
         return jax.tree_util.tree_map_with_path(one, lp)
 
     return gather
@@ -396,9 +452,11 @@ def make_runtime(cfg: ModelConfig, plan: ParallelPlan, shape: ShapeConfig,
     """
     from repro.models.layers import Runtime
     import jax.numpy as jnp
+    pol = plan.policy
     kw = dict(
-        param_dtype=jnp.bfloat16,
-        compute_dtype=jnp.bfloat16,
+        param_dtype=jnp.dtype(pol.param_dtype),
+        compute_dtype=jnp.dtype(pol.compute_dtype),
+        grad_dtype=jnp.dtype(pol.grad_dtype),
         remat=shape.mode == "train",
         constrain=make_constrainer(cfg, plan),
         moe_impl=("ep" if plan.expert else "dropping")
@@ -431,7 +489,10 @@ def make_runtime(cfg: ModelConfig, plan: ParallelPlan, shape: ShapeConfig,
                                     and plan.attn == "context" else ""))
     if plan.attn == "context":
         kw["attn_q_chunk"] = shape.seq_len
-    if overrides.pop("fsdp_gather_per_block", False):
+    # fp8 comms only exist on the per-layer gather path, so a comm_dtype
+    # policy turns it on by default (still overridable)
+    if overrides.pop("fsdp_gather_per_block", bool(pol.comm_dtype)) \
+            and plan.fsdp:
         kw["gather_params"] = make_param_gatherer(cfg, plan)
     kw.update(overrides)
     return Runtime(**kw)

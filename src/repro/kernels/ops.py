@@ -29,8 +29,24 @@ def _interp(interpret):
     return bool(interpret)
 
 
-def attention(q, k, v, *, causal=True, window=0, block_q=128, block_kv=256,
+def _dtype_blocks(dtype, f32_val: int) -> int:
+    """Dtype-aware block default: sub-4-byte dtypes double the tile.
+
+    TPU tiling is (8, 128) sublanes x lanes at f32 but (16, 128) at bf16
+    — half the bytes per element means a 2x-larger block fills the same
+    VMEM footprint while halving grid/loop overhead, which is where the
+    bf16 kernels were leaving throughput (BENCH_kernels.json).
+    """
+    import jax.numpy as jnp
+    return f32_val * (2 if jnp.dtype(dtype).itemsize <= 2 else 1)
+
+
+def attention(q, k, v, *, causal=True, window=0, block_q=None, block_kv=None,
               interpret="auto"):
+    if block_q is None:
+        block_q = _dtype_blocks(q.dtype, 128)
+    if block_kv is None:
+        block_kv = _dtype_blocks(q.dtype, 256)
     return _flash(q, k, v, causal=causal, window=window, block_q=block_q,
                   block_kv=block_kv, interpret=_interp(interpret))
 
@@ -44,7 +60,9 @@ def paged_decode_attention(q, k_pool, v_pool, tbl, ctx, *, n_splits=4,
                          interpret=_interp(interpret))
 
 
-def rmsnorm(x, scale, *, eps=1e-6, block_rows=256, interpret="auto"):
+def rmsnorm(x, scale, *, eps=1e-6, block_rows=None, interpret="auto"):
+    if block_rows is None:
+        block_rows = _dtype_blocks(x.dtype, 256)
     return _rmsnorm(x, scale, eps=eps, block_rows=block_rows,
                     interpret=_interp(interpret))
 

@@ -134,7 +134,11 @@ def lower_one(arch: str, shape_name: str, multi_pod: bool,
     key = jax.random.PRNGKey(0)
     pshapes = jax.eval_shape(functools.partial(tfm.init_params, cfg), key)
     pshard = par.param_shardings(cfg, plan, pshapes)
-    params_sds = _to_dtype_sds(pshapes, pshard, jnp.bfloat16)
+    # lower with the storage dtype the strategy's precision policy
+    # actually trains with (previously hard-coded bf16 while train_loop
+    # ran f32 — the compiled memory/collective stats described a program
+    # nothing executed)
+    params_sds = _to_dtype_sds(pshapes, pshard, rt.param_dtype)
 
     with par.use_mesh(mesh):
         if shape.mode == "train":
@@ -159,7 +163,7 @@ def lower_one(arch: str, shape_name: str, multi_pod: bool,
             fn = make_prefill(cfg, rt, max_len=shape.seq_len)
             cshapes = jax.eval_shape(
                 lambda: tfm.init_cache(cfg, shape.global_batch, shape.seq_len,
-                                       jnp.bfloat16, par.make_runtime(
+                                       rt.compute_dtype, par.make_runtime(
                                            cfg, plan, shape, constrain=None)))
             cshard = par.cache_shardings(cfg, plan, cshapes)
             lowered = jax.jit(fn, out_shardings=(None, cshard)) \
@@ -168,7 +172,7 @@ def lower_one(arch: str, shape_name: str, multi_pod: bool,
             rt_nc = par.make_runtime(cfg, plan, shape, constrain=None)
             cshapes = jax.eval_shape(
                 lambda: tfm.init_cache(cfg, shape.global_batch, shape.seq_len,
-                                       jnp.bfloat16, rt_nc))
+                                       rt.compute_dtype, rt_nc))
             cshard = par.cache_shardings(cfg, plan, cshapes)
             cache_sds = _attach(cshapes, cshard)
             tokens, pos = specs_lib.decode_token_specs(cfg, shape)
@@ -239,6 +243,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
             "arch": arch, "shape": shape_name, "mesh": mesh_name,
             "status": "ok", "strategy": strat.format(),
             "strategy_arg": strategy or "legacy-default",
+            "precision": strat.precision,
             "plan": {
                 "attn": plan.attn, "kv_tp": plan.kv_tp, "dp": list(plan.dp),
                 "fsdp": list(plan.fsdp), "expert": plan.expert,

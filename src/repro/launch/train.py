@@ -120,8 +120,10 @@ def main():
         print(f"[strategy] {strat.format()} on {topo.name} "
               f"(mesh {dict(plan.mesh.shape)})")
 
+    # dtypes come from the strategy's precision policy (plan.policy): the
+    # default/_f32 spec keeps pure f32, a _bf16 spec trains bf16 with f32
+    # master params, _fp8 additionally quantizes the ZeRO gather wire
     rt = par.make_runtime(cfg, plan, shape,
-                          param_dtype=jnp.float32, compute_dtype=jnp.float32,
                           remat=False, rwkv_chunk=32, mamba_chunk=64,
                           attn_impl=args.kernels, norm_impl=args.kernels,
                           attn_min_chunked_len=max(2048, args.seq_len + 1)
@@ -155,7 +157,6 @@ def main():
         from repro.resilience.supervisor import (SupervisorConfig,
                                                  supervise_training)
         rt_overrides = dict(
-            param_dtype=jnp.float32, compute_dtype=jnp.float32,
             remat=False, rwkv_chunk=32, mamba_chunk=64,
             attn_impl=args.kernels, norm_impl=args.kernels,
             attn_min_chunked_len=max(2048, args.seq_len + 1)

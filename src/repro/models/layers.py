@@ -21,6 +21,9 @@ import numpy as np
 class Runtime:
     param_dtype: jnp.dtype = jnp.float32
     compute_dtype: jnp.dtype = jnp.float32
+    grad_dtype: jnp.dtype = jnp.float32  # grad-accumulation/reduce dtype
+                                         # (mixed-precision policy; the
+                                         # optimizer still updates in f32)
     remat: bool = False                 # checkpoint each scanned layer-block
     attn_q_chunk: int = 1024            # query chunk for blocked attention
     attn_kv_chunk: int = 1024           # kv chunk for blocked attention

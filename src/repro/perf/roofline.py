@@ -2,15 +2,20 @@
 
 Reads the dry-run records (results/dryrun/*.json), derives:
 
-  compute term    = FLOPs / (chips * 197 TFLOP/s)       [analytic-compiled]
-  memory term     = HBM bytes / (chips * 819 GB/s)      [analytic, perf/bytes]
-  collective term = collective bytes / (chips * 50 GB/s/link)
+  compute term    = FLOPs / (chips * hw.flops_bf16)     [analytic-compiled]
+  memory term     = HBM bytes / (chips * hw.hbm_bw)     [analytic, perf/bytes]
+  collective term = collective bytes / (chips * hw.intra_bw / hw.rings)
                     [trip-count-scaled HLO parse, perf/hlo]
 
 and reports, per pair: the three terms in seconds, the dominant bottleneck,
 MODEL_FLOPS = 6·N_active·D (2·N_active per token at inference), the
 MODEL/COMPILED flop ratio (remat / routing / attention overhead), and the
 one-line lever that would move the dominant term.
+
+The peaks come from a ``costmodel.Hardware`` profile (default: the
+paper's TPU v5e) instead of module constants, so the roofline can never
+drift from the calibrated analytic model the planner prices with — they
+had already diverged once.
 """
 from __future__ import annotations
 
@@ -20,12 +25,17 @@ import os
 from typing import Dict, List, Optional
 
 from repro.configs import SHAPES, get_config
+from repro.core import costmodel as cm
 from repro.perf import bytes as bytes_lib
 from repro.perf import flops as flops_lib
 
-PEAK_FLOPS = 197e12          # bf16 / chip (TPU v5e)
-HBM_BW = 819e9               # B/s / chip
-LINK_BW = 50e9               # B/s / ICI link
+DEFAULT_HW = cm.HARDWARE["TPUv5e"]
+
+
+def _peaks(hw: Optional[cm.Hardware]):
+    """(flops/s, HBM B/s, per-link B/s) for one chip of ``hw``."""
+    hw = hw or DEFAULT_HW
+    return hw.flops_bf16, hw.hbm_bw, hw.intra_bw / hw.rings
 
 LEVERS = {
     "compute": "raise achieved matmul efficiency (Pallas flash/WKV kernels, "
@@ -56,23 +66,25 @@ def load_records(out_dir: str = "results/dryrun", mesh: str = "pod16x16",
     return recs
 
 
-def roofline_row(rec: Dict) -> Optional[Dict]:
+def roofline_row(rec: Dict,
+                 hw: Optional[cm.Hardware] = None) -> Optional[Dict]:
     if rec.get("status") != "ok":
         return None
     cfg = get_config(rec["arch"])
     shape = SHAPES[rec["shape"]]
     chips = rec["n_devices"]
     remat = shape.mode == "train"
+    peak_flops, hbm_bw, link_bw = _peaks(hw)
 
     flops = rec.get("flops_compiled_analytic") or \
         flops_lib.compiled_flops(cfg, shape, remat=remat)
-    t_compute = flops / (chips * PEAK_FLOPS)
+    t_compute = flops / (chips * peak_flops)
 
     hbm = bytes_lib.hbm_bytes_per_device(cfg, shape, chips, remat=remat)
-    t_memory = hbm / HBM_BW
+    t_memory = hbm / hbm_bw
 
     coll = rec.get("collective_bytes_total", 0)
-    t_coll = coll / (chips * LINK_BW)
+    t_coll = coll / (chips * link_bw)
 
     terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
     dominant = max(terms, key=terms.get)
@@ -86,7 +98,8 @@ def roofline_row(rec: Dict) -> Optional[Dict]:
         "model_flops": model_fl, "compiled_flops": flops,
         "useful_ratio": model_fl / flops if flops else 0.0,
         "roofline_step_s": bound,
-        "roofline_mfu": model_fl / bound / (chips * PEAK_FLOPS) if bound else 0,
+        "roofline_mfu": model_fl / bound / (chips * peak_flops) if bound else 0,
+        "hardware": (hw or DEFAULT_HW).name,
         "temp_gib": rec["memory"]["temp_bytes_per_device"] / 2**30,
         "arg_gib": rec["memory"]["argument_bytes_per_device"] / 2**30,
         "lever": LEVERS[dominant],
@@ -94,10 +107,10 @@ def roofline_row(rec: Dict) -> Optional[Dict]:
 
 
 def table(out_dir: str = "results/dryrun", mesh: str = "pod16x16",
-          tag: str = "") -> List[Dict]:
+          tag: str = "", hw: Optional[cm.Hardware] = None) -> List[Dict]:
     rows = []
     for rec in load_records(out_dir, mesh, tag):
-        row = roofline_row(rec)
+        row = roofline_row(rec, hw=hw)
         if row:
             rows.append(row)
     return rows
@@ -124,8 +137,11 @@ def main():
     ap.add_argument("--out", default="results/dryrun")
     ap.add_argument("--mesh", default="pod16x16")
     ap.add_argument("--tag", default="")
+    ap.add_argument("--hardware", default="TPUv5e",
+                    choices=sorted(cm.HARDWARE))
     args = ap.parse_args()
-    rows = table(args.out, args.mesh, args.tag)
+    rows = table(args.out, args.mesh, args.tag,
+                 hw=cm.HARDWARE[args.hardware])
     print(markdown(rows))
     for r in rows:
         if r["dominant"] != "compute":

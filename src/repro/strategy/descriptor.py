@@ -63,6 +63,7 @@ DP_MODES = ("hsdp", "fsdp", "ddp")
 _ATTN_TOKENS = {"headtp": "head_tp", "ctx": "context"}
 _ATTN_FORMAT = {v: k for k, v in _ATTN_TOKENS.items()}
 _INT_TOKEN = re.compile(r"^(tp|cp|pp|ep|z|mb|ga)(\d+)$")
+PRECISION_TOKENS = tuple(cm.PRECISIONS)   # 'f32' | 'bf16' | 'fp8'
 
 
 class StrategyError(ValueError):
@@ -84,8 +85,18 @@ class Strategy:
     grad_accum: int = 1
     attn: Optional[str] = None       # None=auto | 'head_tp' | 'context'
     seq_parallel: bool = True        # Megatron-SP residual stream
+    precision: str = "f32"           # mixed-precision policy: 'f32' (pure
+                                     # f32 — what the lowering has always
+                                     # run), 'bf16' (bf16 compute/params,
+                                     # f32 master + grad reduce), or 'fp8'
+                                     # (bf16 compute, fp8 on the ZeRO
+                                     # all-gather wire).  Spec tokens
+                                     # ``_bf16`` / ``_fp8``.
 
     def __post_init__(self):
+        if self.precision not in PRECISION_TOKENS:
+            raise StrategyError(
+                f"precision {self.precision!r} not in {PRECISION_TOKENS}")
         if self.dp_mode not in DP_MODES:
             raise StrategyError(f"dp_mode {self.dp_mode!r} not in {DP_MODES}")
         for k in ("tp", "cp", "pp", "ep", "microbatches", "grad_accum"):
@@ -356,7 +367,8 @@ class Strategy:
             pipe="pipe" if self.pp > 1 else "",
             microbatches=self.microbatches if self.pp > 1 else 1,
             pipe_sched=self.sched,
-            expert="expert" if has_ep else "")
+            expert="expert" if has_ep else "",
+            precision=self.precision)
 
     # ---- lowering: cost model ----------------------------------------------
 
@@ -391,7 +403,7 @@ class Strategy:
             ep=self.ep,
             zero_stage=self.zero,
             microbatches=self.microbatches, sched=self.sched,
-            fsdp_group=fsdp_group)
+            fsdp_group=fsdp_group, precision=self.precision)
 
     # ---- spec strings ------------------------------------------------------
 
@@ -410,6 +422,8 @@ class Strategy:
             parts.append(f"ga{self.grad_accum}")
         if self.sched != "gpipe":
             parts.append(self.sched)
+        if self.precision != "f32":
+            parts.append(self.precision)
         if self.attn is not None:
             parts.append(_ATTN_FORMAT[self.attn])
         if not self.seq_parallel:
@@ -424,10 +438,10 @@ def parse(spec: str) -> Strategy:
     """Parse a compact spec string into a ``Strategy``.
 
     Grammar: ``<dp_mode>[_tp<k>][_cp<k>][_pp<k>][_ep<k>][_z<stage>][_mb<m>]
-    [_ga<g>][_gpipe|_1f1b][_headtp|_ctx][_nosp]`` with dp_mode in
-    {hsdp, fsdp, ddp}.  Examples: ``hsdp_tp4``, ``fsdp_cp8``,
+    [_ga<g>][_gpipe|_1f1b][_f32|_bf16|_fp8][_headtp|_ctx][_nosp]`` with
+    dp_mode in {hsdp, fsdp, ddp}.  Examples: ``hsdp_tp4``, ``fsdp_cp8``,
     ``fsdp_ep8``, ``hsdp_tp2_ep4``, ``fsdp_pp4_mb8_1f1b``, ``ddp``,
-    ``hsdp_tp4_ga2_nosp``.
+    ``fsdp_bf16``, ``hsdp_tp4_ga2_nosp``.
     """
     tokens = spec.strip().lower().split("_")
     if not tokens or tokens[0] not in DP_MODES:
@@ -449,12 +463,18 @@ def parse(spec: str) -> Strategy:
         if tok in _ATTN_TOKENS:
             kw["attn"] = _ATTN_TOKENS[tok]
             continue
+        if tok in PRECISION_TOKENS:
+            if "precision" in kw:
+                raise StrategyError(
+                    f"duplicate token {tok!r} in spec {spec!r}")
+            kw["precision"] = tok
+            continue
         m = _INT_TOKEN.match(tok)
         if not m:
             raise StrategyError(
                 f"bad token {tok!r} in spec {spec!r} (expected "
                 "tp<k>/cp<k>/pp<k>/ep<k>/z<s>/mb<m>/ga<g>/gpipe/1f1b/"
-                "headtp/ctx/nosp)")
+                "f32/bf16/fp8/headtp/ctx/nosp)")
         field = names[m.group(1)]
         if field in kw:
             raise StrategyError(f"duplicate token {tok!r} in spec {spec!r}")

@@ -98,6 +98,11 @@ def evaluate(cfg: ModelConfig, strategy: Strategy, topology: Topology,
 DEFAULT_PPS = (1, 2, 4, 8)
 DEFAULT_EPS = (1, 2, 4, 8)
 DEFAULT_SCHEDS = SCHEDULE_NAMES      # sweep every registered schedule
+# precision is a swept degree: same mesh, dtype-scaled byte/flops terms.
+# f32 is what the lowering has always run; bf16 halves params/acts on the
+# wire and doubles matmul throughput, which moves every comm-driven
+# crossover (EP/PP/FSDP).  fp8 (comm-only) is opt-in via precisions=.
+DEFAULT_PRECISIONS = ("f32", "bf16")
 
 
 def candidates(topology: Topology, global_batch: int,
@@ -108,7 +113,9 @@ def candidates(topology: Topology, global_batch: int,
                eps: Iterable[int] = DEFAULT_EPS,
                scheds: Sequence[str] = DEFAULT_SCHEDS,
                zero_stages: Iterable[Optional[int]] = (None,),
-               microbatches: int = 8) -> List[Strategy]:
+               microbatches: int = 8,
+               precisions: Sequence[str] = DEFAULT_PRECISIONS
+               ) -> List[Strategy]:
     """Enumerate distinct strategy descriptors viable on ``topology``.
 
     tp and cp share the model axis, so candidates use at most one of them
@@ -154,13 +161,15 @@ def candidates(topology: Topology, global_batch: int,
                             # sharded over (data, expert) — to_plan rejects
                             continue
                         for sched in (scheds if pp > 1 else ("gpipe",)):
-                            s = Strategy(dp_mode=mode, tp=tp, cp=cp, pp=pp,
-                                         ep=ep, zero_stage=zero,
-                                         microbatches=mb, sched=sched)
-                            if s.format() in seen:
-                                continue
-                            seen.add(s.format())
-                            out.append(s)
+                            for prec in precisions:
+                                s = Strategy(dp_mode=mode, tp=tp, cp=cp,
+                                             pp=pp, ep=ep, zero_stage=zero,
+                                             microbatches=mb, sched=sched,
+                                             precision=prec)
+                                if s.format() in seen:
+                                    continue
+                                seen.add(s.format())
+                                out.append(s)
     return out
 
 
@@ -175,6 +184,7 @@ def search(cfg: ModelConfig, topology: Topology, shape: ShapeConfig,
            scheds: Sequence[str] = DEFAULT_SCHEDS,
            zero_stages: Iterable[Optional[int]] = (None,),
            microbatches: int = 8,
+           precisions: Sequence[str] = DEFAULT_PRECISIONS,
            top: Optional[int] = None) -> List[PlannedStrategy]:
     """Rank executable strategies for (model, topology, shape).
 
@@ -196,7 +206,8 @@ def search(cfg: ModelConfig, topology: Topology, shape: ShapeConfig,
         eps = (1,)                 # ep is an MoE-only degree
     cands = candidates(topology, shape.global_batch, dp_modes=dp_modes,
                        tps=tps, cps=cps, pps=pps, eps=eps, scheds=scheds,
-                       zero_stages=zero_stages, microbatches=microbatches)
+                       zero_stages=zero_stages, microbatches=microbatches,
+                       precisions=precisions)
     out: List[PlannedStrategy] = []
     for s in cands:
         lowers = s.lowerable(topology, cfg)

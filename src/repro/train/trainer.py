@@ -63,23 +63,40 @@ def make_train_step(cfg: ModelConfig, rt: Runtime, tc: TrainConfig,
 
         if tc.grad_accum > 1:
             # split the local batch into microbatches along dim 0
-            def micro(i, acc):
-                g_acc, l_acc = acc
-                mb = jax.tree.map(
+            def slice_mb(i):
+                return jax.tree.map(
                     lambda x: jax.lax.dynamic_slice_in_dim(
                         x, i * (x.shape[0] // tc.grad_accum),
                         x.shape[0] // tc.grad_accum, 0)
                     if getattr(x, "ndim", 0) > 0 else x, batch)
-                (l, _), g = jax.value_and_grad(
-                    lambda p: tfm.loss_fn(cfg, p, mb, rt), has_aux=True)(params)
-                return (jax.tree.map(jnp.add, g_acc, g), l_acc + l)
 
-            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
-            grads, lsum = jax.lax.fori_loop(
-                0, tc.grad_accum, micro, (g0, jnp.zeros((), jnp.float32)))
+            def value_grad(mb):
+                return jax.value_and_grad(
+                    lambda p: tfm.loss_fn(cfg, p, mb, rt),
+                    has_aux=True)(params)
+
+            def micro(i, acc):
+                g_acc, l_acc, m_acc = acc
+                (l, m), g = value_grad(slice_mb(i))
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(a.dtype), g_acc, g)
+                m_acc = jax.tree.map(jnp.add, m_acc, m)
+                return (g_acc, l_acc + l, m_acc)
+
+            # microbatch 0 runs unrolled: its aux dict gives the fori_loop
+            # carry its structure, so the GA path returns the same metrics
+            # keys the GA=1 path does instead of discarding them
+            (l0, m0), g0 = value_grad(slice_mb(0))
+            g0 = jax.tree.map(lambda g: g.astype(rt.grad_dtype), g0)
+            grads, lsum, msum = jax.lax.fori_loop(
+                1, tc.grad_accum, micro, (g0, l0, m0))
             grads = jax.tree.map(lambda g: g / tc.grad_accum, grads)
             loss_val = lsum / tc.grad_accum
-            metrics: Dict[str, Any] = {}
+            # token counts add across microbatches; everything else is a
+            # per-microbatch mean
+            metrics: Dict[str, Any] = {
+                k: v if k == "ntok" else v / tc.grad_accum
+                for k, v in msum.items()}
         else:
             (loss_val, metrics), grads = jax.value_and_grad(
                 loss, has_aux=True)(params)
@@ -115,11 +132,21 @@ def place_train_state(cfg: ModelConfig, plan: par.ParallelPlan, params,
 def shard_train_state(cfg: ModelConfig, plan: par.ParallelPlan, key,
                       rt: Runtime):
     """Initialize params + opt state directly into their shardings."""
-    pshapes = jax.eval_shape(functools.partial(tfm.init_params, cfg), key)
+    def init(k):
+        p = tfm.init_params(cfg, k)
+        if rt.param_dtype != jnp.float32:
+            # storage-dtype policies (e.g. a pure-bf16 Runtime); the bf16
+            # mixed-precision policy keeps f32 master params so this is
+            # a no-op there
+            p = jax.tree.map(
+                lambda x: x.astype(rt.param_dtype)
+                if jnp.issubdtype(x.dtype, jnp.floating) else x, p)
+        return p
+
+    pshapes = jax.eval_shape(init, key)
     pshard = par.param_shardings(cfg, plan, pshapes)
 
-    params = jax.jit(functools.partial(tfm.init_params, cfg),
-                     out_shardings=pshard)(key)
+    params = jax.jit(init, out_shardings=pshard)(key)
     oshapes = jax.eval_shape(init_opt_state, pshapes)
     oshard = {"m": pshard, "v": pshard,
               "step": par.fitted(plan, par.P(), ())}
@@ -166,8 +193,19 @@ def train_loop(cfg: ModelConfig, plan: par.ParallelPlan, rt: Runtime,
         params, opt_state, pshard, oshard = shard_train_state(cfg, plan, key, rt)
         start_step = 0
         if tc.resume and tc.ckpt_dir:
-            params, opt_state, start_step, _ = _restore_state(
+            params, opt_state, start_step, meta = _restore_state(
                 tc, params, opt_state, pshard, oshard)
+            if meta.get("prng") is not None:
+                # save() wrote the raw key data; rebuild the key with the
+                # same impl so a resumed run draws the bits an
+                # uninterrupted one would (previously this was silently
+                # dropped and resume re-used the caller's key object)
+                kd = jnp.asarray(np.asarray(meta["prng"], dtype=np.uint32))
+                if jax.dtypes.issubdtype(key.dtype, jax.dtypes.prng_key):
+                    key = jax.random.wrap_key_data(
+                        kd, impl=jax.random.key_impl(key))
+                else:
+                    key = kd
         step_fn = make_train_step(cfg, rt, tc)
 
         checkpointer = None

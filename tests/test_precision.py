@@ -1,0 +1,321 @@
+"""Mixed precision as a strategy degree (PR 8).
+
+Covers the precision policy end-to-end: spec tokens -> descriptor ->
+plan -> Runtime dtypes; bf16 train-step numerics against f32; the
+dtype-aware cost-model byte terms; the pinned planner crossover that
+flips when precision changes; bit-stable bf16 resume; and the
+checkpoint dtype-exactness fixes that ride along.
+"""
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import strategy as strategy_lib
+from repro.checkpointing import checkpoint as ckpt_lib
+from repro.configs import ShapeConfig, get_config, reduced
+from repro.core import costmodel as cm
+from repro.core import parallel as par
+from repro.data import Batcher, SyntheticSource
+from repro.launch.specs import concrete_train_batch
+from repro.models import transformer as tfm
+from repro.optim import init_opt_state
+from repro.strategy.descriptor import StrategyError
+from repro.train.trainer import (TrainConfig, make_train_step,
+                                 place_train_state, train_loop)
+
+
+def _tiny_cfg(**kw):
+    return reduced(get_config("qwen3-0.6b"), n_layers=2, d_model=64, **kw)
+
+
+def _one_step(cfg, spec, shape, tc=None):
+    """Lower + run one train step under ``spec``'s precision policy."""
+    topo = strategy_lib.host_topology()
+    strat = strategy_lib.parse(spec)
+    plan = strat.to_plan(cfg, topo, shape)
+    rt = par.make_runtime(cfg, plan, shape, remat=False,
+                          attn_min_chunked_len=256)
+    key = jax.random.PRNGKey(0)
+    params = tfm.init_params(cfg, key)
+    batch = concrete_train_batch(cfg, shape.global_batch, shape.seq_len, key)
+    with par.use_mesh(plan.mesh):
+        ps, os_, bs, pshard, _ = place_train_state(
+            cfg, plan, params, init_opt_state(params), batch)
+        step = jax.jit(make_train_step(cfg, rt, tc or TrainConfig()),
+                       out_shardings=(pshard, None, None))
+        p2, _, metrics = step(ps, os_, bs)
+    return rt, p2, {k: float(v) for k, v in metrics.items()}
+
+
+# ---------------------------------------------------------------------------
+# spec tokens + policy lowering
+# ---------------------------------------------------------------------------
+
+def test_precision_spec_round_trip():
+    # f32 is the default and emits no token, so legacy specs round-trip
+    assert strategy_lib.parse("fsdp").precision == "f32"
+    assert strategy_lib.parse("fsdp").format() == "fsdp"
+    for spec, prec in (("fsdp_bf16", "bf16"), ("hsdp_tp2_fp8", "fp8"),
+                       ("fsdp_pp2_mb4_1f1b_bf16", "bf16")):
+        s = strategy_lib.parse(spec)
+        assert s.precision == prec
+        assert s.format() == spec
+        assert strategy_lib.parse(s.format()) == s
+
+
+def test_precision_spec_rejects():
+    with pytest.raises(StrategyError):
+        strategy_lib.parse("fsdp_bf16_fp8")        # duplicate degree
+    with pytest.raises(StrategyError):
+        strategy_lib.Strategy(dp_mode="fsdp", precision="fp16")
+    # cost-model side: unknown precision fails valid()
+    s = dataclasses.replace(cm.Strategy(8), precision="fp16")
+    assert not s.valid()
+
+
+def test_precision_policy_reaches_runtime():
+    cfg = _tiny_cfg()
+    shape = ShapeConfig("prec", 16, 4, "train")
+    topo = strategy_lib.host_topology()
+    cases = {
+        "fsdp": (jnp.float32, jnp.float32, False),
+        "fsdp_bf16": (jnp.float32, jnp.bfloat16, False),
+        "fsdp_fp8": (jnp.float32, jnp.bfloat16, True),
+    }
+    for spec, (pdt, cdt, gathers) in cases.items():
+        plan = strategy_lib.parse(spec).to_plan(cfg, topo, shape)
+        rt = par.make_runtime(cfg, plan, shape)
+        assert rt.param_dtype == pdt, spec
+        assert rt.compute_dtype == cdt, spec
+        # fp8 comms only exist on the per-layer gather path, so the
+        # policy turns it on by default
+        assert (rt.gather_params is not None) == gathers, spec
+    assert par.PRECISION_POLICIES["fp8"].comm_dtype == "float8_e4m3fn"
+
+
+# ---------------------------------------------------------------------------
+# train-step numerics
+# ---------------------------------------------------------------------------
+
+def test_bf16_train_step_numerics_match_f32():
+    cfg = _tiny_cfg()
+    shape = ShapeConfig("prec", 32, 4, "train")
+    rt32, p32, m32 = _one_step(cfg, "fsdp", shape)
+    rt16, p16, m16 = _one_step(cfg, "fsdp_bf16", shape)
+    assert rt32.compute_dtype == jnp.float32
+    assert rt16.compute_dtype == jnp.bfloat16
+    # bf16 forward/backward tracks f32 closely at init scale; master
+    # params stay f32 so the update applies at full precision
+    assert m16["loss"] == pytest.approx(m32["loss"], rel=2e-2)
+    assert np.isfinite(m16["grad_norm"]) and m16["grad_norm"] > 0
+    for leaf in jax.tree.leaves(p16):
+        assert leaf.dtype == jnp.float32
+        assert bool(jnp.all(jnp.isfinite(leaf)))
+
+
+def test_fp8_comm_train_step_runs_and_is_finite():
+    cfg = _tiny_cfg()
+    shape = ShapeConfig("prec", 32, 4, "train")
+    _, params, m = _one_step(cfg, "fsdp_fp8", shape)
+    assert np.isfinite(m["loss"])
+    for leaf in jax.tree.leaves(params):
+        assert bool(jnp.all(jnp.isfinite(leaf)))
+
+
+def test_grad_accum_returns_full_metrics():
+    """The GA>1 branch used to return metrics={} — aux/nll/ntok were
+    silently dropped from logs whenever gradient accumulation was on."""
+    cfg = _tiny_cfg()
+    shape = ShapeConfig("prec", 32, 4, "train")
+    _, p1, m1 = _one_step(cfg, "fsdp", shape)
+    _, p2, m2 = _one_step(cfg, "fsdp", shape, TrainConfig(grad_accum=2))
+    assert sorted(m1) == sorted(m2)
+    assert m2["ntok"] == m1["ntok"]            # token counts sum, not mean
+    assert m2["loss"] == pytest.approx(m1["loss"], rel=1e-3)
+    assert m2["nll"] == pytest.approx(m1["nll"], rel=1e-3)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-5)
+
+
+# ---------------------------------------------------------------------------
+# dtype-aware cost model
+# ---------------------------------------------------------------------------
+
+def test_costmodel_bytes_scale_with_precision():
+    cfg = get_config("llama2-7b")
+    hw = cm.HARDWARE["TPUv5e"]
+    base = cm.Strategy(256, zero_stage=3)
+    r = {p: cm.step_time(cfg, hw, dataclasses.replace(base, precision=p),
+                         1024, 2048) for p in ("f32", "bf16", "fp8")}
+    ag = {p: r[p].comm_breakdown["fsdp_ag"] for p in r}
+    rs = {p: r[p].comm_breakdown["fsdp_rs"] for p in r}
+    # gather wire: f32 params are 2x bf16; emulated fp8 halves bf16 again
+    assert ag["f32"] == pytest.approx(2 * ag["bf16"], rel=1e-6)
+    assert ag["bf16"] == pytest.approx(2 * ag["fp8"], rel=1e-6)
+    # grads reduce in f32 under every policy: same absolute bytes
+    assert rs["f32"] == pytest.approx(rs["bf16"], rel=1e-6)
+    assert rs["bf16"] == pytest.approx(rs["fp8"], rel=1e-6)
+    # f32 matmuls run at half the bf16 peak
+    assert r["f32"].t_compute == pytest.approx(2 * r["bf16"].t_compute,
+                                               rel=1e-6)
+    # f32 activations + fp32-stored params cost more memory
+    assert r["f32"].memory_per_device > r["bf16"].memory_per_device
+    # checkpoint bytes follow the param storage dtype
+    assert cm.checkpoint_bytes(cfg, precision="f32") > \
+        cm.checkpoint_bytes(cfg, precision="bf16")
+
+
+def test_planner_sweeps_precision_by_default():
+    cfg = get_config("llama2-7b")
+    hw = cm.HARDWARE["TPUv5e"]
+    topo = strategy_lib.Topology("pod", 256, hw.island, hardware=hw.name,
+                                 hbm=16e9)
+    shape = ShapeConfig("prec", 2048, 1024, "train")
+    ranked = strategy_lib.search(cfg, topo, shape, tps=(1,), cps=(1,),
+                                 pps=(1,), eps=(1,), require_lowerable=False,
+                                 require_fits=False)
+    precs = {p.strategy.precision for p in ranked}
+    assert precs == {"f32", "bf16"}
+    # at bandwidth-bound scale bf16 dominates the same mesh (half the
+    # wire bytes, double the matmul rate): the top pick is a bf16 point
+    assert ranked[0].strategy.precision == "bf16"
+
+
+def test_precision_flips_planner_frontier():
+    """Pinned crossover: llama2-70b on 2048 H100s.  At f32, compute is
+    slow enough that cp8's ring traffic fully overlaps — context
+    parallelism wins.  At bf16 the matmuls run 2x faster, the same comm
+    no longer hides, and the flat HSDP mesh takes the frontier.  The
+    sharding decision depends on the numeric format — the planner must
+    sweep precision to see it."""
+    cfg = get_config("llama2-70b")
+    hw = cm.HARDWARE["H100"]
+    topo = strategy_lib.Topology("flip", 2048, hw.island,
+                                 hardware=hw.name, hbm=80e9)
+    shape = ShapeConfig("flip", 4096, 4096, "train")
+
+    def wps(spec):
+        return strategy_lib.evaluate(
+            cfg, strategy_lib.parse(spec), topo, shape).wps
+
+    assert wps("hsdp_cp8") > wps("hsdp")                   # f32: cp8 wins
+    assert wps("hsdp_bf16") > wps("hsdp_cp8_bf16")         # bf16: flat wins
+
+    kw = dict(tps=(1,), cps=(1, 8), pps=(1,), eps=(1,),
+              require_lowerable=False, require_fits=False)
+    top_f32 = strategy_lib.search(cfg, topo, shape,
+                                  precisions=("f32",), **kw)[0].spec
+    top_bf16 = strategy_lib.search(cfg, topo, shape,
+                                   precisions=("bf16",), **kw)[0].spec
+    assert top_f32 == "hsdp_cp8"
+    assert top_bf16 == "hsdp_bf16"
+
+
+# ---------------------------------------------------------------------------
+# bf16 resume + PRNG restore
+# ---------------------------------------------------------------------------
+
+def _make_batches(cfg):
+    return Batcher(SyntheticSource(cfg.vocab_size, seed=7), 16, 4)
+
+
+def test_bf16_resume_bitmatches_uninterrupted(tmp_path):
+    cfg = _tiny_cfg()
+    shape = ShapeConfig("prec", 16, 4, "train")
+    topo = strategy_lib.host_topology()
+    plan = strategy_lib.parse("fsdp_bf16").to_plan(cfg, topo, shape)
+    rt = par.make_runtime(cfg, plan, shape)
+    assert rt.compute_dtype == jnp.bfloat16
+    key = jax.random.PRNGKey(0)
+
+    tc_a = TrainConfig(steps=4, warmup=1, log_every=100)
+    p_a, _, _ = train_loop(cfg, plan, rt, tc_a, _make_batches(cfg), key=key)
+
+    ckpt_dir = str(tmp_path / "ckpt")
+    tc_b1 = TrainConfig(steps=2, warmup=1, log_every=100, ckpt_every=2,
+                        ckpt_dir=ckpt_dir)
+    train_loop(cfg, plan, rt, tc_b1, _make_batches(cfg), key=key)
+    meta = ckpt_lib.load_meta(ckpt_dir, 2)
+    assert meta.get("prng") is not None        # PRNG key travels in meta
+    tc_b2 = TrainConfig(steps=4, warmup=1, log_every=100, ckpt_every=2,
+                        ckpt_dir=ckpt_dir, resume=True)
+    p_b, _, _ = train_loop(cfg, plan, rt, tc_b2, _make_batches(cfg), key=key)
+
+    for a, b in zip(jax.tree.leaves(jax.device_get(p_a)),
+                    jax.tree.leaves(jax.device_get(p_b))):
+        assert np.array_equal(a, b)
+
+
+def test_prng_key_wrap_round_trips():
+    """The restore path in train_loop: key data saved as a plain list must
+    rebuild the same key for both typed and raw-uint32 keys."""
+    typed = jax.random.key(123)
+    kd = np.asarray(jax.random.key_data(typed)).tolist()
+    back = jax.random.wrap_key_data(
+        jnp.asarray(np.asarray(kd, dtype=np.uint32)),
+        impl=jax.random.key_impl(typed))
+    assert np.array_equal(jax.random.key_data(typed),
+                          jax.random.key_data(back))
+    raw = jax.random.PRNGKey(123)
+    assert np.array_equal(
+        np.asarray(raw),
+        np.asarray(jnp.asarray(np.asarray(np.asarray(raw).tolist(),
+                                          dtype=np.uint32))))
+
+
+# ---------------------------------------------------------------------------
+# checkpoint dtype exactness (satellite bugfix)
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_extended_dtype_round_trip(tmp_path):
+    tree = {
+        "bf16": jnp.arange(8, dtype=jnp.float32).astype(jnp.bfloat16),
+        "fp8": jnp.asarray([1.0, -2.0, 0.5]).astype(jnp.float8_e4m3fn),
+        "f16": jnp.asarray([1.5, 2.5], jnp.float16),
+        "i8": jnp.asarray([-1, 2, -3], jnp.int8),
+        "u8": jnp.asarray([1, 2, 250], jnp.uint8),
+    }
+    ckpt_lib.save_checkpoint(str(tmp_path), 1, tree)
+    out = ckpt_lib.restore_checkpoint(str(tmp_path), 1, tree)
+    for k in tree:
+        a, b = np.asarray(tree[k]), np.asarray(out[k])
+        assert a.dtype == b.dtype, k
+        assert np.array_equal(a.view(np.uint8), b.view(np.uint8)), k
+
+
+def test_checkpoint_rejects_conflated_dtypes(tmp_path):
+    """'int8' is a substring of 'uint8' (and 'float16' of 'bfloat16'):
+    the old substring check silently loaded the wrong dtype.  A manifest
+    dtype the stored bits cannot hold must raise."""
+    tree = {"u8": jnp.asarray([1, 2, 250], jnp.uint8),
+            "f16": jnp.asarray([1.5, 2.5], jnp.float16)}
+    ckpt_lib.save_checkpoint(str(tmp_path), 1, tree)
+    man_path = os.path.join(str(tmp_path), "step_00000001", "manifest.json")
+    with open(man_path) as f:
+        man = json.load(f)
+    man["leaves"]["u8"]["dtype"] = "int8"        # uint8 bits, int8 claim
+    man["leaves"]["f16"]["dtype"] = "bfloat16"   # float16 bits, bf16 claim
+    with open(man_path, "w") as f:
+        json.dump(man, f)
+    with pytest.raises(ckpt_lib.CheckpointError) as ei:
+        ckpt_lib.restore_checkpoint(str(tmp_path), 1, tree)
+    assert "u8" in str(ei.value) and "f16" in str(ei.value)
+
+
+# ---------------------------------------------------------------------------
+# roofline follows the hardware profile (satellite bugfix)
+# ---------------------------------------------------------------------------
+
+def test_roofline_peaks_come_from_hardware_profile():
+    from repro.perf import roofline
+    # the v5e default reproduces the former hard-coded constants exactly
+    assert roofline._peaks(None) == (197e12, 819e9, 50e9)
+    hw = cm.HARDWARE["H100"]
+    peak, hbm, link = roofline._peaks(hw)
+    assert (peak, hbm) == (hw.flops_bf16, hw.hbm_bw)
+    assert link == hw.intra_bw / hw.rings

@@ -172,11 +172,14 @@ def _kernel_microbenchmarks(out_path: str = "results/benchmarks/BENCH_kernels.js
     return summary
 
 
-def _measure_strategy_step(cfg, spec: str, shape, n_iter: int = 3):
+def _measure_strategy_step(cfg, spec: str, shape, n_iter: int = 3,
+                           topo=None):
     """Shared sweep harness: lower ``spec`` for (cfg, host topology),
     execute one compiled train step best-of-``n_iter``, and return
     (strat, report, plan, rt, row) where ``row`` carries the common
-    predicted/measured fields — the pp/ep sweeps add their own columns."""
+    predicted/measured fields — the pp/ep sweeps add their own columns.
+    ``topo`` overrides the default all-host-devices topology (the drift
+    report measures a 1-device baseline)."""
     import jax
     from repro import strategy as strategy_lib
     from repro.core import parallel as par
@@ -186,7 +189,7 @@ def _measure_strategy_step(cfg, spec: str, shape, n_iter: int = 3):
     from repro.train.trainer import (TrainConfig, make_train_step,
                                      place_train_state)
 
-    topo = strategy_lib.host_topology()
+    topo = topo if topo is not None else strategy_lib.host_topology()
     key = jax.random.PRNGKey(0)
     strat = strategy_lib.parse(spec)
     report = strategy_lib.evaluate(cfg, strat, topo, shape)
@@ -744,6 +747,97 @@ def _strategy_benchmark(spec: str, hw_name: str, gpus: int, global_batch: int,
              f"{hw_name}x{gpus}_wps{r.wps:.0f}_mfu{r.mfu:.3f}")]
 
 
+def _drift_report(out_path: str = "results/benchmarks/BENCH_drift.json",
+                  tel_dir: str = "results/telemetry",
+                  specs=("fsdp", "fsdp_tp2"), n_iter: int = 3):
+    """Predicted-vs-measured drift per cost-model term — the measured
+    half of the measure<->model calibration loop (ROADMAP item).
+
+    Differential probe on 8 virtual CPU devices: the same reduced model
+    runs one optimizer step (a) on a **single** device (no collectives —
+    its wall time stands in for the measured compute term) and (b) under
+    each sharded spec.  measured collective ~= t_spec - t_single, the
+    same two-point logic as the pipeline bubble probe.  Each spec's
+    :class:`repro.telemetry.DriftMonitor` diffs that against
+    ``StepReport.decomposition()`` and the per-term
+    ``predicted_over_measured`` ratios land in BENCH_drift.json plus
+    per-spec reports, a JSONL event stream, and a Perfetto trace under
+    ``results/telemetry/`` (CI schema-checks and uploads them).
+
+    On CPU hosts the *ratios* are apples-to-oranges against the H100
+    profile (that gap is exactly what hardware-profile calibration will
+    fit); what must hold structurally is that both compute and
+    collective terms get a measured value and a ratio.
+    """
+    from repro.launch.devices import force_host_device_count
+    force_host_device_count(8)
+    import jax
+    from repro import strategy as strategy_lib
+    from repro import telemetry as tel
+    from repro.configs import ShapeConfig, get_config, reduced
+
+    cfg = reduced(get_config("qwen3-0.6b"), n_layers=4)
+    shape = ShapeConfig("drift", 128, 16, "train")
+    os.makedirs(tel_dir, exist_ok=True)
+    recorder = tel.Recorder()
+    recorder.add_sink(tel.JsonlSink(
+        os.path.join(tel_dir, "drift_events.jsonl")))
+    recorder.add_sink(tel.ChromeTraceSink(
+        os.path.join(tel_dir, "drift_trace.json"),
+        process_name="drift-report"))
+
+    topo1 = strategy_lib.host_topology(n_devices=1)
+    with recorder.span("drift/baseline_1dev"):
+        _, _, _, _, row1 = _measure_strategy_step(cfg, "ddp", shape,
+                                                  n_iter, topo=topo1)
+    t_single = row1["measured_t_step_s"]
+    recorder.gauge("drift/measured_compute_s", t_single)
+
+    rows, summary = [], []
+    for spec in specs:
+        with recorder.span("drift/measure", spec=spec):
+            strat, report, plan, rt, row = _measure_strategy_step(
+                cfg, spec, shape, n_iter)
+        t_spec = row["measured_t_step_s"]
+        coll_raw = t_spec - t_single
+        measured = {
+            "step": t_spec,
+            "compute": t_single,
+            # floored so the collective term always yields a ratio; the
+            # raw (possibly ~0) delta is recorded alongside
+            "collective": max(coll_raw, 1e-6),
+        }
+        monitor = tel.DriftMonitor(
+            report.decomposition(), telemetry=recorder,
+            meta={"spec": spec, "arch": cfg.name,
+                  "predicted_hw": row["predicted_hw"],
+                  "measured_backend": row["measured_backend"],
+                  "probe": "differential-1dev-baseline",
+                  "n_iter": n_iter})
+        window = monitor.observe(measured, n_steps=n_iter)
+        monitor.write(os.path.join(tel_dir, f"drift_{spec}.json"))
+        ratios = window["predicted_over_measured"]
+        row.update(measured_compute_s=t_single,
+                   measured_collective_raw_s=round(coll_raw, 6),
+                   predicted=report.decomposition(),
+                   measured=measured,
+                   predicted_over_measured=ratios)
+        rows.append(row)
+        summary.append((
+            f"drift_{spec}", t_spec * 1e6,
+            "pred/meas:" + ";".join(
+                f"{t}={ratios[t]:.3g}" for t in
+                ("step", "compute", "collective") if ratios.get(t))))
+    recorder.close()
+    _write_bench(out_path, {
+        "backend": jax.default_backend(),
+        "baseline_spec": "ddp@1dev",
+        "baseline_t_step_s": t_single,
+        "telemetry_dir": tel_dir,
+        "rows": rows}, len(rows))
+    return summary
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--strategy", default="auto",
@@ -801,6 +895,16 @@ def main() -> None:
                          "write BENCH_precision.json")
     ap.add_argument("--precision_json",
                     default="results/benchmarks/BENCH_precision.json")
+    ap.add_argument("--drift-report", dest="drift_report",
+                    action="store_true",
+                    help="only run the predicted-vs-measured drift probe "
+                         "(cost-model step/compute/collective terms vs a "
+                         "differential 1-device-baseline measurement on 8 "
+                         "virtual devices) and write BENCH_drift.json + "
+                         "results/telemetry/ artifacts")
+    ap.add_argument("--drift_json",
+                    default="results/benchmarks/BENCH_drift.json")
+    ap.add_argument("--telemetry_dir", default="results/telemetry")
     args = ap.parse_args()
 
     if args.micro_kernels:
@@ -840,6 +944,13 @@ def main() -> None:
 
     if args.precision_sweep:
         rows = _precision_sweep(args.precision_json)
+        print("name,us_per_call,derived")
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},{derived}")
+        return
+
+    if args.drift_report:
+        rows = _drift_report(args.drift_json, args.telemetry_dir)
         print("name,us_per_call,derived")
         for name, us, derived in rows:
             print(f"{name},{us:.1f},{derived}")

@@ -371,6 +371,30 @@ class StepReport:
                  dp=s.dp, sched=s.sched, precision=s.precision)
         return d
 
+    def decomposition(self) -> Dict[str, float]:
+        """Per-term step-time decomposition (seconds per step).
+
+        This is the predicted side of the telemetry DriftMonitor's
+        predicted-vs-measured comparison: ``step`` is the modeled wall
+        time, ``compute`` the math term, ``collective`` the *exposed*
+        communication (what a measured step actually pays), ``bubble``
+        the schedule residual, plus a ``comm/<kind>`` entry per nonzero
+        collective in the breakdown.
+        """
+        bubble = max(0.0, self.t_step - self.t_compute
+                     - self.t_comm_exposed)
+        d = {
+            "step": self.t_step,
+            "compute": self.t_compute,
+            "collective": self.t_comm_exposed,
+            "comm_total": self.t_comm_total,
+            "bubble": bubble,
+        }
+        for k, v in self.comm_breakdown.items():
+            if v:
+                d[f"comm/{k}"] = v
+        return d
+
 
 def _model_bytes(cfg: ModelConfig, dtype_bytes: int = 2) -> float:
     return cfg.param_count() * dtype_bytes

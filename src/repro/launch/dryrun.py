@@ -206,7 +206,10 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
             rt_overrides=None, donate: bool = False,
             seq_parallel: bool = True, grad_accum: int = 1,
             strategy: str = "", topology: str = "",
-            use_reduced: bool = False, measure_bubble: bool = False):
+            use_reduced: bool = False, measure_bubble: bool = False,
+            telemetry=None):
+    from repro import telemetry as tel
+    telemetry = telemetry if telemetry is not None else tel.NULL
     mesh_name, label = run_label(arch, shape_name, multi_pod, strategy, tag,
                                  topology)
     cfg = get_config(arch)
@@ -223,13 +226,15 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
     try:
         from repro.core.expert import dispatch_stats_snapshot
         stats0 = dispatch_stats_snapshot()
-        cfg, shape, strat, plan, lowered = lower_one(
-            arch, shape_name, multi_pod, dp_mode, attn_override,
-            rt_overrides, donate, seq_parallel, grad_accum, strategy,
-            topology, use_reduced)
+        with telemetry.span("dryrun/lower", label=label):
+            cfg, shape, strat, plan, lowered = lower_one(
+                arch, shape_name, multi_pod, dp_mode, attn_override,
+                rt_overrides, donate, seq_parallel, grad_accum, strategy,
+                topology, use_reduced)
         t_lower = time.time() - t0
         t0 = time.time()
-        compiled = lowered.compile()
+        with telemetry.span("dryrun/compile", label=label):
+            compiled = lowered.compile()
         t_compile = time.time() - t0
 
         mem = compiled.memory_analysis()
@@ -390,6 +395,9 @@ def main():
     ap.add_argument("--kernels", default="", choices=["", "jnp", "pallas"],
                     help="attention/norm impl override ('' keeps Runtime "
                          "defaults)")
+    ap.add_argument("--trace", default="",
+                    help="write per-config lower/compile spans as a "
+                         "Chrome-trace/Perfetto JSON here")
     args = ap.parse_args()
     rt_overrides = {}
     if args.kernels:
@@ -414,6 +422,13 @@ def main():
     else:
         meshes = [args.multi_pod]
 
+    from repro import telemetry as tel
+    recorder = tel.NULL
+    if args.trace:
+        recorder = tel.Recorder()
+        recorder.add_sink(tel.ChromeTraceSink(args.trace,
+                                              process_name="dryrun"))
+
     n_fail = 0
     for arch in archs:
         for shape in shapes:
@@ -430,8 +445,11 @@ def main():
                               args.attn, args.tag, rt_overrides, args.donate,
                               not args.no_sp, args.grad_accum, args.strategy,
                               args.topology, args.reduced,
-                              args.measure_bubble)
+                              args.measure_bubble, telemetry=recorder)
                 n_fail += rec["status"] == "error"
+    recorder.close()
+    if args.trace:
+        print(f"[telemetry] trace written to {args.trace}")
     raise SystemExit(1 if n_fail else 0)
 
 

@@ -48,6 +48,11 @@ def main():
                          "cache per-token loop")
     ap.add_argument("--n_slots", type=int, default=8,
                     help="in-flight batch bound of the paged engine")
+    ap.add_argument("--trace", default="",
+                    help="write a Chrome-trace/Perfetto JSON of engine "
+                         "ticks/prefill/decode spans here")
+    ap.add_argument("--metrics_jsonl", default="",
+                    help="stream every telemetry event as JSONL here")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -80,8 +85,18 @@ def main():
         rt = Runtime(rwkv_chunk=16, mamba_chunk=32, moe_impl="auto",
                      attn_impl=args.kernels, norm_impl=args.kernels)
         params = init_params(cfg, key)
+    from repro import telemetry as tel
+    recorder = tel.NULL
+    if args.trace or args.metrics_jsonl:
+        recorder = tel.Recorder()
+        if args.metrics_jsonl:
+            recorder.add_sink(tel.JsonlSink(args.metrics_jsonl))
+        if args.trace:
+            recorder.add_sink(tel.ChromeTraceSink(
+                args.trace, process_name=f"serve {cfg.name}"))
     engine = ServeEngine(cfg, params, rt, max_len=max_len, plan=plan,
-                         seed=args.seed, n_slots=args.n_slots)
+                         seed=args.seed, n_slots=args.n_slots,
+                         telemetry=recorder)
     if args.engine == "paged" and not engine.paged_ok:
         raise SystemExit("--engine paged needs a single-device plan and an "
                          "attention-only stack")
@@ -103,6 +118,19 @@ def main():
           f"({args.batch * args.n_new / dt:.1f} tok/s on "
           f"{jax.default_backend()})")
     print("first sequence tail:", out[0, -min(16, args.n_new):].tolist())
+    if recorder is not tel.NULL:
+        snap = recorder.metrics.snapshot()
+        lat = snap.get("serve/token_latency_s")
+        if lat and lat.get("count"):
+            print(f"[telemetry] token latency p50 {lat['p50'] * 1e3:.2f}ms "
+                  f"p99 {lat['p99'] * 1e3:.2f}ms over {lat['count']} tokens")
+        ttft = snap.get("serve/ttft_s")
+        if ttft and ttft.get("count"):
+            print(f"[telemetry] ttft p50 {ttft['p50'] * 1e3:.2f}ms "
+                  f"p99 {ttft['p99'] * 1e3:.2f}ms")
+        recorder.close()
+        if args.trace:
+            print(f"[telemetry] trace written to {args.trace}")
     assert out.shape == (args.batch, args.prompt_len + args.n_new)
 
 

@@ -99,6 +99,17 @@ def main():
                          "JSON path")
     ap.add_argument("--event_log", default="",
                     help="write the supervisor's structured event log here")
+    # observability: spans + metrics to pluggable sinks (see README
+    # "Observability"); all three default off and cost nothing when off
+    ap.add_argument("--trace", default="",
+                    help="write a Chrome-trace/Perfetto JSON of the run's "
+                         "spans here (open at ui.perfetto.dev)")
+    ap.add_argument("--metrics_jsonl", default="",
+                    help="stream every telemetry event (spans, counters, "
+                         "gauges, histograms) as JSONL here")
+    ap.add_argument("--drift_report", default="",
+                    help="write per-window predicted-vs-measured step-time "
+                         "drift (cost model vs telemetry spans) here")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -153,6 +164,36 @@ def main():
         from repro.resilience import load_fault_plan
         fault_plan = load_fault_plan(args.fault_plan)
 
+    from repro import telemetry as tel
+    recorder = tel.NULL
+    if args.trace or args.metrics_jsonl or args.drift_report:
+        recorder = tel.Recorder()
+        if args.metrics_jsonl:
+            recorder.add_sink(tel.JsonlSink(args.metrics_jsonl))
+        if args.trace:
+            recorder.add_sink(tel.ChromeTraceSink(
+                args.trace, process_name=f"train {cfg.name}"))
+    drift = None
+    if args.drift_report:
+        # predicted side: the cost model's decomposition for the resolved
+        # strategy; measured side arrives from train_loop's log windows
+        report = planned.report if planned is not None else \
+            strategy_lib.evaluate(cfg, strat, topo, shape)
+        hw = topo.hw
+        drift = tel.DriftMonitor(
+            report.decomposition(), telemetry=recorder,
+            meta={"spec": strat.format(), "topology": topo.name,
+                  "hardware": topo.hardware, "arch": cfg.name,
+                  "seq_len": args.seq_len,
+                  "global_batch": args.global_batch,
+                  # invert mfu = model_flops / (t_step * n * peak) so the
+                  # trainer can gauge measured MFU without re-deriving
+                  "model_flops_per_step":
+                      report.mfu * report.t_step
+                      * topo.n_devices * hw.flops_bf16,
+                  "cluster_peak_flops":
+                      topo.n_devices * hw.flops_bf16})
+
     if args.max_restarts > 0:
         from repro.resilience.supervisor import (SupervisorConfig,
                                                  supervise_training)
@@ -166,7 +207,8 @@ def main():
             rt_overrides=rt_overrides, key=jax.random.PRNGKey(args.seed),
             fault_plan=fault_plan,
             sup_cfg=SupervisorConfig(max_restarts=args.max_restarts,
-                                     event_log_path=args.event_log))
+                                     event_log_path=args.event_log),
+            telemetry=recorder, drift=drift)
         n_failures = sum(e["kind"] == "failure" for e in sup.events)
         if n_failures:
             print(f"[supervisor] recovered from {n_failures} failure(s)"
@@ -175,7 +217,17 @@ def main():
     else:
         params, opt_state, history = train_loop(
             cfg, plan, rt, tc, make_batches(),
-            key=jax.random.PRNGKey(args.seed), fault_plan=fault_plan)
+            key=jax.random.PRNGKey(args.seed), fault_plan=fault_plan,
+            telemetry=recorder, drift=drift)
+    recorder.close()
+    if args.trace:
+        print(f"[telemetry] trace written to {args.trace}")
+    if args.drift_report and drift is not None:
+        drift.write(args.drift_report)
+        mean = drift.summary()["mean_predicted_over_measured"]
+        terms = ", ".join(f"{t}={r:.3g}" for t, r in mean.items())
+        print(f"[telemetry] drift report -> {args.drift_report}"
+              + (f" (predicted/measured: {terms})" if terms else ""))
     losses = [h["loss"] for h in history]
     print(f"done: loss {losses[0]:.4f} -> {losses[-1]:.4f} "
           f"over {args.steps} steps")

@@ -3,6 +3,11 @@ benchmark CSVs.  §Perf prose lives in results/perf_log.md (hand-written
 during the hillclimb iterations) and is inlined verbatim.
 
     PYTHONPATH=src python -m repro.perf.report > EXPERIMENTS.md
+
+All ``results/...`` inputs resolve against the repo root (perf/paths.py),
+so the report builds identically from any working directory; a build
+that matches **zero** ok dry-run records exits non-zero instead of
+silently emitting empty tables.
 """
 from __future__ import annotations
 
@@ -10,13 +15,21 @@ import csv
 import glob
 import json
 import os
+import sys
 
 from repro.perf import roofline
+from repro.perf.paths import results_path
+
+# counts every ok dryrun record seen while building; main() refuses to
+# emit a report built from nothing
+_N_OK_DRYRUN = 0
 
 
 def _dryrun_table(mesh: str) -> str:
+    global _N_OK_DRYRUN
     rows = []
-    for path in sorted(glob.glob(f"results/dryrun/*_{mesh}.json")):
+    for path in sorted(glob.glob(results_path("dryrun",
+                                              f"*_{mesh}.json"))):
         with open(path) as f:
             r = json.load(f)
         if r["status"] == "skipped":
@@ -27,6 +40,7 @@ def _dryrun_table(mesh: str) -> str:
             rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | "
                         f"**ERROR** {r.get('error','')[:80]} |")
             continue
+        _N_OK_DRYRUN += 1
         mem = r["memory"]
         per_dev_gib = (mem["argument_bytes_per_device"]
                        + mem["temp_bytes_per_device"]) / 2**30
@@ -45,7 +59,8 @@ def _collective_detail(mesh: str) -> str:
     out = ["| arch | shape | all-gather | all-reduce | reduce-scatter | "
            "all-to-all | collective-permute |",
            "|---|---|---|---|---|---|---|"]
-    for path in sorted(glob.glob(f"results/dryrun/*_{mesh}.json")):
+    for path in sorted(glob.glob(results_path("dryrun",
+                                              f"*_{mesh}.json"))):
         with open(path) as f:
             r = json.load(f)
         if r.get("status") != "ok":
@@ -63,7 +78,7 @@ def _collective_detail(mesh: str) -> str:
 
 def _benchmark_summaries() -> str:
     out = []
-    for path in sorted(glob.glob("results/benchmarks/*.csv")):
+    for path in sorted(glob.glob(results_path("benchmarks", "*.csv"))):
         name = os.path.basename(path)[:-4]
         with open(path) as f:
             rows = list(csv.reader(f))
@@ -77,7 +92,7 @@ def _benchmark_summaries() -> str:
 
 
 def _perf_log() -> str:
-    path = "results/perf_log.md"
+    path = results_path("perf_log.md")
     if os.path.exists(path):
         with open(path) as f:
             return f.read()
@@ -197,6 +212,22 @@ quadratic terms, and dense-layer overheads per arch.
 
     parts.append("\n## §Benchmarks — per-figure outputs (cost model)\n")
     parts.append(_benchmark_summaries())
+    parts.append("\n## §Telemetry — measured-run artifacts\n")
+    parts.append(
+        "Instrumented runs (`--trace`, `--metrics_jsonl`, "
+        "`--drift_report`; `benchmarks/run.py --drift-report`) write "
+        "under `results/telemetry/`: Chrome-trace/Perfetto JSONs of "
+        "host spans, JSONL event streams (schema-checked in CI via "
+        "`python -m repro.telemetry`), and drift reports comparing the "
+        "cost model's per-term step-time decomposition against "
+        "measured windows (`predicted_over_measured` per "
+        "compute/collective/bubble term).  See README \"Observability\".\n")
+    if _N_OK_DRYRUN == 0:
+        print("ERROR: no ok dryrun records matched under "
+              f"{results_path('dryrun')} — run "
+              "`python -m repro.launch.dryrun` first (the report would "
+              "be built entirely from empty tables)", file=sys.stderr)
+        raise SystemExit(1)
     print("\n".join(parts))
 
 

@@ -28,6 +28,7 @@ from repro.configs import SHAPES, get_config
 from repro.core import costmodel as cm
 from repro.perf import bytes as bytes_lib
 from repro.perf import flops as flops_lib
+from repro.perf.paths import from_root
 
 DEFAULT_HW = cm.HARDWARE["TPUv5e"]
 
@@ -51,7 +52,10 @@ def load_records(out_dir: str = "results/dryrun", mesh: str = "pod16x16",
                  tag: str = "") -> List[Dict]:
     recs = []
     suffix = f"_{mesh}" + (f"_{tag}" if tag else "") + ".json"
-    for path in sorted(glob.glob(os.path.join(out_dir, "*" + suffix))):
+    # relative out_dirs anchor at the repo root, not the cwd — running
+    # the roofline from elsewhere must not silently find zero records
+    for path in sorted(glob.glob(os.path.join(from_root(out_dir),
+                                              "*" + suffix))):
         base = os.path.basename(path)[: -len(suffix)]
         if not tag and len(base.split("_")) > 2 and base.count("_") > 1:
             pass
@@ -142,6 +146,14 @@ def main():
     args = ap.parse_args()
     rows = table(args.out, args.mesh, args.tag,
                  hw=cm.HARDWARE[args.hardware])
+    if not rows:
+        import sys
+        print(f"ERROR: no ok dryrun records under {from_root(args.out)} "
+              f"for mesh {args.mesh!r}"
+              + (f" tag {args.tag!r}" if args.tag else "")
+              + " — run `python -m repro.launch.dryrun` first",
+              file=sys.stderr)
+        raise SystemExit(1)
     print(markdown(rows))
     for r in rows:
         if r["dominant"] != "compute":

@@ -27,6 +27,7 @@ import time
 from typing import Any, Callable, Dict, List, Optional
 
 from repro.resilience.faults import SimulatedFailure
+from repro import telemetry as tel
 
 
 class RestartBudgetExceeded(RuntimeError):
@@ -46,9 +47,11 @@ class SupervisorConfig:
 class Supervisor:
     """Retry loop with backoff, checkpoint fallback, and elastic re-plan."""
 
-    def __init__(self, config: SupervisorConfig, ckpt_dir: str = ""):
+    def __init__(self, config: SupervisorConfig, ckpt_dir: str = "",
+                 telemetry: tel.Recorder = tel.NULL):
         self.config = config
         self.ckpt_dir = ckpt_dir
+        self.telemetry = telemetry
         self.events: List[Dict[str, Any]] = []
 
     # ---- bookkeeping -------------------------------------------------------
@@ -56,6 +59,7 @@ class Supervisor:
     def _record(self, **kw) -> Dict[str, Any]:
         event = {"t": time.time(), **kw}
         self.events.append(event)
+        self.telemetry.counter(f"supervisor/{kw.get('kind', 'event')}", 1)
         return event
 
     def backoff_s(self, n_restarts: int) -> float:
@@ -71,21 +75,34 @@ class Supervisor:
         return ckpt_lib.latest_valid_step(self.ckpt_dir, verify=True)
 
     def write_event_log(self) -> Optional[str]:
+        """Write the summary JSON at ``event_log_path`` (the pinned
+        ``--event_log`` format) plus a sibling ``.jsonl`` carrying the
+        same events in the shared telemetry schema, written by the
+        telemetry JSONL sink — one serializer for every event stream in
+        the repo.  Emission happens here, not in ``_record``, because
+        the retry loop keeps mutating failure events (backoff_s,
+        recovery_wall_s, budget_exhausted) after recording them."""
         path = self.config.event_log_path
         if not path:
             return None
         out_dir = os.path.dirname(path)
         if out_dir:
             os.makedirs(out_dir, exist_ok=True)
-        failures = [e for e in self.events if e.get("kind") == "failure"]
         with open(path, "w") as f:
-            json.dump({
-                "n_failures": len(failures),
-                "total_lost_steps": sum(e.get("lost_steps") or 0
-                                        for e in failures),
-                "total_recovery_s": sum(e.get("recovery_wall_s") or 0.0
-                                        for e in failures),
-                "events": self.events}, f, indent=1)
+            json.dump(tel.summarize_events(self.events), f, indent=1)
+        sink = tel.JsonlSink(os.path.splitext(path)[0] + ".jsonl")
+        try:
+            for e in self.events:
+                attrs = {k: v for k, v in e.items()
+                         if k not in ("t", "kind") and v is not None}
+                ev = tel.make_event(
+                    "event", f"supervisor/{e.get('kind', 'event')}",
+                    e["t"])
+                if attrs:
+                    ev["attrs"] = attrs
+                sink.emit(ev)
+        finally:
+            sink.close()
         return path
 
     # ---- elastic re-plan ---------------------------------------------------
@@ -130,7 +147,9 @@ class Supervisor:
         while True:
             t_start = time.time()
             try:
-                result = attempt_fn(n_restarts, strategy, topology)
+                with self.telemetry.span("supervisor/attempt",
+                                         attempt=n_restarts):
+                    result = attempt_fn(n_restarts, strategy, topology)
                 self._record(kind="completed", attempt=n_restarts,
                              n_restarts=n_restarts)
                 self.write_event_log()
@@ -179,7 +198,8 @@ class Supervisor:
 def supervise_training(cfg, strategy, topology, shape, tc, make_batches,
                        rt_overrides: Optional[Dict] = None, key=None,
                        fault_plan=None,
-                       sup_cfg: Optional[SupervisorConfig] = None):
+                       sup_cfg: Optional[SupervisorConfig] = None,
+                       telemetry: tel.Recorder = tel.NULL, drift=None):
     """Production wiring: supervised ``train_loop`` attempts.
 
     Each attempt rebuilds the plan/runtime/data from the (possibly
@@ -194,7 +214,8 @@ def supervise_training(cfg, strategy, topology, shape, tc, make_batches,
     from repro.core import parallel as par
     from repro.train.trainer import train_loop
 
-    sup = Supervisor(sup_cfg or SupervisorConfig(), ckpt_dir=tc.ckpt_dir)
+    sup = Supervisor(sup_cfg or SupervisorConfig(), ckpt_dir=tc.ckpt_dir,
+                     telemetry=telemetry)
 
     def attempt(n_restarts, strat, topo):
         plan = strat.to_plan(cfg, topo, shape)
@@ -203,7 +224,8 @@ def supervise_training(cfg, strategy, topology, shape, tc, make_batches,
         return train_loop(cfg, plan, rt, tc_run, make_batches(),
                           key=key if key is not None
                           else jax.random.PRNGKey(0),
-                          fault_plan=fault_plan)
+                          fault_plan=fault_plan,
+                          telemetry=telemetry, drift=drift)
 
     params, opt_state, history = sup.run(
         attempt, strategy=strategy, topology=topology, cfg=cfg, shape=shape)

@@ -42,7 +42,8 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Dict, Optional
+import time
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -54,6 +55,7 @@ from repro.models import transformer as tfm
 from repro.models.layers import Runtime
 from repro.serve.paged_cache import BlockAllocator, init_paged_pools
 from repro.serve.scheduler import Scheduler
+from repro import telemetry as tel
 
 # sentinel context for slots that must not write this step: the block
 # lookup lands past every table and the write is dropped
@@ -94,6 +96,12 @@ class ServeEngine:
     n_blocks: int = 0
     prefill_chunk: int = 32
     steps_per_tick: int = 8
+    # telemetry: per-request lifecycle (queued -> prefill -> decode) with
+    # queue-wait/TTFT/per-token latency histograms, tick-level
+    # batch-occupancy and block-pool gauges.  ``clock`` is injectable so
+    # tests pin latency math exactly.
+    telemetry: tel.Recorder = tel.NULL
+    clock: Callable[[], float] = time.monotonic
 
     def __post_init__(self):
         self._prefill = jax.jit(make_prefill(self.cfg, self.rt, self.max_len))
@@ -122,7 +130,8 @@ class ServeEngine:
         self._sched = Scheduler(
             self.n_slots, BlockAllocator(self.n_blocks, self.block_size),
             prefill_chunk=self.prefill_chunk,
-            steps_per_tick=self.steps_per_tick)
+            steps_per_tick=self.steps_per_tick,
+            clock=self.clock, telemetry=self.telemetry)
         if self._paged_cache is None:
             self._paged_cache = init_paged_pools(
                 self.cfg, self.n_blocks, self.block_size,
@@ -196,28 +205,34 @@ class ServeEngine:
 
     def _tick(self, base_key):
         sched = self._sched
-        # expire first: a timed-out running request frees its seat before
-        # admission, and a timed-out waiting request stops blocking the
-        # queue head this same tick
-        for slot, _ in sched.expire():
-            if slot >= 0:
-                self._tbl[slot] = -1
-        for req in sched.admit():
-            # lay the reserved block chain into the slot's table row
-            self._tbl[req.slot] = -1
-            self._tbl[req.slot, :len(req.blocks)] = req.blocks
-            self._ctx[req.slot] = 0
-            self._temps[req.slot] = req.temperature
-            self._streams[req.slot] = req.stream
-        for req in sched.prefill_candidates():
-            self._do_prefill_chunk(base_key, req)
-        active = sched.decode_slots()
-        if active:
-            self._do_decode_segment(base_key, active)
-        for req in list(sched.running.values()):
-            if req.prefill_done and req.remaining <= 0:
+        with self.telemetry.span("serve/tick"):
+            # expire first: a timed-out running request frees its seat
+            # before admission, and a timed-out waiting request stops
+            # blocking the queue head this same tick
+            for slot, _ in sched.expire():
+                if slot >= 0:
+                    self._tbl[slot] = -1
+            for req in sched.admit():
+                # lay the reserved block chain into the slot's table row
                 self._tbl[req.slot] = -1
-                sched.complete(req)
+                self._tbl[req.slot, :len(req.blocks)] = req.blocks
+                self._ctx[req.slot] = 0
+                self._temps[req.slot] = req.temperature
+                self._streams[req.slot] = req.stream
+            for req in sched.prefill_candidates():
+                self._do_prefill_chunk(base_key, req)
+            active = sched.decode_slots()
+            if active:
+                self._do_decode_segment(base_key, active)
+            for req in list(sched.running.values()):
+                if req.prefill_done and req.remaining <= 0:
+                    self._tbl[req.slot] = -1
+                    sched.complete(req)
+            self.telemetry.gauge("serve/batch_occupancy",
+                                 len(sched.running) / self.n_slots)
+            self.telemetry.gauge(
+                "serve/block_util",
+                1.0 - sched.alloc.n_free / max(self.n_blocks, 1))
         if (req is None and not active and sched.waiting
                 and not sched.running):
             raise RuntimeError(
@@ -240,38 +255,62 @@ class ServeEngine:
         real = int(chunk.shape[0])
         if real < C:
             chunk = np.pad(chunk, (0, C - real))
-        logits, cache = self._prefill_chunk_fn(
-            self.params, self._cache_dict(), jnp.asarray(chunk[None]),
-            jnp.int32(req.slot), jnp.int32(start))
-        self._store_pools(cache)
-        req.prefilled = start + real
-        self._ctx[req.slot] = req.prefilled
-        if req.prefill_done and req.remaining > 0:
-            # the last real prompt token's logits give the first sampled
-            # token, at absolute position prompt_len
-            tok = self._sample_host(base_key, req.stream, req.prompt_len,
-                                    logits[real - 1], req.temperature)
-            req.generated.append(tok)
-            self._last[req.slot] = tok
+        t0 = self.clock()
+        with self.telemetry.span("serve/prefill_chunk", rid=req.rid,
+                                 start=start, n=real):
+            logits, cache = self._prefill_chunk_fn(
+                self.params, self._cache_dict(), jnp.asarray(chunk[None]),
+                jnp.int32(req.slot), jnp.int32(start))
+            self._store_pools(cache)
+            req.prefilled = start + real
+            self._ctx[req.slot] = req.prefilled
+            if req.prefill_done and req.remaining > 0:
+                # the last real prompt token's logits give the first
+                # sampled token, at absolute position prompt_len
+                tok = self._sample_host(base_key, req.stream,
+                                        req.prompt_len,
+                                        logits[real - 1], req.temperature)
+                req.generated.append(tok)
+                self._last[req.slot] = tok
+                req.t_first_token = self.clock()
+                if req.t_submit:
+                    self.telemetry.observe(
+                        "serve/ttft_s", req.t_first_token - req.t_submit)
+        self.telemetry.observe("serve/prefill_chunk_s",
+                               self.clock() - t0)
+
+    def _observe_token_latency(self, wall: float, n_tokens: int) -> None:
+        """Per-token latency over a decode segment: the tick's wall time
+        amortized across every token it delivered (each of the n tokens
+        experienced the same segment wait)."""
+        if n_tokens > 0 and wall >= 0:
+            self.telemetry.observe("serve/token_latency_s",
+                                   wall / n_tokens, n=n_tokens)
 
     def _do_decode_segment(self, base_key, active):
         steps = self.steps_per_tick
         remaining = np.zeros((self.n_slots,), np.int32)
         for req in active:
             remaining[req.slot] = req.remaining
-        cache, seg_out = self._segment_fn(
-            self.params, self._cache_dict(), jnp.asarray(self._last),
-            jnp.asarray(remaining), jnp.asarray(self._streams),
-            jnp.asarray(self._temps), base_key, steps=steps)
-        self._store_pools(cache)
-        seg_out = np.asarray(seg_out)
+        t0 = self.clock()
+        with self.telemetry.span("serve/decode_segment", steps=steps,
+                                 n_active=len(active)):
+            cache, seg_out = self._segment_fn(
+                self.params, self._cache_dict(), jnp.asarray(self._last),
+                jnp.asarray(remaining), jnp.asarray(self._streams),
+                jnp.asarray(self._temps), base_key, steps=steps)
+            self._store_pools(cache)
+            seg_out = np.asarray(seg_out)   # forces the device sync
+        delivered = 0
         for req in active:
             n = min(req.remaining, steps)
             toks = seg_out[req.slot, :n]
             req.generated.extend(int(t) for t in toks)
             self._ctx[req.slot] += n
+            delivered += n
             if n:
                 self._last[req.slot] = int(toks[-1])
+        self._observe_token_latency(self.clock() - t0, delivered)
 
     # ------------------------------------------------------------------
     # jitted paged bodies

@@ -38,6 +38,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.serve.paged_cache import BlockAllocator
+from repro import telemetry as tel
 
 
 @dataclasses.dataclass
@@ -60,6 +61,12 @@ class Request:
     done: bool = False
     deadline: float = 0.0               # absolute clock time; 0 = no TTL
     finish_reason: str = ""             # 'length' | 'timeout' | 'cancelled'
+    # lifecycle timestamps on the scheduler clock (0.0 = not reached):
+    # queued -> admitted -> first token -> finished
+    t_submit: float = 0.0
+    t_admit: float = 0.0
+    t_first_token: float = 0.0
+    t_finish: float = 0.0
 
     @property
     def prompt_len(self) -> int:
@@ -77,16 +84,35 @@ class Request:
 class Scheduler:
     def __init__(self, n_slots: int, allocator: BlockAllocator,
                  prefill_chunk: int = 32, steps_per_tick: int = 8,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 telemetry: tel.Recorder = tel.NULL):
         self.n_slots = n_slots
         self.alloc = allocator
         self.prefill_chunk = prefill_chunk
         self.steps_per_tick = steps_per_tick
         self.clock = clock
+        self.telemetry = telemetry
         self.waiting: List[Request] = []
         self.running: Dict[int, Request] = {}       # slot -> request
         self.finished: Dict[int, Request] = {}      # rid -> request
         self._next_rid = 0
+
+    # finish_reason -> lifecycle counter name
+    _FINISH_COUNTERS = {"length": "serve/completed",
+                        "timeout": "serve/expired",
+                        "cancelled": "serve/cancelled"}
+
+    def _finish(self, req: Request, reason: str) -> None:
+        """Shared finish bookkeeping: timestamps + lifecycle telemetry."""
+        req.done = True
+        req.finish_reason = reason
+        req.t_finish = self.clock()
+        self.finished[req.rid] = req
+        self.telemetry.counter(
+            self._FINISH_COUNTERS.get(reason, "serve/completed"), 1)
+        if req.t_submit:
+            self.telemetry.observe("serve/total_latency_s",
+                                   req.t_finish - req.t_submit)
 
     # -- submission / bookkeeping -------------------------------------------
 
@@ -95,11 +121,15 @@ class Scheduler:
                ttl_s: float = 0.0) -> int:
         rid = self._next_rid
         self._next_rid += 1
+        now = self.clock()
         self.waiting.append(Request(rid, np.asarray(prompt, np.int32),
                                     n_new, temperature,
                                     stream=rid if stream is None else stream,
-                                    deadline=(self.clock() + ttl_s
-                                              if ttl_s > 0 else 0.0)))
+                                    deadline=(now + ttl_s
+                                              if ttl_s > 0 else 0.0),
+                                    t_submit=now))
+        self.telemetry.counter("serve/submitted", 1)
+        self.telemetry.gauge("serve/queue_depth", len(self.waiting))
         return rid
 
     def has_work(self) -> bool:
@@ -130,6 +160,12 @@ class Scheduler:
             req.slot = free.pop(0)
             self.running[req.slot] = req
             admitted.append(self.waiting.pop(0))
+            req.t_admit = self.clock()
+            self.telemetry.counter("serve/admitted", 1)
+            self.telemetry.observe("serve/queue_wait_s",
+                                   req.t_admit - req.t_submit)
+        if admitted:
+            self.telemetry.gauge("serve/queue_depth", len(self.waiting))
         return admitted
 
     # -- per-tick work selection --------------------------------------------
@@ -159,17 +195,14 @@ class Scheduler:
         self.alloc.free(req.blocks)
         req.blocks = []
         req.slot = -1
-        req.done = True
-        req.finish_reason = reason
-        self.finished[req.rid] = req
+        self._finish(req, reason)
 
     # -- early exit: TTL expiry and explicit cancellation -------------------
 
     def _retire_waiting(self, req: Request, reason: str) -> None:
         self.waiting.remove(req)
-        req.done = True
-        req.finish_reason = reason
-        self.finished[req.rid] = req
+        self._finish(req, reason)
+        self.telemetry.gauge("serve/queue_depth", len(self.waiting))
 
     def expire(self, now: Optional[float] = None) -> List[Tuple[int, Request]]:
         """Retire every request whose deadline has passed.

@@ -1,0 +1,35 @@
+"""Unified telemetry: structured spans + metrics, pluggable sinks,
+Chrome-trace/Perfetto export, and the predicted-vs-measured
+DriftMonitor.
+
+Typical wiring (what ``launch/train.py --trace --metrics_jsonl`` does):
+
+    from repro import telemetry
+    rec = telemetry.Recorder()
+    rec.add_sink(telemetry.JsonlSink("events.jsonl"))
+    rec.add_sink(telemetry.ChromeTraceSink("trace.json"))
+    with rec.span("train/step", step_num=i):
+        ...
+    rec.close()   # flushes the trace JSON
+
+``telemetry.NULL`` is a disabled recorder — instrumented call sites
+default to it so un-instrumented runs pay (almost) nothing.
+"""
+from .core import NULL, Recorder
+from .drift import DriftMonitor
+from .events import (EVENT_KINDS, check_paths, make_event,
+                     summarize_events, validate_chrome_trace,
+                     validate_event, validate_jsonl)
+from .metrics import (DEFAULT_BUCKETS, Counter, Gauge, Histogram,
+                      MetricsRegistry, percentile)
+from .sinks import InMemorySink, JsonlSink, Sink
+from .trace import ChromeTraceSink
+
+__all__ = [
+    "NULL", "Recorder", "DriftMonitor",
+    "EVENT_KINDS", "make_event", "summarize_events", "check_paths",
+    "validate_event", "validate_jsonl", "validate_chrome_trace",
+    "DEFAULT_BUCKETS", "Counter", "Gauge", "Histogram",
+    "MetricsRegistry", "percentile",
+    "Sink", "InMemorySink", "JsonlSink", "ChromeTraceSink",
+]

@@ -1,0 +1,36 @@
+"""Schema-check CLI: validate telemetry artifacts.
+
+    python -m repro.telemetry results/telemetry events.jsonl trace.json
+
+Directories are scanned recursively for ``*.jsonl`` event streams and
+``*trace*.json`` Chrome traces; exits non-zero on any schema violation.
+CI runs this over everything the benchmark job emitted.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from .events import check_paths
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.telemetry",
+        description="Validate telemetry JSONL / Chrome-trace artifacts.")
+    ap.add_argument("paths", nargs="+",
+                    help="files or directories to validate")
+    args = ap.parse_args(argv)
+    n_files, n_events, errs = check_paths(args.paths)
+    for e in errs:
+        print(f"SCHEMA ERROR: {e}", file=sys.stderr)
+    print(f"telemetry schema check: {n_files} files, {n_events} events, "
+          f"{len(errs)} errors")
+    if n_files == 0:
+        print("no telemetry artifacts found", file=sys.stderr)
+        return 1
+    return 1 if errs else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

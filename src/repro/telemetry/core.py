@@ -1,0 +1,193 @@
+"""The Recorder: spans + metrics fanning out to pluggable sinks.
+
+One Recorder per process (or per test).  ``span(...)`` is a context
+manager with thread-local nesting, timed on an injectable monotonic
+clock; counters/gauges/histograms live in an attached
+:class:`MetricsRegistry` and additionally stream schema events to every
+sink, so a JSONL file carries the full story of a run.
+
+When jax is importable, spans also enter
+``jax.profiler.TraceAnnotation`` (or ``StepTraceAnnotation`` when the
+span carries a ``step_num`` attribute) so the host-side spans line up
+with XLA's device traces in a Perfetto view.  The import is lazy and
+every failure path degrades to plain host timing — the module stays
+zero-dep.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+import time
+from typing import Any, Dict, Iterator, List, Optional, Sequence
+
+from .events import make_event
+from .metrics import DEFAULT_BUCKETS, MetricsRegistry
+from .sinks import Sink
+
+_PROFILER_UNSET = object()
+_jax_profiler = _PROFILER_UNSET
+
+
+def _profiler():
+    """Lazily resolve jax.profiler; None when jax is unavailable."""
+    global _jax_profiler
+    if _jax_profiler is _PROFILER_UNSET:
+        try:
+            from jax import profiler  # deferred: keep import cost off tools
+            _jax_profiler = profiler
+        except Exception:
+            _jax_profiler = None
+    return _jax_profiler
+
+
+class _SpanState(threading.local):
+    def __init__(self):
+        self.stack: List[str] = []
+
+
+class Recorder:
+    """Emits schema events to sinks and aggregates into a registry.
+
+    Parameters
+    ----------
+    sinks : sinks receiving every event (JSONL, in-memory, Chrome trace)
+    clock : monotonic-time source; injectable for deterministic tests
+    annotate_jax : wrap spans in jax.profiler annotations when available
+    """
+
+    def __init__(self, sinks: Sequence[Sink] = (),
+                 clock=time.monotonic,
+                 annotate_jax: bool = True):
+        self.sinks: List[Sink] = list(sinks)
+        self.clock = clock
+        self.annotate_jax = annotate_jax
+        self.metrics = MetricsRegistry()
+        self._span_state = _SpanState()
+        self.enabled = True
+
+    # -- plumbing ---------------------------------------------------------
+
+    def add_sink(self, sink: Sink) -> Sink:
+        self.sinks.append(sink)
+        return sink
+
+    def _emit(self, event: Dict) -> None:
+        for sink in self.sinks:
+            sink.emit(event)
+
+    def close(self) -> None:
+        for sink in self.sinks:
+            sink.close()
+
+    # -- spans ------------------------------------------------------------
+
+    @contextlib.contextmanager
+    def span(self, name: str, **attrs: Any) -> Iterator[Dict]:
+        """Time a block; emits a span event even when the body raises.
+
+        Yields a mutable dict — attributes added to it during the block
+        land in the event's ``attrs`` (e.g. ``s["tokens"] = 4096``).
+        """
+        if not self.enabled:
+            yield {}
+            return
+        stack = self._span_state.stack
+        depth = len(stack)
+        parent = stack[-1] if stack else None
+        stack.append(name)
+        ann = None
+        prof = _profiler() if self.annotate_jax else None
+        if prof is not None:
+            try:
+                if "step_num" in attrs:
+                    ann = prof.StepTraceAnnotation(
+                        name, step_num=int(attrs["step_num"]))
+                else:
+                    ann = prof.TraceAnnotation(name)
+                ann.__enter__()
+            except Exception:
+                ann = None
+        t0 = self.clock()
+        live_attrs: Dict[str, Any] = dict(attrs)
+        try:
+            yield live_attrs
+        finally:
+            dur = max(0.0, self.clock() - t0)
+            if ann is not None:
+                try:
+                    ann.__exit__(None, None, None)
+                except Exception:
+                    pass
+            stack.pop()
+            ev = make_event("span", name, t0, dur=dur,
+                            tid=threading.get_ident(), depth=depth)
+            if parent is not None:
+                ev["parent"] = parent
+            if live_attrs:
+                ev["attrs"] = live_attrs
+            self._emit(ev)
+
+    # -- metrics ----------------------------------------------------------
+
+    def counter(self, name: str, delta: float = 1.0,
+                **attrs: Any) -> float:
+        if not self.enabled:
+            return 0.0
+        total = self.metrics.counter(name).inc(delta)
+        ev = make_event("counter", name, self.clock(),
+                        value=total, delta=delta)
+        if attrs:
+            ev["attrs"] = attrs
+        self._emit(ev)
+        return total
+
+    def gauge(self, name: str, value: float, **attrs: Any) -> None:
+        if not self.enabled:
+            return
+        self.metrics.gauge(name).set(value)
+        ev = make_event("gauge", name, self.clock(), value=float(value))
+        if attrs:
+            ev["attrs"] = attrs
+        self._emit(ev)
+
+    def observe(self, name: str, value: float, n: int = 1,
+                buckets=DEFAULT_BUCKETS, **attrs: Any) -> None:
+        if not self.enabled:
+            return
+        self.metrics.histogram(name, buckets).observe(value, n)
+        ev = make_event("histogram", name, self.clock(),
+                        value=float(value))
+        if n != 1:
+            ev["n"] = n
+        if attrs:
+            ev["attrs"] = attrs
+        self._emit(ev)
+
+    def event(self, name: str, **attrs: Any) -> Dict:
+        """A structured occurrence (supervisor failures, replans, ...)."""
+        if not self.enabled:
+            return {}
+        ev = make_event("event", name, self.clock())
+        if attrs:
+            ev["attrs"] = attrs
+        self._emit(ev)
+        return ev
+
+
+class _NullRecorder(Recorder):
+    """A disabled recorder: every operation is a no-op.
+
+    Instrumented call sites take ``telemetry: Recorder = NULL`` so the
+    hot paths never branch on ``if telemetry is not None``.
+    """
+
+    def __init__(self):
+        super().__init__(sinks=(), annotate_jax=False)
+        self.enabled = False
+
+    def add_sink(self, sink: Sink) -> Sink:
+        raise RuntimeError("cannot attach sinks to the null recorder; "
+                           "construct a Recorder instead")
+
+
+NULL = _NullRecorder()

@@ -1,0 +1,95 @@
+"""Predicted-vs-measured drift monitor — the measured half of the
+measure↔model calibration loop.
+
+Given the cost model's per-term step-time decomposition for the resolved
+Strategy (``StepReport.decomposition()``: seconds per step for
+``step``/``compute``/``collective``/``bubble``/...), the monitor takes a
+measured decomposition each logging window, computes per-term
+``predicted_over_measured`` ratios on the intersecting terms, emits them
+as drift gauges, and accumulates windows into a ``results/telemetry/``
+artifact that ``benchmarks/run.py --drift-report`` consumes.
+
+A ratio of 1.0 means the model nailed the term; >1 the model
+over-predicts (hardware profile too pessimistic for this backend);
+<1 it under-predicts.  Terms whose measured value is ~0 get a ``null``
+ratio rather than a fabricated number.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+from .core import NULL, Recorder
+
+# below this many seconds a measured term is noise, not signal
+_MIN_MEASURED_S = 1e-9
+
+
+class DriftMonitor:
+    """Compares one predicted decomposition against measured windows."""
+
+    def __init__(self, predicted: Dict[str, float],
+                 telemetry: Recorder = NULL,
+                 meta: Optional[Dict] = None):
+        self.predicted = {k: float(v) for k, v in predicted.items()}
+        self.telemetry = telemetry
+        self.meta = dict(meta or {})
+        self.windows: List[Dict] = []
+
+    def observe(self, measured: Dict[str, float],
+                n_steps: int = 1) -> Dict:
+        """Record one window of measured per-step times (seconds).
+
+        ``measured`` maps term name -> mean seconds per step over the
+        window.  Returns the window record, including the per-term
+        ratio dict (``None`` where a term can't be compared).
+        """
+        measured = {k: float(v) for k, v in measured.items()}
+        ratios: Dict[str, Optional[float]] = {}
+        for term in sorted(set(self.predicted) & set(measured)):
+            m = measured[term]
+            if m <= _MIN_MEASURED_S:
+                ratios[term] = None
+                continue
+            r = self.predicted[term] / m
+            ratios[term] = r
+            self.telemetry.gauge(
+                f"drift/predicted_over_measured/{term}", r)
+        window = {
+            "window": len(self.windows),
+            "n_steps": int(n_steps),
+            "predicted": self.predicted,
+            "measured": measured,
+            "predicted_over_measured": ratios,
+        }
+        self.windows.append(window)
+        return window
+
+    def summary(self) -> Dict:
+        """Mean ratio per term across all recorded windows."""
+        per_term: Dict[str, List[float]] = {}
+        for w in self.windows:
+            for term, r in w["predicted_over_measured"].items():
+                if r is not None:
+                    per_term.setdefault(term, []).append(r)
+        return {
+            "meta": self.meta,
+            "n_windows": len(self.windows),
+            "predicted": self.predicted,
+            "mean_predicted_over_measured": {
+                t: sum(rs) / len(rs) for t, rs in sorted(per_term.items())
+            },
+        }
+
+    def report(self) -> Dict:
+        return {**self.summary(), "windows": self.windows}
+
+    def write(self, path: str) -> Dict:
+        """Write the full report JSON (the results/telemetry artifact)."""
+        doc = self.report()
+        d = os.path.dirname(os.path.abspath(path))
+        os.makedirs(d, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+        return doc

@@ -1,0 +1,181 @@
+"""The telemetry event schema: one flat dict per emitted record.
+
+Every sink in this package — the JSONL stream, the in-memory recorder,
+the Chrome-trace exporter — speaks the same schema, and the CI
+schema-check validates every JSONL line a run emits against it:
+
+    {"ts": <float seconds>,        # recorder clock (monotonic by default)
+     "kind": "span" | "counter" | "gauge" | "histogram" | "event",
+     "name": <str>,                # hierarchical, '/'-separated
+     ...kind-specific fields}
+
+Kind-specific fields:
+
+* ``span``      — ``dur`` (seconds, >= 0), ``tid`` (int thread id),
+                  ``depth`` (int nesting level), optional ``attrs``;
+                  ``ts`` is the span *start*.
+* ``counter``   — ``value`` (the running total after the increment) and
+                  ``delta`` (this increment).
+* ``gauge``     — ``value`` (the new reading).
+* ``histogram`` — ``value`` (one observation), optional ``n`` (weight).
+* ``event``     — a structured occurrence (e.g. a supervisor failure);
+                  payload under ``attrs``.
+
+Zero-dependency on purpose: no jax, no numpy — importable from any
+process that only wants to validate or post-process artifacts.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import numbers
+import os
+from typing import Any, Dict, Iterable, List, Tuple
+
+EVENT_KINDS = ("span", "counter", "gauge", "histogram", "event")
+
+# required non-ts fields per kind (ts/kind/name are required everywhere)
+_REQUIRED: Dict[str, Tuple[str, ...]] = {
+    "span": ("dur",),
+    "counter": ("value",),
+    "gauge": ("value",),
+    "histogram": ("value",),
+    "event": (),
+}
+
+
+def make_event(kind: str, name: str, ts: float, **fields: Any) -> Dict:
+    """Build one schema-conforming event (validated at construction)."""
+    ev = {"ts": float(ts), "kind": kind, "name": name, **fields}
+    errs = validate_event(ev)
+    if errs:
+        raise ValueError(f"invalid telemetry event {ev!r}: {errs}")
+    return ev
+
+
+def validate_event(ev: Any) -> List[str]:
+    """Return the list of schema violations (empty = valid)."""
+    errs: List[str] = []
+    if not isinstance(ev, dict):
+        return [f"event is {type(ev).__name__}, not a dict"]
+    if not isinstance(ev.get("ts"), numbers.Real):
+        errs.append("missing/non-numeric 'ts'")
+    kind = ev.get("kind")
+    if kind not in EVENT_KINDS:
+        errs.append(f"'kind' {kind!r} not in {EVENT_KINDS}")
+    name = ev.get("name")
+    if not isinstance(name, str) or not name:
+        errs.append("missing/empty 'name'")
+    for field in _REQUIRED.get(kind, ()):
+        if not isinstance(ev.get(field), numbers.Real):
+            errs.append(f"span/metric field {field!r} missing or non-numeric")
+    if kind == "span" and isinstance(ev.get("dur"), numbers.Real) \
+            and ev["dur"] < 0:
+        errs.append(f"negative span dur {ev['dur']}")
+    attrs = ev.get("attrs")
+    if attrs is not None and not isinstance(attrs, dict):
+        errs.append("'attrs' must be a dict when present")
+    return errs
+
+
+def validate_jsonl(path: str) -> Tuple[int, List[str]]:
+    """Validate every line of a JSONL event file.
+
+    Returns ``(n_events, errors)`` where each error names its line.
+    """
+    n, errs = 0, []
+    try:
+        f = open(path)
+    except OSError as e:
+        return 0, [f"{path}: unreadable ({e})"]
+    with f:
+        for i, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            n += 1
+            try:
+                ev = json.loads(line)
+            except json.JSONDecodeError as e:
+                errs.append(f"{path}:{i}: not JSON ({e})")
+                continue
+            for msg in validate_event(ev):
+                errs.append(f"{path}:{i}: {msg}")
+    return n, errs
+
+
+def validate_chrome_trace(path: str) -> Tuple[int, List[str]]:
+    """Validate a Chrome-trace/Perfetto JSON file's structure.
+
+    Checks exactly what Perfetto's JSON importer needs: a top-level
+    ``traceEvents`` list whose entries have ``ph``/``name``, with complete
+    ('X') events carrying numeric ``ts``/``dur`` and a ``pid``/``tid``.
+    """
+    errs: List[str] = []
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return 0, [f"{path}: unreadable ({e})"]
+    evs = doc.get("traceEvents")
+    if not isinstance(evs, list):
+        return 0, [f"{path}: no 'traceEvents' list"]
+    for i, ev in enumerate(evs):
+        where = f"{path}: traceEvents[{i}]"
+        if not isinstance(ev, dict) or "ph" not in ev:
+            errs.append(f"{where}: missing 'ph'")
+            continue
+        if not isinstance(ev.get("name"), str):
+            errs.append(f"{where}: missing 'name'")
+        if ev["ph"] == "X":
+            for field in ("ts", "dur"):
+                if not isinstance(ev.get(field), numbers.Real):
+                    errs.append(f"{where}: 'X' event needs numeric {field!r}")
+            if isinstance(ev.get("dur"), numbers.Real) and ev["dur"] < 0:
+                errs.append(f"{where}: negative dur")
+            for field in ("pid", "tid"):
+                if field not in ev:
+                    errs.append(f"{where}: missing {field!r}")
+    return len(evs), errs
+
+
+def summarize_events(events: Iterable[Dict]) -> Dict:
+    """Aggregate a supervisor-style event list into the summary document
+    the ``--event_log`` flag has always written (the pinned resilience
+    tests read these exact keys)."""
+    events = list(events)
+    failures = [e for e in events if e.get("kind") == "failure"]
+    return {
+        "n_failures": len(failures),
+        "total_lost_steps": sum(e.get("lost_steps") or 0 for e in failures),
+        "total_recovery_s": sum(e.get("recovery_wall_s") or 0.0
+                                for e in failures),
+        "events": events,
+    }
+
+
+def check_paths(paths: Iterable[str]) -> Tuple[int, int, List[str]]:
+    """Validate every telemetry artifact under ``paths``.
+
+    Directories are scanned for ``*.jsonl`` (event streams) and
+    ``*trace*.json`` (Chrome traces).  Returns
+    ``(n_files, n_events, errors)``.
+    """
+    files: List[str] = []
+    for p in paths:
+        if os.path.isdir(p):
+            files += sorted(glob.glob(os.path.join(p, "**", "*.jsonl"),
+                                      recursive=True))
+            files += sorted(glob.glob(os.path.join(p, "**", "*trace*.json"),
+                                      recursive=True))
+        else:
+            files.append(p)
+    n_events, errs = 0, []
+    for path in files:
+        if path.endswith(".jsonl"):
+            n, e = validate_jsonl(path)
+        else:
+            n, e = validate_chrome_trace(path)
+        n_events += n
+        errs += e
+    return len(files), n_events, errs

@@ -1,0 +1,165 @@
+"""Counters, gauges, and histograms with exact percentiles.
+
+Histograms keep two representations: fixed log-spaced buckets for cheap
+export/merging, and the raw observations for *exact* nearest-rank
+percentiles (the p50/p99 the serving benchmarks report).  Retaining raw
+values is deliberate — windows here are bounded (a logging window, a
+benchmark run), so memory is not a concern and exactness beats the
+usual streaming sketch.
+
+Zero-dep and thread-safe (one lock per instrument).
+"""
+from __future__ import annotations
+
+import bisect
+import math
+import threading
+from typing import Dict, List, Optional, Sequence, Tuple
+
+# Default export buckets: log-spaced from 1µs to ~100s, suited to both
+# per-token latencies (~ms) and step times (~s).
+DEFAULT_BUCKETS: Tuple[float, ...] = tuple(
+    10.0 ** (e / 4.0) for e in range(-24, 9)
+)
+
+
+def percentile(values: Sequence[float], q: float) -> float:
+    """Exact nearest-rank percentile (q in [0, 100]) of ``values``.
+
+    This is the oracle definition the tests pin: for n values sorted
+    ascending, p_q = sorted[ceil(q/100 * n) - 1] (and the minimum for
+    q = 0).  Raises ValueError on an empty sequence.
+    """
+    if not values:
+        raise ValueError("percentile of empty sequence")
+    s = sorted(values)
+    if q <= 0:
+        return s[0]
+    rank = math.ceil(q / 100.0 * len(s))
+    return s[min(rank, len(s)) - 1]
+
+
+class Counter:
+    """A monotonically increasing count."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value = 0.0
+        self._lock = threading.Lock()
+
+    def inc(self, delta: float = 1.0) -> float:
+        with self._lock:
+            self.value += delta
+            return self.value
+
+    def snapshot(self) -> Dict:
+        return {"type": "counter", "value": self.value}
+
+
+class Gauge:
+    """A point-in-time reading; remembers only the latest value."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value: Optional[float] = None
+        self._lock = threading.Lock()
+
+    def set(self, value: float) -> float:
+        with self._lock:
+            self.value = float(value)
+            return self.value
+
+    def snapshot(self) -> Dict:
+        return {"type": "gauge", "value": self.value}
+
+
+class Histogram:
+    """Fixed-bucket histogram that also retains raw observations.
+
+    ``bucket_counts[i]`` counts observations <= ``buckets[i]``; the last
+    slot is the +inf overflow.  Percentiles come from the raw values via
+    :func:`percentile`, so they are exact, not interpolated.
+    """
+
+    def __init__(self, name: str,
+                 buckets: Sequence[float] = DEFAULT_BUCKETS):
+        self.name = name
+        self.buckets: Tuple[float, ...] = tuple(sorted(buckets))
+        self.bucket_counts: List[int] = [0] * (len(self.buckets) + 1)
+        self.values: List[float] = []
+        self.sum = 0.0
+        self._lock = threading.Lock()
+
+    @property
+    def count(self) -> int:
+        return len(self.values)
+
+    def observe(self, value: float, n: int = 1) -> None:
+        value = float(value)
+        with self._lock:
+            idx = bisect.bisect_left(self.buckets, value)
+            self.bucket_counts[idx] += n
+            self.values.extend([value] * n)
+            self.sum += value * n
+
+    def percentile(self, q: float) -> float:
+        with self._lock:
+            return percentile(self.values, q)
+
+    def snapshot(self) -> Dict:
+        with self._lock:
+            out = {
+                "type": "histogram",
+                "count": len(self.values),
+                "sum": self.sum,
+            }
+            if self.values:
+                out["mean"] = self.sum / len(self.values)
+                out["min"] = min(self.values)
+                out["max"] = max(self.values)
+                out["p50"] = percentile(self.values, 50)
+                out["p90"] = percentile(self.values, 90)
+                out["p99"] = percentile(self.values, 99)
+            # only the occupied buckets, to keep snapshots readable
+            nz = {}
+            for i, c in enumerate(self.bucket_counts):
+                if c:
+                    le = self.buckets[i] if i < len(self.buckets) else "inf"
+                    nz[str(le)] = c
+            out["buckets"] = nz
+            return out
+
+
+class MetricsRegistry:
+    """Named instruments, created on first use, snapshottable at once."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._instruments: Dict[str, object] = {}
+
+    def _get(self, name: str, cls, *args):
+        with self._lock:
+            inst = self._instruments.get(name)
+            if inst is None:
+                inst = cls(name, *args)
+                self._instruments[name] = inst
+            elif not isinstance(inst, cls):
+                raise TypeError(
+                    f"metric {name!r} already registered as "
+                    f"{type(inst).__name__}, requested {cls.__name__}")
+            return inst
+
+    def counter(self, name: str) -> Counter:
+        return self._get(name, Counter)
+
+    def gauge(self, name: str) -> Gauge:
+        return self._get(name, Gauge)
+
+    def histogram(self, name: str,
+                  buckets: Sequence[float] = DEFAULT_BUCKETS) -> Histogram:
+        return self._get(name, Histogram, buckets)
+
+    def snapshot(self) -> Dict[str, Dict]:
+        with self._lock:
+            items = list(self._instruments.items())
+        return {name: inst.snapshot() for name, inst in sorted(items)}

@@ -1,0 +1,82 @@
+"""Pluggable sinks for telemetry events.
+
+A sink is anything with ``emit(event: dict)`` and ``close()``; the
+Recorder fans every event out to all attached sinks.  The Chrome-trace
+exporter lives in :mod:`repro.telemetry.trace`.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Dict, List, Optional
+
+
+class Sink:
+    def emit(self, event: Dict) -> None:  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def close(self) -> None:
+        pass
+
+
+class InMemorySink(Sink):
+    """Buffers every event; handy for tests and post-run summaries."""
+
+    def __init__(self):
+        self.events: List[Dict] = []
+        self._lock = threading.Lock()
+
+    def emit(self, event: Dict) -> None:
+        with self._lock:
+            self.events.append(event)
+
+    def by_kind(self, kind: str) -> List[Dict]:
+        with self._lock:
+            return [e for e in self.events if e.get("kind") == kind]
+
+    def by_name(self, name: str) -> List[Dict]:
+        with self._lock:
+            return [e for e in self.events if e.get("name") == name]
+
+
+class JsonlSink(Sink):
+    """Appends one JSON object per line; the shared on-disk format.
+
+    This is the writer behind both ``--metrics_jsonl`` and the
+    supervisor's event log — one schema, one serializer.  Lines are
+    flushed per event so a crashed run still leaves a readable stream.
+    """
+
+    def __init__(self, path: str):
+        self.path = path
+        d = os.path.dirname(os.path.abspath(path))
+        os.makedirs(d, exist_ok=True)
+        self._f = open(path, "w")
+        self._lock = threading.Lock()
+
+    def emit(self, event: Dict) -> None:
+        line = json.dumps(event, default=_jsonable)
+        with self._lock:
+            if self._f is None:
+                return
+            self._f.write(line + "\n")
+            self._f.flush()
+
+    def close(self) -> None:
+        with self._lock:
+            if self._f is not None:
+                self._f.close()
+                self._f = None
+
+
+def _jsonable(obj):
+    """Last-resort coercion for numpy/jax scalars in event payloads."""
+    for attr in ("item",):
+        fn = getattr(obj, attr, None)
+        if callable(fn):
+            try:
+                return fn()
+            except Exception:
+                pass
+    return str(obj)

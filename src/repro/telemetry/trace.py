@@ -1,0 +1,114 @@
+"""Chrome-trace / Perfetto JSON exporter.
+
+Maps the telemetry schema onto the Trace Event Format that Perfetto's
+JSON importer (and chrome://tracing) load directly:
+
+* spans      -> complete ('X') events, µs timestamps, one Perfetto
+               track per (pid, tid); nesting reconstructs from overlap
+* gauges     -> counter ('C') events, one counter track per name
+* counters   -> counter ('C') events carrying the running total
+* histograms/events -> instant ('i') events so they mark the timeline
+
+Open the file at https://ui.perfetto.dev or chrome://tracing.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Dict, List, Optional
+
+from .sinks import Sink, _jsonable
+
+_US = 1e6  # trace-event timestamps are microseconds
+
+
+class ChromeTraceSink(Sink):
+    """Buffers trace events and writes the JSON document on close."""
+
+    def __init__(self, path: str, pid: int = 1,
+                 process_name: str = "repro"):
+        self.path = path
+        self.pid = pid
+        self.process_name = process_name
+        self._events: List[Dict] = []
+        self._tids_seen: Dict[int, int] = {}
+        self._lock = threading.Lock()
+        self._closed = False
+
+    def _trace_tid(self, tid: Optional[int]) -> int:
+        """Compress python thread idents into small stable track ids."""
+        if tid is None:
+            tid = 0
+        if tid not in self._tids_seen:
+            self._tids_seen[tid] = len(self._tids_seen)
+        return self._tids_seen[tid]
+
+    def emit(self, event: Dict) -> None:
+        kind = event.get("kind")
+        name = event.get("name", "?")
+        ts_us = float(event.get("ts", 0.0)) * _US
+        with self._lock:
+            if self._closed:
+                return
+            if kind == "span":
+                ev = {
+                    "ph": "X", "name": name,
+                    "ts": ts_us,
+                    "dur": float(event.get("dur", 0.0)) * _US,
+                    "pid": self.pid,
+                    "tid": self._trace_tid(event.get("tid")),
+                }
+                attrs = event.get("attrs")
+                if attrs:
+                    ev["args"] = attrs
+                self._events.append(ev)
+            elif kind in ("gauge", "counter"):
+                self._events.append({
+                    "ph": "C", "name": name, "ts": ts_us,
+                    "pid": self.pid, "tid": 0,
+                    "args": {"value": event.get("value", 0.0)},
+                })
+            else:  # histogram observations / structured events
+                ev = {
+                    "ph": "i", "name": name, "ts": ts_us,
+                    "pid": self.pid, "tid": self._trace_tid(
+                        event.get("tid")),
+                    "s": "t",
+                }
+                args = {}
+                if "value" in event:
+                    args["value"] = event["value"]
+                if event.get("attrs"):
+                    args.update(event["attrs"])
+                if args:
+                    ev["args"] = args
+                self._events.append(ev)
+
+    def _metadata(self) -> List[Dict]:
+        meta = [{
+            "ph": "M", "name": "process_name", "pid": self.pid, "tid": 0,
+            "args": {"name": self.process_name},
+        }]
+        for ident, tid in sorted(self._tids_seen.items(),
+                                 key=lambda kv: kv[1]):
+            meta.append({
+                "ph": "M", "name": "thread_name",
+                "pid": self.pid, "tid": tid,
+                "args": {"name": f"host-{tid} ({ident})"},
+            })
+        return meta
+
+    def close(self) -> None:
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            doc = {
+                "traceEvents": self._metadata() + self._events,
+                "displayTimeUnit": "ms",
+            }
+        d = os.path.dirname(os.path.abspath(self.path))
+        os.makedirs(d, exist_ok=True)
+        with open(self.path, "w") as f:
+            json.dump(doc, f, default=_jsonable)

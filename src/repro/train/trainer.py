@@ -22,6 +22,7 @@ from repro.models import transformer as tfm
 from repro.models.layers import Runtime
 from repro.optim import AdamWConfig, adamw_update, init_opt_state
 from repro.optim.schedule import linear_warmup_cosine
+from repro import telemetry as tel
 
 
 @dataclasses.dataclass
@@ -174,7 +175,9 @@ def _restore_state(tc: TrainConfig, params, opt_state, pshard, oshard):
 
 def train_loop(cfg: ModelConfig, plan: par.ParallelPlan, rt: Runtime,
                tc: TrainConfig, batches, key=None,
-               hooks: Optional[Callable] = None, fault_plan=None):
+               hooks: Optional[Callable] = None, fault_plan=None,
+               telemetry: tel.Recorder = tel.NULL,
+               drift: Optional[tel.DriftMonitor] = None):
     """Full driver: init, jit with shardings, iterate, log, checkpoint.
 
     ``tc.resume`` restores params/opt_state/PRNG/data position from the
@@ -185,6 +188,14 @@ def train_loop(cfg: ModelConfig, plan: par.ParallelPlan, rt: Runtime,
     (:class:`repro.resilience.FaultPlan`) injects crashes (raised as
     ``SimulatedFailure`` before the scheduled step runs), straggler
     sleeps, and transient checkpoint-I/O errors (retried once).
+
+    ``telemetry`` records per-step ``train/step`` spans (with
+    ``train/dispatch``/``train/data``/``train/ckpt``/``train/wait``
+    children) and window gauges (wps, steps/s, goodput fraction,
+    measured MFU when ``drift`` carries the flops budget);
+    ``drift`` (a :class:`repro.telemetry.DriftMonitor` built from the
+    resolved strategy's ``StepReport.decomposition()``) gets one
+    measured window per logging window.
     """
     from repro import checkpointing as ckpt_lib
 
@@ -260,26 +271,50 @@ def train_loop(cfg: ModelConfig, plan: par.ParallelPlan, rt: Runtime,
         t0 = time.time()
         t_step_ema = 0.0
         batch = first
+        tokens_per_step = int(np.asarray(first["labels"]).size)
+        # Straggler injection scales a *measured* step time, so only a
+        # fault plan that actually schedules stragglers justifies the
+        # every-step host sync; crash/ckpt-io-only plans (and plain
+        # runs) sync just on logging windows and keep dispatch async.
+        sync_every_step = fault_plan is not None and any(
+            e.kind == "straggler" for e in fault_plan.events)
+        win_t0 = time.time()
+        win_start = start_step
+        win_ckpt = win_dispatch = win_wait = win_data = 0.0
         try:
             for step in range(start_step, tc.steps):
+              with telemetry.span("train/step", step_num=step):
                 if fault_plan is not None:
                     fault_plan.check_crash(step)
                     mult = fault_plan.delay_multiplier(step)
                     if mult > 1.0 and t_step_ema > 0.0:
                         time.sleep((mult - 1.0) * t_step_ema)
                 t1 = time.time()
-                params, opt_state, metrics = jstep(params, opt_state, batch)
+                with telemetry.span("train/dispatch"):
+                    params, opt_state, metrics = jstep(params, opt_state,
+                                                       batch)
+                t2 = time.time()
+                win_dispatch += t2 - t1
                 if step + 1 < tc.steps:
-                    batch = next(it)
+                    with telemetry.span("train/data"):
+                        batch = next(it)
+                win_data += time.time() - t2
                 if tc.ckpt_every and (step + 1) % tc.ckpt_every == 0:
-                    save(step + 1, params, opt_state)
-                if fault_plan is not None:
-                    # sync so the straggler sleep scales a real step time
-                    jax.block_until_ready(metrics["loss"])
+                    t3 = time.time()
+                    with telemetry.span("train/ckpt", step=step + 1):
+                        save(step + 1, params, opt_state)
+                    win_ckpt += time.time() - t3
+                log_now = (step + 1) % tc.log_every == 0 or \
+                    step == start_step
+                if sync_every_step or log_now:
+                    t4 = time.time()
+                    with telemetry.span("train/wait"):
+                        jax.block_until_ready(metrics["loss"])
+                    win_wait += time.time() - t4
                     dt_step = time.time() - t1
                     t_step_ema = dt_step if t_step_ema == 0.0 else \
                         0.7 * t_step_ema + 0.3 * dt_step
-                if (step + 1) % tc.log_every == 0 or step == start_step:
+                if log_now:
                     m = {k: float(v) for k, v in metrics.items()
                          if getattr(v, "ndim", 0) == 0}
                     dt = time.time() - t0
@@ -288,6 +323,31 @@ def train_loop(cfg: ModelConfig, plan: par.ParallelPlan, rt: Runtime,
                     print(f"step {step+1:5d}  loss {m.get('loss', float('nan')):.4f}"
                           f"  gnorm {m.get('grad_norm', float('nan')):.3f}"
                           f"  {m['steps_per_s']:.2f} it/s", flush=True)
+                    n_win = step + 1 - win_start
+                    dt_win = time.time() - win_t0
+                    if n_win > 0 and dt_win > 0:
+                        telemetry.gauge("train/wps",
+                                        tokens_per_step * n_win / dt_win)
+                        telemetry.gauge("train/steps_per_s",
+                                        n_win / dt_win)
+                        telemetry.gauge("train/goodput_frac",
+                                        max(0.0, 1.0 - win_ckpt / dt_win))
+                        if drift is not None:
+                            fl = drift.meta.get("model_flops_per_step")
+                            peak = drift.meta.get("cluster_peak_flops")
+                            if fl and peak:
+                                telemetry.gauge(
+                                    "train/mfu",
+                                    fl / (dt_win / n_win) / peak)
+                            drift.observe(
+                                {"step": dt_win / n_win,
+                                 "dispatch": win_dispatch / n_win,
+                                 "wait": win_wait / n_win,
+                                 "data": win_data / n_win},
+                                n_steps=n_win)
+                    win_t0 = time.time()
+                    win_start = step + 1
+                    win_ckpt = win_dispatch = win_wait = win_data = 0.0
                     if hooks:
                         hooks(step + 1, params, m)
         finally:

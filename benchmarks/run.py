@@ -205,12 +205,16 @@ def _measure_strategy_step(cfg, spec: str, shape, n_iter: int = 3,
             cfg, plan, params, init_opt_state(params), batch)
         step = jax.jit(make_train_step(cfg, rt, TrainConfig()),
                        out_shardings=(pshard, None, None))
-        jax.block_until_ready(step(params_s, opt_s, batch_s))  # compile
+        # AOT-compile once: the executable both runs the timing loop and
+        # reports the backend's memory analysis (measured peak memory)
+        compiled = step.lower(params_s, opt_s, batch_s).compile()
+        jax.block_until_ready(compiled(params_s, opt_s, batch_s))  # warm-up
         t_best = float("inf")
         for _ in range(n_iter):
             t0 = time.perf_counter()
-            jax.block_until_ready(step(params_s, opt_s, batch_s))
+            jax.block_until_ready(compiled(params_s, opt_s, batch_s))
             t_best = min(t_best, time.perf_counter() - t0)
+        mem = _compiled_memory(compiled)
     row = {
         "spec": spec,
         "mesh": {k: int(v) for k, v in plan.mesh.shape.items()},
@@ -219,8 +223,29 @@ def _measure_strategy_step(cfg, spec: str, shape, n_iter: int = 3,
         "predicted_t_step_s": report.t_step,
         "measured_t_step_s": round(t_best, 4),
         "measured_backend": jax.default_backend(),
+        # compiled-executable memory analysis (None where the backend
+        # does not report one): temp = activations/workspace — the term
+        # pipeline schedules actually move; args = params + opt state
+        "measured_temp_bytes": mem.get("temp"),
+        "measured_arg_bytes": mem.get("args"),
     }
     return strat, report, plan, rt, row
+
+
+def _compiled_memory(compiled) -> dict:
+    """Per-device memory analysis of a compiled executable ({} / None
+    fields when the backend can't say)."""
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:                      # noqa: BLE001 — best-effort probe
+        return {}
+    if ma is None:
+        return {}
+    def _get(attr):
+        v = getattr(ma, attr, None)
+        return int(v) if v is not None else None
+    return {"temp": _get("temp_size_in_bytes"),
+            "args": _get("argument_size_in_bytes")}
 
 
 def _write_bench(out_path: str, payload: dict, n_rows: int):
@@ -233,23 +258,29 @@ def _write_bench(out_path: str, payload: dict, n_rows: int):
 
 
 def _pp_sweep(out_path: str = "results/benchmarks/BENCH_pipeline.json",
-              pps=(1, 2, 4), scheds=("gpipe", "1f1b"), n_iter: int = 3):
+              pps=(1, 2, 4), scheds=("gpipe", "1f1b", "1f1b_i2", "zb"),
+              ovls=(False, True), n_iter: int = 3):
     """Predicted vs measured step time for pp in {1,2,4} x schedule in
-    {gpipe, 1f1b} on 8 virtual CPU devices -> BENCH_pipeline.json (CI
-    artifact).
+    {gpipe, 1f1b, 1f1b_i2, zb} x ZeRO gather overlap {off, on} on 8
+    virtual CPU devices -> BENCH_pipeline.json (CI artifact).
 
     Measured wall time is a CPU regression signal; the *comparable*
     quantities across the predicted/measured columns are the per-schedule
     pipeline bubble fraction (schedule-determined and hardware-free —
-    identical for GPipe and 1F1B) and the per-schedule peak-memory
-    estimate (where 1F1B's min(M, P) in-flight cap is the differentiator).
+    (P-1)/(M+P-1) for gpipe/1f1b, (P-1)/(vM+P-1) interleaved,
+    2(P-1)/(3M+2P-2) zero-bubble) and the per-schedule peak memory,
+    recorded both predicted (cost model) and measured (compiled-executable
+    memory analysis, where the backend reports one).  The `_ovl` variants
+    flip the double-buffered ZeRO gather prefetch; the bubble probe runs
+    once per schedule (the bubble does not depend on the overlap token).
     """
     from repro.launch.devices import force_host_device_count
     force_host_device_count(8)
     import jax
     from repro import strategy as strategy_lib
     from repro.configs import ShapeConfig, get_config, reduced
-    from repro.core.pipeline import inflight_microbatches
+    from repro.core.pipeline import (inflight_microbatches, op_tick_counts,
+                                     virtual_stages)
     from repro.perf.pipeline_probe import measure_bubble
 
     cfg = reduced(get_config("qwen3-0.6b"), n_layers=8)
@@ -258,54 +289,70 @@ def _pp_sweep(out_path: str = "results/benchmarks/BENCH_pipeline.json",
     rows, summary = [], []
     for pp in pps:
         for sched in (scheds if pp > 1 else ("gpipe",)):
-            if pp == 1:
-                spec = "fsdp"
-            else:
-                spec = f"fsdp_pp{pp}_mb8" + \
-                    ("" if sched == "gpipe" else f"_{sched}")
-            strat, report, plan, rt, row = _measure_strategy_step(
-                cfg, spec, shape, n_iter)
-            t_best = row["measured_t_step_s"]
-            row.update(pp=pp, microbatches=strat.microbatches, sched=sched,
-                       predicted_wps=report.wps,
-                       predicted_peak_memory_bytes=report.memory_per_device)
-            if pp > 1:
-                row["inflight_microbatches"] = inflight_microbatches(
-                    pp, strat.microbatches, sched)
-                row.update(measure_bubble(cfg, strat, topo, n_iter=n_iter))
-                if row.get("fit_unreliable"):
-                    # the two-point fit came out non-increasing — a failed
-                    # measurement: no rel_err is recorded (a clamped 0.0
-                    # would fabricate a 100% miss), only the flag
-                    row["bubble_rel_err"] = None
-                    print(f"[bench] warn: {spec} bubble fit unreliable "
-                          "(t(2M) <= t(M); noisy host) — row flagged")
-                    rel = 0.0
-                else:
-                    rel = abs(row["bubble_measured"]
-                              - row["bubble_predicted"]) \
-                        / row["bubble_predicted"]
-                    row["bubble_rel_err"] = round(rel, 3)
-                if not row.get("fit_unreliable") and rel > 0.2:
-                    # two-point wall-clock fits are noisy on oversubscribed
-                    # CPU hosts; flag it so the artifact is self-describing
-                    # (the tier-1 slow test enforces the 20% bound with
-                    # retries; this sweep only records the trajectory)
-                    print(f"[bench] warn: {spec} measured bubble "
-                          f"{row['bubble_measured']:.3f} is {rel:.0%} off "
-                          f"the predicted {row['bubble_predicted']:.3f} "
-                          "(noisy host?)")
-            rows.append(row)
-            summary.append((f"pp_sweep_{spec}", t_best * 1e6,
-                            f"bubble{row.get('bubble_measured', 0.0):.3f}"
-                            f"_pred{row.get('bubble_predicted', 0.0):.3f}"
-                            f"_mem{row['predicted_peak_memory_bytes']/2**20:.0f}MiB"))
+            for ovl in ovls:
+                rows.append(_pp_sweep_point(
+                    cfg, topo, shape, pp, sched, ovl, n_iter, summary,
+                    inflight_microbatches, op_tick_counts, virtual_stages,
+                    measure_bubble))
     _write_bench(out_path, {
         "backend": jax.default_backend(), "n_iter": n_iter,
         "arch": cfg.name, "shape": {"seq_len": shape.seq_len,
                                     "global_batch": shape.global_batch},
         "rows": rows}, len(rows))
     return summary
+
+
+def _pp_sweep_point(cfg, topo, shape, pp, sched, ovl, n_iter, summary,
+                    inflight_microbatches, op_tick_counts, virtual_stages,
+                    measure_bubble):
+    """One (pp, sched, ovl) row of the pipeline sweep."""
+    if pp == 1:
+        spec = "fsdp" + ("_ovl" if ovl else "")
+    else:
+        spec = f"fsdp_pp{pp}_mb8" \
+            + ("" if sched == "gpipe" else f"_{sched}") \
+            + ("_ovl" if ovl else "")
+    strat, report, _plan, _rt, row = _measure_strategy_step(
+        cfg, spec, shape, n_iter)
+    t_best = row["measured_t_step_s"]
+    row.update(pp=pp, microbatches=strat.microbatches, sched=sched,
+               overlap=ovl, virtual_stages=virtual_stages(sched),
+               predicted_wps=report.wps,
+               predicted_peak_memory_bytes=report.memory_per_device)
+    if pp > 1:
+        row["inflight_microbatches"] = inflight_microbatches(
+            pp, strat.microbatches, sched)
+        row["op_tick_counts"] = op_tick_counts(
+            sched, pp, strat.microbatches)
+        if not ovl:
+            row.update(measure_bubble(cfg, strat, topo, n_iter=n_iter))
+            if row.get("fit_unreliable"):
+                # the two-point fit came out non-increasing — a failed
+                # measurement: no rel_err is recorded (a clamped 0.0
+                # would fabricate a 100% miss), only the flag
+                row["bubble_rel_err"] = None
+                print(f"[bench] warn: {spec} bubble fit unreliable "
+                      "(t(2M) <= t(M); noisy host) — row flagged")
+                rel = 0.0
+            else:
+                rel = abs(row["bubble_measured"]
+                          - row["bubble_predicted"]) \
+                    / row["bubble_predicted"]
+                row["bubble_rel_err"] = round(rel, 3)
+            if not row.get("fit_unreliable") and rel > 0.2:
+                # two-point wall-clock fits are noisy on oversubscribed
+                # CPU hosts; flag it so the artifact is self-describing
+                # (the tier-1 slow test enforces the 20% bound with
+                # retries; this sweep only records the trajectory)
+                print(f"[bench] warn: {spec} measured bubble "
+                      f"{row['bubble_measured']:.3f} is {rel:.0%} off "
+                      f"the predicted {row['bubble_predicted']:.3f} "
+                      "(noisy host?)")
+    summary.append((f"pp_sweep_{spec}", t_best * 1e6,
+                    f"bubble{row.get('bubble_measured', 0.0):.3f}"
+                    f"_pred{row.get('bubble_predicted', 0.0):.3f}"
+                    f"_mem{row['predicted_peak_memory_bytes']/2**20:.0f}MiB"))
+    return row
 
 
 def _ep_sweep(out_path: str = "results/benchmarks/BENCH_moe.json",
@@ -856,9 +903,9 @@ def main() -> None:
     ap.add_argument("--pp-sweep", dest="pp_sweep", action="store_true",
                     help="only run the pipeline-parallel sweep (predicted "
                          "vs measured step time + per-schedule bubble and "
-                         "peak-memory estimate for pp in {1,2,4} x "
-                         "{gpipe,1f1b} on 8 virtual devices) and write "
-                         "BENCH_pipeline.json")
+                         "predicted+measured peak memory for pp in {1,2,4} "
+                         "x {gpipe,1f1b,1f1b_i2,zb} x overlap {off,on} on "
+                         "8 virtual devices) and write BENCH_pipeline.json")
     ap.add_argument("--pipeline_json",
                     default="results/benchmarks/BENCH_pipeline.json")
     ap.add_argument("--ep-sweep", dest="ep_sweep", action="store_true",

@@ -35,8 +35,8 @@ import math
 from typing import Dict, Tuple
 
 from repro.configs.base import ModelConfig, ShapeConfig
-from repro.core.pipeline import (SCHEDULE_NAMES, bubble_fraction,
-                                 inflight_microbatches)
+from repro.core.pipeline import (bubble_fraction, inflight_microbatches,
+                                 known_schedule, virtual_stages)
 from repro.perf import flops as flops_lib
 
 
@@ -205,12 +205,22 @@ class Strategy:
                                 # their E dim over it)
     zero_stage: int = 3         # 0: DDP, 2/3: sharded (paper: FSDP ~ ZeRO-2/3)
     microbatches: int = 1       # pipeline microbatches per step
-    sched: str = "gpipe"        # pipeline schedule: 'gpipe' | '1f1b'.  The
-                                # idle-tick bubble is identical; 1F1B caps
-                                # in-flight activations at min(M, pp)
-                                # (the ``mem`` term, and therefore
-                                # ``fits``) at the price of one extra
-                                # forward recompute per step
+    sched: str = "gpipe"        # pipeline schedule: 'gpipe' | '1f1b' |
+                                # '1f1b_i<v>' | 'zb'.  gpipe/1f1b share
+                                # the idle-tick bubble (1F1B caps
+                                # in-flight activations at min(M, pp) at
+                                # the price of one forward recompute);
+                                # interleaved shrinks it to
+                                # (P-1)/(vM+P-1) for v x p2p volume, zb
+                                # to 2(P-1)/(3M+2P-2) via deferred wgrads
+    overlap: bool = False       # double-buffered ZeRO gather prefetch
+                                # ('ovl' token): the gather for layer l+1
+                                # is issued at the top of layer l's
+                                # compute, so each gather hides under
+                                # max(t_compute, t_gather) — modeled as
+                                # one extra layer of prefetch window in
+                                # the FSDP exposed-comm terms.  Needs a
+                                # sharded-param plan (zero_stage >= 2)
     fsdp_group: int = 0         # param-shard group size; 0 -> full dp (FSDP).
                                 # HSDP: the island-local group, with the
                                 # cross-island grad AR charged separately.
@@ -236,9 +246,16 @@ class Strategy:
 
     def valid(self) -> bool:
         return (self.precision in PRECISIONS and
-                self.sched in SCHEDULE_NAMES and
+                known_schedule(self.sched) and
                 # a schedule token without a pipeline is not a real point
                 (self.pp > 1 or self.sched == "gpipe") and
+                # interleaved chunk rotation assigns microbatches to
+                # ranks in groups of pp
+                (virtual_stages(self.sched) == 1 or
+                 self.microbatches % self.pp == 0) and
+                # gather/compute overlap is a property of the sharded-
+                # param gather loop; DDP has nothing to prefetch
+                (not self.overlap or self.zero_stage >= 2) and
                 self.dp >= 1 and
                 self.dp * self.tp * self.pp * self.cp == self.n_devices and
                 self.dp % self.fsdp_n == 0 and
@@ -424,12 +441,13 @@ def step_time(cfg: ModelConfig, hw: Hardware, strat: Strategy,
     fwd_frac = (1 / 4 if remat else 1 / 3) if train else 1.0
     t_layer_fwd = t_compute * fwd_frac / L
     t_layer_bwd = t_compute * (1 - fwd_frac) / L if train else 0.0
-    if train and strat.pp > 1 and strat.sched == "1f1b":
-        # the executable 1F1B bakes remat into its backward: microbatch
-        # forwards are replayed just-in-time through the pipe so only
-        # min(M, P) boundary activations are ever held.  Charge that one
-        # extra forward pass — the memory win is not free, and the
-        # planner must see the genuine bubble/memory/recompute tradeoff
+    if train and strat.pp > 1 and strat.sched != "gpipe":
+        # every non-GPipe schedule (1f1b, interleaved, zb) bakes remat
+        # into its backward: microbatch forwards are replayed just-in-
+        # time through the pipe so only the warmup-depth boundary
+        # activations are ever held.  Charge that one extra forward
+        # pass — the memory win is not free, and the planner must see
+        # the genuine bubble/memory/recompute tradeoff
         t_compute *= 1 + fwd_frac
 
     # per-device local batch (examples)
@@ -474,8 +492,15 @@ def step_time(cfg: ModelConfig, hw: Hardware, strat: Strategy,
             hw, moe_layer_bytes / strat.ep * grad_scale, n_fsdp_e)
         comm["fsdp_ag"] = n_ag * (L * ag_dense + n_moe * ag_moe)
         comm["fsdp_rs"] = (L * rs_dense + n_moe * rs_moe) if train else 0.0
-        win_fwd = PREFETCH_EFF * t_layer_fwd
-        win_bwd = PREFETCH_EFF * t_layer_bwd
+        # double-buffered gather prefetch ('ovl'): issuing layer l+1's
+        # gather at the *top* of layer l's compute decouples the gather
+        # deadline from its issue point by one full layer — each gather
+        # costs max(t_compute, t_gather) instead of serializing, i.e.
+        # the hiding window widens by t_layer on top of the baseline
+        # prefetch depth
+        prefetch = PREFETCH_EFF + (1.0 if strat.overlap else 0.0)
+        win_fwd = prefetch * t_layer_fwd
+        win_bwd = prefetch * t_layer_bwd
         n_dense_l = L - n_moe
 
         def _exposed_ag(win):
@@ -566,10 +591,15 @@ def step_time(cfg: ModelConfig, hw: Hardware, strat: Strategy,
         m = strat.microbatches          # valid() guarantees m >= pp
         # per-schedule bubble: GPipe and 1F1B idle the same tick fraction
         # ((P-1)/(M+P-1)) at equal per-tick cost — 1F1B reorders the
-        # bubble to cap in-flight activations, it does not shrink it
+        # bubble to cap in-flight activations, it does not shrink it.
+        # Interleaved ((P-1)/(vM+P-1)) and zb (2(P-1)/(3M+2P-2))
+        # genuinely shrink it — interleaved pays in p2p volume below
         bubble_frac = bubble_fraction(strat.pp, m, strat.sched)
+        v = virtual_stages(strat.sched)
         act_boundary = local_batch * seq_len * d * px.act_bytes / m
-        comm["pp_p2p"] = (strat.pp - 1) * m * t_p2p(
+        # v virtual stages per rank: every microbatch crosses the ring v
+        # times — pp*v - 1 boundary hops instead of pp - 1
+        comm["pp_p2p"] = (strat.pp * v - 1) * m * t_p2p(
             hw, act_boundary, strat.pp * strat.tp > hw.island) * (2 if train else 1)
         bubble = bubble_frac            # fraction of step, applied below
     exposed_pp = comm["pp_p2p"] * 0.5
@@ -595,8 +625,18 @@ def step_time(cfg: ModelConfig, hw: Hardware, strat: Strategy,
         if strat.pp > 1:
             inflight = inflight_microbatches(strat.pp, strat.microbatches,
                                              strat.sched)
-            mem += (L / strat.pp) * act_bytes_layer * \
+            # interleaved counts in-flight *chunk* activations, each a
+            # 1/v slice of the rank's layers — the deeper warmup window
+            # holds proportionally thinner residuals
+            chunk_layers = L / (strat.pp * virtual_stages(strat.sched))
+            mem += chunk_layers * act_bytes_layer * \
                 inflight / strat.microbatches
+            if strat.sched == "zb":
+                # deferred-wgrad stash: the dgrad sub-tick parks one
+                # microbatch's parameter gradient until its W sub-tick
+                # drains it (backlog depth 1 under the B>W>F priority)
+                mem += (P_bytes / (strat.tp * strat.pp)) * \
+                    (px.grad_bytes / px.param_bytes)
         else:
             mem += L * act_bytes_layer
     mem += act_bytes_layer * 4                      # working set

@@ -84,7 +84,13 @@ class ParallelPlan:
     seq_parallel_residuals: bool = True  # Megatron-SP residual stream
     pipe: str = ""                       # pipeline mesh axis ('' = no PP)
     microbatches: int = 1                # pipeline microbatches per minibatch
-    pipe_sched: str = "gpipe"            # pipeline schedule: 'gpipe' | '1f1b'
+    pipe_sched: str = "gpipe"            # pipeline schedule: 'gpipe' |
+                                         # '1f1b' | '1f1b_i<v>' | 'zb'
+    zero_overlap: bool = False           # double-buffered ZeRO gather
+                                         # prefetch: issue layer l+1's
+                                         # param gather during layer l's
+                                         # compute (needs per-block
+                                         # gathering, which it implies)
     expert: str = ""                     # expert mesh axis ('' = no EP);
                                          # factored out of the data axis, so
                                          # it also appears in dp/fsdp
@@ -490,10 +496,14 @@ def make_runtime(cfg: ModelConfig, plan: ParallelPlan, shape: ShapeConfig,
     if plan.attn == "context":
         kw["attn_q_chunk"] = shape.seq_len
     # fp8 comms only exist on the per-layer gather path, so a comm_dtype
-    # policy turns it on by default (still overridable)
-    if overrides.pop("fsdp_gather_per_block", bool(pol.comm_dtype)) \
-            and plan.fsdp:
+    # policy turns it on by default (still overridable); the overlap
+    # transform is *defined* on that path (there is no per-layer gather
+    # to double-buffer otherwise), so 'ovl' turns it on too
+    per_block = overrides.pop("fsdp_gather_per_block",
+                              bool(pol.comm_dtype) or plan.zero_overlap)
+    if per_block and plan.fsdp:
         kw["gather_params"] = make_param_gatherer(cfg, plan)
+        kw["gather_prefetch"] = plan.zero_overlap
     kw.update(overrides)
     return Runtime(**kw)
 

@@ -1,6 +1,6 @@
-"""Pipeline parallelism: pluggable schedules (GPipe, 1F1B) over a mesh axis
-via shard_map + collective_permute (ppermute), jax-native (no NCCL p2p
-emulation).
+"""Pipeline parallelism: pluggable schedules (GPipe, 1F1B, interleaved
+1F1B, zero-bubble) over a mesh axis via shard_map + collective_permute
+(ppermute), jax-native (no NCCL p2p emulation).
 
 Each device along the ``pipe`` axis owns one *stage* = a contiguous group
 of layers (the stacked layer params are sharded over the pipe axis on
@@ -15,12 +15,26 @@ many microbatch activations a stage must hold at once:
     (P - stage)-deep warmup each stage alternates F and B, so a microbatch's
     stored activation is freed as soon as its backward runs.  In-flight
     activations per stage: min(M, P).
+  * ``1f1b_i<v>`` — Megatron *interleaved* 1F1B: each rank holds ``v``
+    non-contiguous chunks of the layer stack (virtual stage ``c*P + r``
+    on rank r), so every microbatch crosses the ring v times but each
+    warmup/drain idle amortizes over vM chunk ticks — bubble
+    (P-1)/(vM+P-1) at v× the p2p volume and a deeper warmup window of
+    (1/v-sized) chunk activations.
+  * ``zb``     — zero-bubble 1F1B (ZB-H1 family): each backward splits
+    into a dgrad sub-tick (activation cotangent, frees the stored input)
+    and a deferred wgrad sub-tick that fills the drain — bubble
+    2(P-1)/(3M+2P-2) < (P-1)/(M+P-1) at 1f1b's activation footprint plus
+    a small parameter-gradient stash.
 
-Both schedules idle for the same fraction of ticks — ``(P-1)/(M+P-1)``,
+gpipe and 1f1b idle for the same fraction of ticks — ``(P-1)/(M+P-1)``,
 exactly the bubble term ``core/costmodel.step_time`` charges — because at
-equal per-tick cost 1F1B *reorders* the bubble rather than removing it.
-What 1F1B buys is the smaller activation footprint, which is why the cost
-model's ``mem`` term (and therefore ``fits``) is schedule-dependent.
+equal per-tick cost 1F1B *reorders* the bubble rather than removing it
+(what it buys is the smaller activation footprint, which is why the cost
+model's ``mem`` term and therefore ``fits`` is schedule-dependent).  The
+interleaved and zero-bubble schedules genuinely shrink the bubble, paying
+in p2p volume / warmup depth (interleaved) or sub-tick count and wgrad
+stash (zb) — the frontier ``costmodel.step_time`` charges per schedule.
 
 The stage body computes over the *full inner mesh*: activations are
 sharded over the batch axes (``x_spec``), stage params over ``axis`` plus
@@ -39,18 +53,59 @@ from __future__ import annotations
 
 import dataclasses
 import logging
+import re
 import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core.compat import shard_map as _shard_map
 
 logger = logging.getLogger(__name__)
 
-SCHEDULE_NAMES = ("gpipe", "1f1b")
+# base schedule families; interleaved schedules are the parametric family
+# '1f1b_i<v>' (v >= 2 virtual stages per rank) on top of these
+SCHEDULE_NAMES = ("gpipe", "1f1b", "zb")
+
+_INTERLEAVED_RE = re.compile(r"^1f1b_i(\d+)$")
+
+
+def parse_schedule(sched: str) -> Tuple[str, int]:
+    """Split a schedule name into (family, virtual_stages).
+
+    'gpipe' / '1f1b' / 'zb' -> (name, 1); '1f1b_i<v>' -> ('1f1b_i', v)
+    with v >= 2 (v == 1 is plain 1f1b — rejected to keep names canonical).
+    Raises ValueError for anything else, so every validation site shares
+    one grammar."""
+    m = _INTERLEAVED_RE.match(sched)
+    if m:
+        v = int(m.group(1))
+        if v < 2:
+            raise ValueError(
+                f"interleaved schedule {sched!r} needs v >= 2 virtual "
+                "stages per rank (v == 1 is plain '1f1b')")
+        return "1f1b_i", v
+    if sched in SCHEDULE_NAMES:
+        return sched, 1
+    raise ValueError(f"unknown pipeline schedule {sched!r}; expected one "
+                     f"of {SCHEDULE_NAMES} or '1f1b_i<v>' (v >= 2)")
+
+
+def known_schedule(sched: str) -> bool:
+    try:
+        parse_schedule(sched)
+        return True
+    except ValueError:
+        return False
+
+
+def virtual_stages(sched: str) -> int:
+    """Virtual stages (param chunks) per pipe rank: v for '1f1b_i<v>',
+    1 for every flat schedule."""
+    return parse_schedule(sched)[1]
 
 
 # ---------------------------------------------------------------------------
@@ -59,32 +114,56 @@ SCHEDULE_NAMES = ("gpipe", "1f1b")
 
 def bubble_fraction(n_stages: int, n_microbatches: int,
                     sched: str = "gpipe") -> float:
-    """Idle-tick fraction of the schedule.  Identical for GPipe and 1F1B
-    at equal per-tick cost: GPipe idles (P-1) of (M+P-1) ticks in each of
-    the forward and backward passes; 1F1B idles 2(P-1) of 2(M+P-1)
-    combined ticks.  (1F1B's win is memory, not bubble — see
-    ``inflight_microbatches``.)"""
-    if sched not in SCHEDULE_NAMES:
-        raise ValueError(f"unknown pipeline schedule {sched!r}; "
-                         f"expected one of {SCHEDULE_NAMES}")
+    """Idle-tick fraction of the schedule.
+
+      * gpipe / 1f1b — (P-1)/(M+P-1): identical at equal per-tick cost
+        (1F1B *reorders* the bubble to cap in-flight activations, it does
+        not shrink it);
+      * 1f1b_i<v>  — (P-1)/(vM+P-1): v virtual stages per rank slice each
+        tick v ways, so the same warmup/drain idles amortize over vM work
+        ticks (Megatron interleaved);
+      * zb         — 2(P-1)/(3M+2P-2): each backward splits into dgrad and
+        wgrad sub-ticks (F/B/W all one sub-tick) and the deferred wgrads
+        fill the drain; only the 2(P-1) warmup+drain sub-ticks idle, out
+        of 3M work sub-ticks per rank (ZB-H1 with a bounded wgrad
+        backlog).  Strictly below 1f1b's bubble for every M >= 1.
+    """
+    family, v = parse_schedule(sched)
     if n_stages <= 1:
         return 0.0
-    return (n_stages - 1) / (n_microbatches + n_stages - 1)
+    P_, M = n_stages, n_microbatches
+    if family == "1f1b_i":
+        return (P_ - 1) / (v * M + P_ - 1)
+    if family == "zb":
+        return 2 * (P_ - 1) / (3 * M + 2 * P_ - 2)
+    return (P_ - 1) / (M + P_ - 1)
 
 
 def inflight_microbatches(n_stages: int, n_microbatches: int,
                           sched: str = "gpipe") -> int:
-    """Peak number of microbatch activations a stage holds awaiting
+    """Peak number of in-flight activations a rank holds awaiting
     backward — the schedule-dependent factor in pipeline activation
-    memory (GPipe: M; 1F1B: min(M, P))."""
-    if sched not in SCHEDULE_NAMES:
-        raise ValueError(f"unknown pipeline schedule {sched!r}; "
-                         f"expected one of {SCHEDULE_NAMES}")
+    memory.
+
+      * gpipe      — M whole-stage activations;
+      * 1f1b / zb  — min(M, P) whole-stage activations (zb's dgrad
+        sub-tick frees the activation exactly where 1f1b's combined
+        backward does; the deferred wgrad keeps only a param-shaped
+        gradient stash, charged separately by the cost model);
+      * 1f1b_i<v>  — min(2(P-1) + (v-1)P + 1, vM) *chunk* activations,
+        each covering 1/v of the rank's layer slice (the rank-0 warmup
+        depth of the interleaved schedule) — divide by v before comparing
+        against whole-stage units.
+    """
+    family, v = parse_schedule(sched)
+    P_, M = n_stages, n_microbatches
     if n_stages <= 1:
-        return n_microbatches
-    if sched == "1f1b":
-        return min(n_microbatches, n_stages)
-    return n_microbatches
+        return M
+    if family == "1f1b_i":
+        return min(2 * (P_ - 1) + (v - 1) * P_ + 1, v * M)
+    if family in ("1f1b", "zb"):
+        return min(M, P_)
+    return M
 
 
 # ---------------------------------------------------------------------------
@@ -520,9 +599,590 @@ class OneFOneBSchedule(PipelineSchedule):
         return call(stage_params, x, extras)
 
 
+# ---------------------------------------------------------------------------
+# table-driven schedules: interleaved 1F1B and zero-bubble
+# ---------------------------------------------------------------------------
+# The closed-form tick arithmetic of OneFOneBSchedule does not extend to
+# interleaved virtual stages (per-rank op order depends on warmup depth AND
+# chunk rotation) or to zero-bubble's three sub-tick kinds, so these
+# schedules build an explicit host-side (tick, rank) -> (op, chunk, mb)
+# table with a greedy list scheduler and drive both the primal forward
+# scan and the custom_vjp combined recompute/backward scan from static
+# int32 arrays derived from that table.
+
+_OP_CODES = {"idle": 0, "F": 1, "B": 2, "W": 3}
+
+
+def _interleaved_full_table(P_, M, v):
+    """Greedy Megatron-order interleaved 1F1B.
+
+    Virtual stage ``sv = c*P + r`` (chunk c of rank r); per-rank op order
+    is the Megatron one — forwards in groups of P microbatches,
+    chunk-major within the group; backwards the same with chunks
+    reversed — after a ``min(2(P-1-r) + (v-1)P + 1, vM)`` warmup.  The
+    result achieves exactly T = 2(vM+P-1) ticks and bubble
+    (P-1)/(vM+P-1) with peak in-flight chunk activations equal to the
+    rank-0 warmup depth."""
+    if M % P_:
+        raise ValueError(
+            f"interleaved 1f1b needs microbatches divisible by stages "
+            f"(got M={M}, P={P_}: the chunk rotation assigns microbatches "
+            "to ranks in groups of P)")
+    S = v * P_
+    order_f = [(c, g * P_ + o) for g in range(M // P_)
+               for c in range(v) for o in range(P_)]
+    order_b = [(c, g * P_ + o) for g in range(M // P_)
+               for c in range(v - 1, -1, -1) for o in range(P_)]
+    warm = [min(2 * (P_ - r - 1) + (v - 1) * P_ + 1, v * M)
+            for r in range(P_)]
+    done_f, done_b = {}, {}
+    fi = [0] * P_
+    bi = [0] * P_
+    table = []
+    t = 0
+    while any(fi[r] < v * M or bi[r] < v * M for r in range(P_)):
+        row = []
+        for r in range(P_):
+            entry = ("idle", 0, 0)
+            if fi[r] < warm[r] and bi[r] == 0:
+                want = "F"                      # warmup forwards
+            elif bi[r] < v * M and (fi[r] >= v * M
+                                    or bi[r] <= fi[r] - warm[r]):
+                want = "B"                      # steady 1B after warmup
+            elif fi[r] < v * M:
+                want = "F"
+            else:
+                want = "B"
+            for cand in (want, "B" if want == "F" else "F"):
+                if cand == "F" and fi[r] < v * M:
+                    c, j = order_f[fi[r]]
+                    sv = c * P_ + r
+                    if sv == 0 or done_f.get((sv - 1, j), t) < t:
+                        entry = ("F", c, j)
+                        done_f[(sv, j)] = t
+                        fi[r] += 1
+                        break
+                elif cand == "B" and bi[r] < v * M:
+                    c, j = order_b[bi[r]]
+                    sv = c * P_ + r
+                    ok = (done_b.get((sv + 1, j), t) < t if sv < S - 1
+                          else done_f.get((sv, j), t) < t)
+                    if ok:
+                        entry = ("B", c, j)
+                        done_b[(sv, j)] = t
+                        bi[r] += 1
+                        break
+            row.append(entry)
+        table.append(row)
+        t += 1
+        if t > 6 * (v * M + P_):
+            raise RuntimeError("interleaved schedule made no progress")
+    return table
+
+
+def _zb_full_table(P_, M):
+    """Greedy zero-bubble (ZB-H1-style) table: each backward splits into a
+    dgrad sub-tick ('B': activation cotangent, frees the stored input) and
+    a deferred wgrad sub-tick ('W': parameter gradient) that fills what
+    would otherwise be drain idle time.
+
+    Priority B > W > F keeps the wgrad backlog at <= 1 pending microbatch
+    per rank while still reaching T = 3M + 2(P-1) sub-ticks — bubble
+    2(P-1)/(3M+2P-2), strictly below 1f1b's (P-1)/(M+P-1) for all M.
+    (B > F > W reaches the (P-1)/(3M+P-1) floor but lets the backlog grow
+    to M — an O(M) param-gradient stash for a second-order win.)"""
+    if M < P_:
+        raise ValueError(f"zb needs microbatches >= stages "
+                         f"(got M={M} < P={P_})")
+    done_f, done_b = {}, {}
+    fi = [0] * P_
+    bi = [0] * P_
+    wi = [0] * P_
+    table = []
+    t = 0
+    while any(fi[r] < M or bi[r] < M or wi[r] < M for r in range(P_)):
+        row = []
+        for r in range(P_):
+            entry = ("idle", 0, 0)
+            if bi[r] < M and (done_b.get((r + 1, bi[r]), t) < t
+                              if r < P_ - 1
+                              else done_f.get((r, bi[r]), t) < t):
+                entry = ("B", 0, bi[r])
+                done_b[(r, bi[r])] = t
+                bi[r] += 1
+            elif wi[r] < bi[r]:
+                entry = ("W", 0, wi[r])
+                wi[r] += 1
+            elif fi[r] < M and fi[r] - bi[r] < P_ - r and \
+                    (r == 0 or done_f.get((r - 1, fi[r]), t) < t):
+                entry = ("F", 0, fi[r])
+                done_f[(r, fi[r])] = t
+                fi[r] += 1
+            row.append(entry)
+        table.append(row)
+        t += 1
+        if t > 6 * (3 * M + 2 * P_):
+            raise RuntimeError("zb schedule made no progress")
+    return table
+
+
+def _fwd_only_table(P_, M, v):
+    """Forward-only table (the custom_vjp primal): each rank runs its
+    Megatron-order forwards as soon as the upstream virtual stage has
+    produced the input."""
+    S = v * P_
+    order_f = [(c, g * P_ + o) for g in range(M // P_)
+               for c in range(v) for o in range(P_)] if v > 1 else \
+        [(0, j) for j in range(M)]
+    done_f = {}
+    fi = [0] * P_
+    table = []
+    t = 0
+    while any(fi[r] < v * M for r in range(P_)):
+        row = []
+        for r in range(P_):
+            entry = ("idle", 0, 0)
+            if fi[r] < v * M:
+                c, j = order_f[fi[r]]
+                sv = c * P_ + r
+                if sv == 0 or done_f.get((sv - 1, j), t) < t:
+                    entry = ("F", c, j)
+                    done_f[(sv, j)] = t
+                    fi[r] += 1
+            row.append(entry)
+        table.append(row)
+        t += 1
+        if t > 6 * (v * M + P_):
+            raise RuntimeError("forward table made no progress")
+    return table
+
+
+def _max_overlap(intervals):
+    """Peak count of integer-time intervals [a, b] simultaneously alive."""
+    events = []
+    for a, b in intervals:
+        if b >= a:
+            events.append((a, 1))
+            events.append((b + 1, -1))
+    events.sort()
+    cur = peak = 0
+    for _, d in events:
+        cur += d
+        peak = max(peak, cur)
+    return peak
+
+
+def _ring_depths(table, P_, M, v):
+    """Ring-buffer depths the executable needs for this exact table:
+    (act, pend_f, pend_b, wgrad-stash) — the per-(rank, chunk) peak count
+    of stored stage inputs (F..B), inbound activations (upstream F..own
+    F), inbound cotangents (downstream B..own B) and pending wgrads
+    (B..W).  Production/consumption are both j-ascending per chunk, so
+    the alive set is a consecutive microbatch window and slot ``j % depth``
+    is collision-free."""
+    S = v * P_
+    tf, tb, tw = {}, {}, {}
+    for t, row in enumerate(table):
+        for r, (op, c, j) in enumerate(row):
+            sv = c * P_ + r
+            if op == "F":
+                tf[(sv, j)] = t
+            elif op == "B":
+                tb[(sv, j)] = t
+            elif op == "W":
+                tw[(sv, j)] = t
+    da = df = db = dw = 1
+    for sv in range(S):
+        if tb:
+            da = max(da, _max_overlap(
+                [(tf[(sv, j)], tb[(sv, j)] - 1) for j in range(M)]))
+        if sv > 0:
+            df = max(df, _max_overlap(
+                [(tf[(sv - 1, j)], tf[(sv, j)] - 1) for j in range(M)]))
+        if tb and sv < S - 1:
+            db = max(db, _max_overlap(
+                [(tb[(sv + 1, j)], tb[(sv, j)] - 1) for j in range(M)]))
+        if tw:
+            dw = max(dw, _max_overlap(
+                [(tb[(sv, j)], tw[(sv, j)] - 1) for j in range(M)]))
+    return da, df, db, dw
+
+
+def _sched_arrays(table, P_, M, v, df, db):
+    """Static int32 (T, P) arrays driving the traced tick loop: per-tick
+    op/chunk/microbatch for this rank, virtual-stage-boundary flags, and
+    where (if anywhere) to store the values arriving over the two
+    ppermute rings this tick (derived from what the *neighbors* ran)."""
+    S = v * P_
+    T = len(table)
+
+    def zeros():
+        return np.zeros((T, P_), np.int32)
+
+    a = {k: zeros() for k in ("op", "c", "j", "sv0", "svl", "sf_on", "sf_c",
+                              "sf_slot", "sb_on", "sb_c", "sb_slot")}
+    for t, row in enumerate(table):
+        for r, (op, c, j) in enumerate(row):
+            a["op"][t, r] = _OP_CODES[op]
+            if op == "idle":
+                continue
+            a["c"][t, r] = c
+            a["j"][t, r] = j
+            sv = c * P_ + r
+            a["sv0"][t, r] = int(sv == 0)
+            a["svl"][t, r] = int(sv == S - 1)
+        for r in range(P_):
+            lop, lc, lj = row[(r - 1) % P_]           # fwd ring: left -> r
+            if lop == "F":
+                sv = lc * P_ + (r - 1) % P_
+                if sv < S - 1:
+                    a["sf_on"][t, r] = 1
+                    a["sf_c"][t, r] = (sv + 1) // P_
+                    a["sf_slot"][t, r] = lj % df
+            rop, rc, rj = row[(r + 1) % P_]           # bwd ring: right -> r
+            if rop == "B":
+                sv = rc * P_ + (r + 1) % P_
+                if sv > 0:
+                    a["sb_on"][t, r] = 1
+                    a["sb_c"][t, r] = (sv - 1) // P_
+                    a["sb_slot"][t, r] = rj % db
+    return {k: jnp.asarray(val) for k, val in a.items()}
+
+
+class _TableSchedule(PipelineSchedule):
+    """Shared executor for the table-driven schedules (interleaved 1F1B,
+    zero-bubble).  Subclasses provide the full fwd+bwd table; execution
+    follows the 1F1B custom_vjp pattern — the primal stores only the
+    schedule inputs, the backward replays microbatch forwards
+    just-in-time — generalized to per-chunk ring buffers, a chunked view
+    of the rank's layer slice, and (zb) a deferred parameter-gradient
+    stash written at the dgrad sub-tick and drained at the wgrad one."""
+
+    v: int = 1
+    has_wgrad: bool = False
+
+    def _full_table(self, n_stages, n_microbatches):
+        raise NotImplementedError
+
+    def tick_table(self, n_stages, n_microbatches):
+        # (op, chunk*M + mb): unique work-item ids so ``simulate`` counts
+        # chunk activations (F adds, B frees — W keeps only a param-shaped
+        # stash, not an activation)
+        M = n_microbatches
+        return [[(op, c * M + j) if op != "idle" else ("idle", -1)
+                 for (op, c, j) in row]
+                for row in self._full_table(n_stages, n_microbatches)]
+
+    # -- execution --------------------------------------------------------
+    def apply(self, stage_fn, stage_params, x, mesh, axis, extras,
+              batch_axes=(), param_specs=None, seq_axis="", tp_axis=""):
+        n_stages = mesh.shape[axis]
+        M = x.shape[0]
+        v = self.v
+        full_table = self._full_table(n_stages, M)     # validates M vs P
+        fwd_table = _fwd_only_table(n_stages, M, v)
+        da, df, db, dw = _ring_depths(full_table, n_stages, M, v)
+        _, f_df, _, _ = _ring_depths(fwd_table, n_stages, M, v)
+
+        leaves = jax.tree.leaves(stage_params)
+        L = leaves[0].shape[0] if leaves else 0
+        if L % (n_stages * v):
+            raise ValueError(
+                f"{L} stacked layers do not split into pipe={n_stages} x "
+                f"v={v} virtual-stage chunks ({self.name})")
+        if v > 1:
+            # re-chunk the stack: rank r's contiguous pipe shard must hold
+            # the v non-contiguous slices of virtual stages c*P + r.
+            # jnp.take is differentiable and sits outside the custom_vjp,
+            # so its transpose un-permutes the param cotangents for free.
+            nl = L // (n_stages * v)
+            perm = np.array([(c * n_stages + r) * nl + i
+                             for r in range(n_stages)
+                             for c in range(v)
+                             for i in range(nl)], dtype=np.int32)
+            stage_params = jax.tree.map(
+                lambda a: jnp.take(a, perm, axis=0), stage_params)
+        specs = _resolve_specs(stage_params, x, mesh, axis, extras,
+                               batch_axes, param_specs, seq_axis)
+
+        def chunked(tree):
+            return jax.tree.map(
+                lambda a: a.reshape((v, a.shape[0] // v) + a.shape[1:]),
+                tree)
+
+        def pick(tree, idx):
+            return jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(
+                    a, idx, 0, keepdims=False), tree)
+
+        def ring_read(buf, c, slot):
+            return jax.lax.dynamic_index_in_dim(
+                jax.lax.dynamic_index_in_dim(buf, c, 0, keepdims=False),
+                slot, 0, keepdims=False)
+
+        def ring_write(buf, val, c, slot):
+            return jax.lax.dynamic_update_slice(
+                buf, val[None][None], (c, slot) + (0,) * val.ndim)
+
+        fwd_perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+        bwd_perm = [(i, (i - 1) % n_stages) for i in range(n_stages)]
+
+        def fwd_body(params_local, xs, extras_local):
+            stage = jax.lax.axis_index(axis)
+            mb_shape = xs.shape[1:]
+            pv = chunked(params_local)
+            arrs = _sched_arrays(fwd_table, n_stages, M, v, f_df, 1)
+
+            def tick(carry, tarr):
+                pend_h, pend_a, outputs, aux_out = carry
+                op = tarr["op"][stage]
+                c = tarr["c"][stage]
+                j = tarr["j"][stage]
+                first = tarr["sv0"][stage].astype(bool)
+                last = tarr["svl"][stage].astype(bool)
+                slot = jnp.mod(j, f_df)
+                h_in = jnp.where(first, xs[j], ring_read(pend_h, c, slot))
+                a_in = jnp.where(first, jnp.zeros((1,), jnp.float32),
+                                 ring_read(pend_a, c, slot))
+                h_out, a_stage = stage_fn(pick(pv, c), h_in, extras_local)
+                a_out = a_in + a_stage.astype(jnp.float32).reshape((1,))
+                emit = (op == 1) & last
+                outputs = jax.lax.cond(
+                    emit,
+                    lambda o: jax.lax.dynamic_update_slice(
+                        o, h_out[None], (j,) + (0,) * h_out.ndim),
+                    lambda o: o, outputs)
+                aux_out = jax.lax.cond(
+                    emit,
+                    lambda o: jax.lax.dynamic_update_slice(o, a_out, (j,)),
+                    lambda o: o, aux_out)
+                h_recv = jax.lax.ppermute(h_out, axis, fwd_perm)
+                a_recv = jax.lax.ppermute(a_out, axis, fwd_perm)
+                on = tarr["sf_on"][stage].astype(bool)
+                dc = tarr["sf_c"][stage]
+                ds = tarr["sf_slot"][stage]
+                pend_h = jax.lax.cond(
+                    on, lambda b: ring_write(b, h_recv, dc, ds),
+                    lambda b: b, pend_h)
+                pend_a = jax.lax.cond(
+                    on, lambda b: ring_write(b, a_recv, dc, ds),
+                    lambda b: b, pend_a)
+                return (pend_h, pend_a, outputs, aux_out), None
+
+            carry0 = (jnp.zeros((v, f_df) + mb_shape, xs.dtype),
+                      jnp.zeros((v, f_df, 1), jnp.float32),
+                      jnp.zeros_like(xs), jnp.zeros((M,), jnp.float32))
+            (_, _, outputs, aux_out), _ = jax.lax.scan(tick, carry0, arrs)
+            mask = (stage == n_stages - 1)
+            outputs = jax.lax.psum(
+                outputs * mask.astype(outputs.dtype), axis)
+            aux_mb = jax.lax.psum(
+                aux_out * mask.astype(jnp.float32), axis)
+            return outputs, aux_mb
+
+        tok_axes = _token_axes(specs)
+        # split-cotangent Megatron-TP convention — see OneFOneBSchedule
+        tp_div = mesh.shape[tp_axis] if tp_axis else 1
+        grad_axes = tok_axes + (
+            (tp_axis,) if tp_axis and tp_axis not in tok_axes else ())
+        p_reduce = jax.tree.map(
+            lambda sp: tuple(a for a in grad_axes
+                             if a not in _spec_axes(sp)),
+            specs.pspec, is_leaf=lambda s: isinstance(s, P))
+        e_reduce = (axis,) + grad_axes
+
+        def bwd_body(params_local, xs, extras_local, dy, d_aux):
+            stage = jax.lax.axis_index(axis)
+            mb_shape = xs.shape[1:]
+            pv = chunked(params_local)
+            arrs = _sched_arrays(full_table, n_stages, M, v, df, db)
+            zeros_mb = jnp.zeros(mb_shape, xs.dtype)
+
+            def tick(carry, tarr):
+                (pend_h, pend_c, act_buf, d_params, d_extras, d_xs,
+                 dp_stash) = carry
+                c = tarr["c"][stage]
+                j = tarr["j"][stage]
+                first = tarr["sv0"][stage].astype(bool)
+                last = tarr["svl"][stage].astype(bool)
+                cp = pick(pv, c)
+
+                def idle_br(op_in):
+                    (pend_h, pend_c, act_buf, d_params, d_extras, d_xs,
+                     dp_stash) = op_in
+                    return (zeros_mb, zeros_mb, act_buf, d_params,
+                            d_extras, d_xs, dp_stash)
+
+                def f_br(op_in):
+                    (pend_h, pend_c, act_buf, d_params, d_extras, d_xs,
+                     dp_stash) = op_in
+                    x_in = jnp.where(first, xs[j],
+                                     ring_read(pend_h, c, jnp.mod(j, df)))
+                    h_out, _ = stage_fn(cp, x_in, extras_local)
+                    act_buf = ring_write(act_buf, x_in, c, jnp.mod(j, da))
+                    return (h_out, zeros_mb, act_buf, d_params, d_extras,
+                            d_xs, dp_stash)
+
+                def b_br(op_in):
+                    (pend_h, pend_c, act_buf, d_params, d_extras, d_xs,
+                     dp_stash) = op_in
+                    h_saved = ring_read(act_buf, c, jnp.mod(j, da))
+                    dy_in = jnp.where(last, dy[j] / tp_div,
+                                      ring_read(pend_c, c, jnp.mod(j, db)))
+                    da_cot = d_aux[j].astype(jnp.float32) / tp_div
+                    _, vjp_fn = jax.vjp(stage_fn, cp, h_saved, extras_local)
+                    dpc, dh, de = vjp_fn((dy_in, da_cot.reshape(())))
+                    if self.has_wgrad:
+                        # dgrad sub-tick: defer the param gradient to the
+                        # W sub-tick; only the (depth-dw) stash survives
+                        dp_stash = jax.tree.map(
+                            lambda s, g: jax.lax.dynamic_update_slice(
+                                s, g[None],
+                                (jnp.mod(j, dw),) + (0,) * g.ndim),
+                            dp_stash, dpc)
+                    else:
+                        d_params = jax.tree.map(
+                            lambda A, g: jax.lax.dynamic_update_slice(
+                                A, (jax.lax.dynamic_index_in_dim(
+                                    A, c, 0, keepdims=False) + g)[None],
+                                (c,) + (0,) * g.ndim),
+                            d_params, dpc)
+                    d_extras = jax.tree.map(jnp.add, d_extras, de)
+                    upd = jax.lax.dynamic_update_slice(
+                        d_xs, dh[None].astype(d_xs.dtype),
+                        (j,) + (0,) * dh.ndim)
+                    d_xs = jnp.where(first, upd, d_xs)
+                    return (zeros_mb, dh, act_buf, d_params, d_extras,
+                            d_xs, dp_stash)
+
+                def w_br(op_in):
+                    (pend_h, pend_c, act_buf, d_params, d_extras, d_xs,
+                     dp_stash) = op_in
+                    g = pick(dp_stash, jnp.mod(j, dw))
+                    d_params = jax.tree.map(
+                        lambda A, gg: jax.lax.dynamic_update_slice(
+                            A, (jax.lax.dynamic_index_in_dim(
+                                A, c, 0, keepdims=False) + gg)[None],
+                            (c,) + (0,) * gg.ndim),
+                        d_params, g)
+                    return (zeros_mb, zeros_mb, act_buf, d_params,
+                            d_extras, d_xs, dp_stash)
+
+                branches = [idle_br, f_br, b_br]
+                if self.has_wgrad:
+                    branches.append(w_br)
+                out = jax.lax.switch(
+                    tarr["op"][stage], branches,
+                    (pend_h, pend_c, act_buf, d_params, d_extras, d_xs,
+                     dp_stash))
+                (f_pay, b_pay, act_buf, d_params, d_extras, d_xs,
+                 dp_stash) = out
+                h_recv = jax.lax.ppermute(f_pay, axis, fwd_perm)
+                c_recv = jax.lax.ppermute(b_pay, axis, bwd_perm)
+                pend_h = jax.lax.cond(
+                    tarr["sf_on"][stage].astype(bool),
+                    lambda b: ring_write(b, h_recv, tarr["sf_c"][stage],
+                                         tarr["sf_slot"][stage]),
+                    lambda b: b, pend_h)
+                pend_c = jax.lax.cond(
+                    tarr["sb_on"][stage].astype(bool),
+                    lambda b: ring_write(b, c_recv, tarr["sb_c"][stage],
+                                         tarr["sb_slot"][stage]),
+                    lambda b: b, pend_c)
+                return (pend_h, pend_c, act_buf, d_params, d_extras,
+                        d_xs, dp_stash), None
+
+            dp_stash0 = (jax.tree.map(
+                lambda a: jnp.zeros((dw,) + a.shape[1:], a.dtype), pv)
+                if self.has_wgrad else None)
+            carry0 = (jnp.zeros((v, df) + mb_shape, xs.dtype),
+                      jnp.zeros((v, db) + mb_shape, xs.dtype),
+                      jnp.zeros((v, da) + mb_shape, xs.dtype),
+                      jax.tree.map(jnp.zeros_like, pv),
+                      jax.tree.map(jnp.zeros_like, extras_local),
+                      jnp.zeros_like(xs),
+                      dp_stash0)
+            (_, _, _, d_params, d_extras, d_xs, _), _ = jax.lax.scan(
+                tick, carry0, arrs)
+            d_params = jax.tree.map(
+                lambda A, a: A.reshape(a.shape), d_params, params_local)
+            d_params = jax.tree.map(
+                lambda g, axes: jax.lax.psum(g, axes) if axes else g,
+                d_params, p_reduce)
+            d_extras = jax.tree.map(
+                lambda g: jax.lax.psum(g, e_reduce), d_extras)
+            d_xs = jax.lax.psum(
+                d_xs, (axis,) + ((tp_axis,) if tp_axis else ()))
+            return d_params, d_xs, d_extras
+
+        fwd_sm = _shard_map(
+            fwd_body, mesh,
+            in_specs=(specs.pspec, specs.x_spec, specs.espec),
+            out_specs=(specs.x_spec, P()))
+        bwd_sm = _shard_map(
+            bwd_body, mesh,
+            in_specs=(specs.pspec, specs.x_spec, specs.espec,
+                      specs.x_spec, P()),
+            out_specs=(specs.pspec, specs.x_spec, specs.espec))
+
+        @jax.custom_vjp
+        def call(stage_params, x, extras):
+            return fwd_sm(stage_params, x, extras)
+
+        def call_fwd(stage_params, x, extras):
+            return fwd_sm(stage_params, x, extras), (stage_params, x, extras)
+
+        def call_bwd(res, cots):
+            stage_params, x, extras = res
+            d_out, d_aux = cots
+            return bwd_sm(stage_params, x, extras, d_out, d_aux)
+
+        call.defvjp(call_fwd, call_bwd)
+        return call(stage_params, x, extras)
+
+
+class InterleavedOneFOneBSchedule(_TableSchedule):
+    """Interleaved 1F1B (Megatron virtual stages): each pipe rank holds
+    ``v`` non-contiguous chunks of the layer stack (virtual stage
+    ``c*P + r`` on rank r), so warmup/drain idles amortize over vM chunk
+    ticks — bubble (P-1)/(vM+P-1) — at the price of each microbatch
+    crossing the p2p ring v times and a deeper warmup window of chunk
+    activations (``inflight_microbatches``, in 1/v-stage units)."""
+
+    has_wgrad = False
+
+    def __init__(self, v: int):
+        if v < 2:
+            raise ValueError("interleaved 1f1b needs v >= 2 virtual "
+                             f"stages per rank (got {v})")
+        self.v = v
+        self.name = f"1f1b_i{v}"
+
+    def _full_table(self, n_stages, n_microbatches):
+        return _interleaved_full_table(n_stages, n_microbatches, self.v)
+
+
+class ZeroBubbleSchedule(_TableSchedule):
+    """Zero-bubble 1F1B (ZB-H1 with a bounded wgrad backlog): the
+    backward splits into dgrad ('B', frees the stored input and sends the
+    activation cotangent on) and wgrad ('W', drains the deferred
+    parameter gradient) sub-ticks; deferred wgrads fill the drain for a
+    2(P-1)/(3M+2P-2) bubble at 1f1b's min(M, P) activation footprint
+    plus a backlog-deep (usually 1) param-gradient stash."""
+
+    name = "zb"
+    v = 1
+    has_wgrad = True
+
+    def _full_table(self, n_stages, n_microbatches):
+        return _zb_full_table(n_stages, n_microbatches)
+
+
 SCHEDULES: Dict[str, PipelineSchedule] = {
     "gpipe": GPipeSchedule(),
     "1f1b": OneFOneBSchedule(),
+    "1f1b_i2": InterleavedOneFOneBSchedule(2),
+    "zb": ZeroBubbleSchedule(),
 }
 
 
@@ -530,8 +1190,24 @@ def get_schedule(name: str) -> PipelineSchedule:
     try:
         return SCHEDULES[name]
     except KeyError:
-        raise ValueError(f"unknown pipeline schedule {name!r}; "
-                         f"expected one of {sorted(SCHEDULES)}") from None
+        pass
+    family, v = parse_schedule(name)       # raises for unknown names
+    assert family == "1f1b_i", name        # base names are all registered
+    return InterleavedOneFOneBSchedule(v)
+
+
+def op_tick_counts(sched: str, n_stages: int,
+                   n_microbatches: int) -> Dict[str, int]:
+    """Sub-tick census of the schedule's table, summed over ranks:
+    forward / dgrad ('B') / wgrad ('W') / idle op counts plus the total
+    tick count — the dryrun artifact's per-schedule sub-tick record."""
+    table = get_schedule(sched).tick_table(n_stages, n_microbatches)
+    out = {"F": 0, "B": 0, "W": 0, "idle": 0}
+    for row in table:
+        for op, _ in row:
+            out[op] += 1
+    out["ticks"] = len(table)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -557,7 +1233,8 @@ def pipeline_apply(stage_fn: Callable, stage_params, x_microbatches,
       dim is sharded over ``batch_axes`` when divisible, else replicated.
     extras: pytree broadcast to every stage unsharded (e.g. rope angles
       with batch dim 1).
-    schedule: 'gpipe' | '1f1b' (see module docstring).
+    schedule: 'gpipe' | '1f1b' | '1f1b_i<v>' | 'zb' (see module
+      docstring).
     param_specs: optional pytree of PartitionSpecs for stage_params; the
       default shards only the stack dim over ``axis``.  Inner-mesh plans
       pass Megatron-TP / expert-sharded specs so the stage body computes
@@ -649,6 +1326,13 @@ def measure_bubble_fraction(step_for_m: Callable[[int], Callable[[], object]],
     executable counterpart of ``bubble_fraction`` / the cost model's
     per-schedule bubble charge.
 
+    Schedule generalization: d(total ticks)/dM is v for interleaved
+    (t(M) = t_tick*(vM + P - 1)) and 3 for zb (t(M) = t_tick*(3M+2P-2)),
+    so the fitted slope is divided by that coefficient before applying
+    the schedule's drain numerator ((P-1), or 2(P-1) for zb).  The
+    record carries ``virtual_stages`` so downstream artifacts can
+    validate the interleaved probe against (P-1)/(vM+P-1).
+
     On a noisy host the two-point fit can come out non-increasing
     (t(2M) <= t(M)); that is *not* a zero bubble, it is a failed fit —
     the record flags it as ``fit_unreliable`` so downstream consumers
@@ -670,10 +1354,14 @@ def measure_bubble_fraction(step_for_m: Callable[[int], Callable[[], object]],
     t1 = timed(step_for_m(m1))
     t2 = timed(step_for_m(m2))
     unreliable = t2 <= t1 or t1 <= 0
-    t_tick = max((t2 - t1) / (m2 - m1), 0.0)
-    measured = (n_stages - 1) * t_tick / t1 if t1 > 0 else 0.0
+    family, v = parse_schedule(sched)
+    ticks_per_m = 3 if family == "zb" else v
+    drain = 2 * (n_stages - 1) if family == "zb" else n_stages - 1
+    t_tick = max((t2 - t1) / (m2 - m1), 0.0) / ticks_per_m
+    measured = drain * t_tick / t1 if t1 > 0 else 0.0
     return {
         "pp": n_stages, "microbatches": m1, "sched": sched,
+        "virtual_stages": v,
         "t_step_s": t1, "t_step_2m_s": t2, "t_tick_s": t_tick,
         "bubble_predicted": bubble_fraction(n_stages, m1, sched),
         "bubble_measured": measured,

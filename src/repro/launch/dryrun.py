@@ -314,14 +314,22 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
             # --measure_bubble) the executed bubble, so the cost model's
             # schedule terms are validated, not assumed
             from repro.core.pipeline import (bubble_fraction,
-                                             inflight_microbatches)
+                                             inflight_microbatches,
+                                             op_tick_counts,
+                                             virtual_stages)
             rec["pipeline"] = {
                 "pp": strat.pp, "microbatches": strat.microbatches,
                 "sched": strat.sched,
+                "virtual_stages": virtual_stages(strat.sched),
+                "overlap": strat.overlap,
                 "bubble_predicted": bubble_fraction(
                     strat.pp, strat.microbatches, strat.sched),
                 "inflight_microbatches": inflight_microbatches(
                     strat.pp, strat.microbatches, strat.sched),
+                # sub-tick census of the executed table (zb splits each
+                # backward into dgrad 'B' + wgrad 'W' sub-ticks)
+                "op_tick_counts": op_tick_counts(
+                    strat.sched, strat.pp, strat.microbatches),
             }
             # the probe only means something on a live host mesh: on a
             # pod topology the 512 CPU-emulated fake devices would
@@ -331,8 +339,10 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
                     topo_obj.n_devices <= len(jax.devices()):
                 from repro.configs import reduced
                 from repro.perf.pipeline_probe import measure_bubble as _probe
-                probe_cfg = reduced(get_config(arch),
-                                    n_layers=max(4, 2 * strat.pp))
+                # layer count must split into pp x v virtual-stage chunks
+                chunk = strat.pp * virtual_stages(strat.sched)
+                n_l = -(-max(4, 2 * strat.pp) // chunk) * chunk
+                probe_cfg = reduced(get_config(arch), n_layers=n_l)
                 rec["pipeline"].update(_probe(probe_cfg, strat, topo_obj))
         print(f"[dryrun] {label}: OK  compile {t_compile:.0f}s  "
               f"flops {rec['flops_compiled_analytic']:.3e}  "

@@ -43,6 +43,10 @@ class Runtime:
                                         # constraint (keeps the all-gather
                                         # inside the layer loop instead of
                                         # letting XLA hoist the whole stack)
+    gather_prefetch: bool = False       # double-buffer the per-block gather:
+                                        # issue layer l+1's gather at the
+                                        # top of layer l's compute so it
+                                        # overlaps ('ovl' strategy token)
     attn_impl: str = "jnp"              # 'jnp' | 'pallas' (TPU hot path)
     norm_impl: str = "jnp"              # 'jnp' | 'pallas' (fused rmsnorm VJP)
     constrain: Optional[Callable] = None  # (name, x) -> x sharding constraint

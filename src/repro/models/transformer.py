@@ -296,14 +296,25 @@ def forward(cfg: ModelConfig, params, batch, rt: Runtime,
             # cfg, sig and rt are static (hashable frozen dataclasses)
             apply = jax.checkpoint(_apply_layer, static_argnums=(0, 1, 5))
 
+        prefetch = rt.gather_prefetch and rt.gather_params is not None
+
         def block_fn(carry, xs):
-            h_, aux_ = carry
-            lps = xs[:period]
+            if prefetch:
+                # double-buffered gather ('ovl'): the carry holds this
+                # iteration's already-gathered slice; xs carries the
+                # *next* iteration's shard, whose gather is issued here —
+                # before this block's compute — so the collective runs
+                # under it instead of serializing ahead of each block
+                h_, aux_, lps = carry
+                nxt = tuple(rt.gather_params(lp) for lp in xs[:period])
+            else:
+                h_, aux_ = carry
+                lps = xs[:period]
             caches = xs[period:] if cache is not None else [None] * period
             new_caches = []
             for pos in range(period):
                 lp = lps[pos]
-                if rt.gather_params is not None:
+                if not prefetch and rt.gather_params is not None:
                     # re-assert the de-gathered (replicated-over-fsdp) layout
                     # on the *per-iteration* slice: the all-gather is loop-
                     # variant and stays inside the scan (per-layer FSDP
@@ -314,15 +325,29 @@ def forward(cfg: ModelConfig, params, batch, rt: Runtime,
                 aux_ += a
                 new_caches.append(nc)
             ys = tuple(new_caches) if cache is not None else None
-            return (h_, aux_), ys
+            new_carry = (h_, aux_, nxt) if prefetch else (h_, aux_)
+            return new_carry, ys
 
         if rt.remat:
             block_fn = jax.checkpoint(block_fn)
 
-        xs = tuple(params["blocks"])
+        blocks = tuple(params["blocks"])
+        if prefetch:
+            # feed each iteration the next slice (rolled stack; the final
+            # iteration's wrapped-around gather is dead and DCEs away) and
+            # seed the buffer with slice 0's gather
+            xs = tuple(jax.tree.map(lambda a: jnp.roll(a, -1, axis=0), b)
+                       for b in blocks)
+            g0 = tuple(rt.gather_params(jax.tree.map(lambda a: a[0], b))
+                       for b in blocks)
+            carry0 = (h, aux_total, g0)
+        else:
+            xs = blocks
+            carry0 = (h, aux_total)
         if cache is not None:
             xs = xs + tuple(cache["blocks"])
-        (h, aux_total), ys = jax.lax.scan(block_fn, (h, aux_total), xs)
+        out_carry, ys = jax.lax.scan(block_fn, carry0, xs)
+        h, aux_total = out_carry[0], out_carry[1]
         if cache is not None:
             new_block_caches = list(ys)
 

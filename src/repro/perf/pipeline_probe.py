@@ -1,15 +1,23 @@
 """Execute a pipeline schedule and *measure* its bubble fraction.
 
-The cost model charges pipeline parallelism a bubble of (P-1)/(M+P-1)
-(``costmodel.step_time`` / ``pipeline.bubble_fraction``) for *both*
-schedules — 1F1B reorders the bubble to cap activation memory, it does
-not shrink it.  This probe validates that analytic term against
-execution: it runs the exact ``pipeline_apply`` lowering a
+The cost model charges each pipeline schedule its analytic bubble
+(``costmodel.step_time`` / ``pipeline.bubble_fraction``): (P-1)/(M+P-1)
+for gpipe and 1f1b (1F1B reorders the bubble to cap activation memory,
+it does not shrink it), (P-1)/(vM+P-1) for interleaved '1f1b_i<v>',
+2(P-1)/(3M+2P-2) for zero-bubble 'zb'.  This probe validates those terms
+against execution: it runs the exact ``pipeline_apply`` lowering a
 ``Strategy(pp>1)`` trains with (fwd + bwd, real stage params, the
 strategy's own schedule) at fixed microbatch *size* for M and 2M
-microbatches, fits t(M) = t_tick * (M + P - 1) + overhead, and reports
+microbatches, fits t(M) = t_tick * (ticks_per_mb * M + drain) + overhead
+(``measure_bubble_fraction`` divides the slope by the schedule's
+per-microbatch tick coefficient — v for interleaved, 3 for zb), and
+reports
 
-    bubble_measured = (P - 1) * t_tick / t(M)
+    bubble_measured = drain * t_tick / t(M)
+
+with the schedule's drain numerator (2(P-1) for zb, else P-1).  The
+record carries ``virtual_stages`` so artifacts can re-check the
+interleaved probe against (P-1)/(vM+P-1).
 
 A non-increasing two-point fit (noisy host) is flagged
 ``fit_unreliable`` instead of masquerading as a clean 0.0 measurement.

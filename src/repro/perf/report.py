@@ -91,6 +91,48 @@ def _benchmark_summaries() -> str:
     return "\n".join(out) + "\n"
 
 
+def _pipeline_sweep() -> str:
+    """§Schedule-frontier table from BENCH_pipeline.json: the extended
+    pp x {gpipe,1f1b,1f1b_i<v>,zb} x overlap sweep with per-schedule
+    bubble (predicted + measured fit) and peak memory (cost model +
+    compiled-executable memory analysis)."""
+    path = results_path("benchmarks", "BENCH_pipeline.json")
+    if not os.path.exists(path):
+        return "_(run `python benchmarks/run.py --pp-sweep` first)_\n"
+    with open(path) as f:
+        bench = json.load(f)
+
+    def _mib(v):
+        return f"{v / 2**20:.0f}" if v is not None else "—"
+
+    def _frac(v):
+        return f"{v:.3f}" if v is not None else "—"
+
+    out = [f"Backend `{bench.get('backend', '?')}`, "
+           f"arch `{bench.get('arch', '?')}`.  Wall time on CPU hosts is a "
+           "regression signal; the schedule-comparable columns are the "
+           "bubble fraction (hardware-free) and the peak-memory pair — "
+           "predicted (cost model in-flight term) next to measured "
+           "(compiled executable temp bytes).\n",
+           "| spec | sched | v | ovl | bubble pred | bubble meas | "
+           "mem pred MiB | mem meas MiB |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in bench.get("rows", []):
+        flag = "!" if r.get("fit_unreliable") else ""
+        out.append(
+            f"| {r['spec']} | {r.get('sched', '—')} "
+            f"| {r.get('virtual_stages', 1)} "
+            f"| {'on' if r.get('overlap') else 'off'} "
+            f"| {_frac(r.get('bubble_predicted'))} "
+            f"| {_frac(r.get('bubble_measured'))}{flag} "
+            f"| {_mib(r.get('predicted_peak_memory_bytes'))} "
+            f"| {_mib(r.get('measured_temp_bytes'))} |")
+    out.append("\n`!` marks a `fit_unreliable` bubble fit (non-increasing "
+               "two-point measurement on a noisy host); `—` means the "
+               "backend reported no executable memory analysis.\n")
+    return "\n".join(out) + "\n"
+
+
 def _perf_log() -> str:
     path = results_path("perf_log.md")
     if os.path.exists(path):
@@ -212,6 +254,8 @@ quadratic terms, and dense-layer overheads per arch.
 
     parts.append("\n## §Benchmarks — per-figure outputs (cost model)\n")
     parts.append(_benchmark_summaries())
+    parts.append("\n## §Schedule-frontier — pp x schedule x overlap sweep\n")
+    parts.append(_pipeline_sweep())
     parts.append("\n## §Telemetry — measured-run artifacts\n")
     parts.append(
         "Instrumented runs (`--trace`, `--metrics_jsonl`, "

@@ -57,12 +57,16 @@ from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core import costmodel as cm
 from repro.core import parallel as par
 from repro.core.pipeline import SCHEDULE_NAMES as SCHEDS
+from repro.core.pipeline import virtual_stages
 from repro.strategy.topology import Topology, build_mesh
 
 DP_MODES = ("hsdp", "fsdp", "ddp")
 _ATTN_TOKENS = {"headtp": "head_tp", "ctx": "context"}
 _ATTN_FORMAT = {v: k for k, v in _ATTN_TOKENS.items()}
 _INT_TOKEN = re.compile(r"^(tp|cp|pp|ep|z|mb|ga)(\d+)$")
+# continuation of a '1f1b' token: specs split on '_', so the canonical
+# interleaved name '1f1b_i<v>' arrives as the token pair ('1f1b', 'i<v>')
+_IVS_TOKEN = re.compile(r"^i(\d+)$")
 PRECISION_TOKENS = tuple(cm.PRECISIONS)   # 'f32' | 'bf16' | 'fp8'
 
 
@@ -78,6 +82,9 @@ class Strategy:
     cp: int = 1                      # context-parallel degree (model axis)
     pp: int = 1                      # pipeline degree ('pipe' mesh axis)
     sched: str = "gpipe"             # pipeline schedule: 'gpipe' | '1f1b'
+                                     # | '1f1b_i<v>' (interleaved, v
+                                     # virtual stages per rank) | 'zb'
+                                     # (zero-bubble)
     ep: int = 1                      # expert-parallel degree ('expert' axis,
                                      # factored out of the data axis)
     zero_stage: Optional[int] = None  # None -> 0 for ddp, 3 otherwise
@@ -92,6 +99,12 @@ class Strategy:
                                      # (bf16 compute, fp8 on the ZeRO
                                      # all-gather wire).  Spec tokens
                                      # ``_bf16`` / ``_fp8``.
+    overlap: bool = False            # double-buffered ZeRO gather
+                                     # prefetch (spec token ``_ovl``):
+                                     # the per-block gatherer for layer
+                                     # l+1 is issued during layer l's
+                                     # compute.  Needs sharded params
+                                     # (zero_stage >= 2).
 
     def __post_init__(self):
         if self.precision not in PRECISION_TOKENS:
@@ -111,8 +124,10 @@ class Strategy:
             # predict-and-run contract honest
             raise StrategyError(
                 f"zero_stage {self.zero_stage!r} not in (None, 0, 2, 3)")
-        if self.sched not in SCHEDS:
-            raise StrategyError(f"sched {self.sched!r} not in {SCHEDS}")
+        try:
+            v = virtual_stages(self.sched)   # shared schedule grammar
+        except ValueError as e:
+            raise StrategyError(str(e)) from None
         if self.sched != "gpipe" and self.pp == 1:
             # a schedule token without a pipeline is meaningless, and
             # format() would drop it — reject to keep specs canonical
@@ -127,6 +142,17 @@ class Strategy:
                 f"pp={self.pp} needs microbatches >= pp to fill the "
                 f"pipeline (got mb={self.microbatches}); spec e.g. "
                 f"'fsdp_pp{self.pp}_mb{2 * self.pp}'")
+        if v > 1 and self.microbatches % self.pp:
+            # the interleaved chunk rotation assigns microbatches to
+            # ranks in groups of pp
+            raise StrategyError(
+                f"sched={self.sched!r} needs microbatches divisible by "
+                f"pp={self.pp} (got mb={self.microbatches})")
+        if self.overlap and self.zero < 2:
+            raise StrategyError(
+                "ovl (double-buffered ZeRO gather prefetch) needs "
+                "sharded params (zero_stage >= 2); got "
+                f"dp_mode={self.dp_mode!r}, zero_stage={self.zero_stage!r}")
 
     # ---- derived -----------------------------------------------------------
 
@@ -238,6 +264,11 @@ class Strategy:
             raise StrategyError(
                 f"{cfg.n_layers} layers do not split into {self.pp} "
                 "contiguous pipeline stages")
+        v = virtual_stages(self.sched)
+        if cfg.n_layers % (self.pp * v):
+            raise StrategyError(
+                f"{cfg.n_layers} layers do not split into pp={self.pp} x "
+                f"v={v} virtual-stage chunks (sched={self.sched!r})")
         if cfg.rope == "mrope":
             raise StrategyError(
                 "mrope angles are batch-dependent and cannot broadcast "
@@ -367,6 +398,7 @@ class Strategy:
             pipe="pipe" if self.pp > 1 else "",
             microbatches=self.microbatches if self.pp > 1 else 1,
             pipe_sched=self.sched,
+            zero_overlap=self.overlap,
             expert="expert" if has_ep else "",
             precision=self.precision)
 
@@ -403,6 +435,7 @@ class Strategy:
             ep=self.ep,
             zero_stage=self.zero,
             microbatches=self.microbatches, sched=self.sched,
+            overlap=self.overlap,
             fsdp_group=fsdp_group, precision=self.precision)
 
     # ---- spec strings ------------------------------------------------------
@@ -422,6 +455,8 @@ class Strategy:
             parts.append(f"ga{self.grad_accum}")
         if self.sched != "gpipe":
             parts.append(self.sched)
+        if self.overlap:
+            parts.append("ovl")
         if self.precision != "f32":
             parts.append(self.precision)
         if self.attn is not None:
@@ -438,9 +473,10 @@ def parse(spec: str) -> Strategy:
     """Parse a compact spec string into a ``Strategy``.
 
     Grammar: ``<dp_mode>[_tp<k>][_cp<k>][_pp<k>][_ep<k>][_z<stage>][_mb<m>]
-    [_ga<g>][_gpipe|_1f1b][_f32|_bf16|_fp8][_headtp|_ctx][_nosp]`` with
-    dp_mode in {hsdp, fsdp, ddp}.  Examples: ``hsdp_tp4``, ``fsdp_cp8``,
-    ``fsdp_ep8``, ``hsdp_tp2_ep4``, ``fsdp_pp4_mb8_1f1b``, ``ddp``,
+    [_ga<g>][_gpipe|_1f1b[_i<v>]|_zb][_ovl][_f32|_bf16|_fp8][_headtp|_ctx]
+    [_nosp]`` with dp_mode in {hsdp, fsdp, ddp}.  Examples: ``hsdp_tp4``,
+    ``fsdp_cp8``, ``fsdp_ep8``, ``hsdp_tp2_ep4``, ``fsdp_pp4_mb8_1f1b``,
+    ``fsdp_pp4_mb8_1f1b_i2``, ``fsdp_pp4_mb8_zb_ovl``, ``ddp``,
     ``fsdp_bf16``, ``hsdp_tp4_ga2_nosp``.
     """
     tokens = spec.strip().lower().split("_")
@@ -460,6 +496,18 @@ def parse(spec: str) -> Strategy:
                     f"duplicate token {tok!r} in spec {spec!r}")
             kw["sched"] = tok
             continue
+        m_i = _IVS_TOKEN.match(tok)
+        if m_i and kw.get("sched") == "1f1b":
+            # '1f1b_i<v>' split into ('1f1b', 'i<v>') — rejoin; the
+            # Strategy constructor validates v >= 2 via the shared grammar
+            kw["sched"] = f"1f1b_i{m_i.group(1)}"
+            continue
+        if tok == "ovl":
+            if kw.get("overlap"):
+                raise StrategyError(
+                    f"duplicate token {tok!r} in spec {spec!r}")
+            kw["overlap"] = True
+            continue
         if tok in _ATTN_TOKENS:
             kw["attn"] = _ATTN_TOKENS[tok]
             continue
@@ -474,7 +522,7 @@ def parse(spec: str) -> Strategy:
             raise StrategyError(
                 f"bad token {tok!r} in spec {spec!r} (expected "
                 "tp<k>/cp<k>/pp<k>/ep<k>/z<s>/mb<m>/ga<g>/gpipe/1f1b/"
-                "f32/bf16/fp8/headtp/ctx/nosp)")
+                "1f1b_i<v>/zb/ovl/f32/bf16/fp8/headtp/ctx/nosp)")
         field = names[m.group(1)]
         if field in kw:
             raise StrategyError(f"duplicate token {tok!r} in spec {spec!r}")

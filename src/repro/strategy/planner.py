@@ -97,7 +97,10 @@ def evaluate(cfg: ModelConfig, strategy: Strategy, topology: Topology,
 
 DEFAULT_PPS = (1, 2, 4, 8)
 DEFAULT_EPS = (1, 2, 4, 8)
-DEFAULT_SCHEDS = SCHEDULE_NAMES      # sweep every registered schedule
+# sweep every base schedule family plus the canonical interleaved point
+# (deeper interleavings are opt-in via scheds=)
+DEFAULT_SCHEDS = SCHEDULE_NAMES + ("1f1b_i2",)
+DEFAULT_OVERLAPS = (False, True)     # ZeRO gather/compute overlap ('ovl')
 # precision is a swept degree: same mesh, dtype-scaled byte/flops terms.
 # f32 is what the lowering has always run; bf16 halves params/acts on the
 # wire and doubles matmul throughput, which moves every comm-driven
@@ -114,7 +117,8 @@ def candidates(topology: Topology, global_batch: int,
                scheds: Sequence[str] = DEFAULT_SCHEDS,
                zero_stages: Iterable[Optional[int]] = (None,),
                microbatches: int = 8,
-               precisions: Sequence[str] = DEFAULT_PRECISIONS
+               precisions: Sequence[str] = DEFAULT_PRECISIONS,
+               overlaps: Sequence[bool] = DEFAULT_OVERLAPS
                ) -> List[Strategy]:
     """Enumerate distinct strategy descriptors viable on ``topology``.
 
@@ -125,10 +129,12 @@ def candidates(topology: Topology, global_batch: int,
     MoE configs — ``search`` filters them via ``Strategy.check(cfg)``
     (``ep | n_experts``); ep stays inside the island-local data group so
     the reduced expert gathers are whole ranks.  pp > 1 candidates are
-    emitted once per pipeline schedule in ``scheds`` — same mesh, same
-    bubble, different activation footprint (1F1B caps in-flight
-    microbatches at pp), so the schedule sweep is what lets the planner
-    surface memory-limited crossovers.
+    emitted once per pipeline schedule in ``scheds`` — gpipe/1f1b share
+    the bubble but differ in activation footprint (1F1B caps in-flight
+    microbatches at pp), while interleaved/zb shrink the bubble itself —
+    so the schedule sweep surfaces both memory-limited and bubble-limited
+    crossovers.  Every sharded-param point is additionally emitted with
+    the 'ovl' gather/compute-overlap variant (``overlaps``).
     """
     n = topology.n_devices
     out: List[Strategy] = []
@@ -161,15 +167,22 @@ def candidates(topology: Topology, global_batch: int,
                             # sharded over (data, expert) — to_plan rejects
                             continue
                         for sched in (scheds if pp > 1 else ("gpipe",)):
-                            for prec in precisions:
-                                s = Strategy(dp_mode=mode, tp=tp, cp=cp,
-                                             pp=pp, ep=ep, zero_stage=zero,
-                                             microbatches=mb, sched=sched,
-                                             precision=prec)
-                                if s.format() in seen:
-                                    continue
-                                seen.add(s.format())
-                                out.append(s)
+                            if "_i" in sched and mb % pp:
+                                continue   # interleaved needs pp | mb
+                            for ovl in overlaps:
+                                if ovl and (mode == "ddp" or zero == 0):
+                                    continue   # nothing to prefetch
+                                for prec in precisions:
+                                    s = Strategy(dp_mode=mode, tp=tp,
+                                                 cp=cp, pp=pp, ep=ep,
+                                                 zero_stage=zero,
+                                                 microbatches=mb,
+                                                 sched=sched, overlap=ovl,
+                                                 precision=prec)
+                                    if s.format() in seen:
+                                        continue
+                                    seen.add(s.format())
+                                    out.append(s)
     return out
 
 
@@ -185,6 +198,7 @@ def search(cfg: ModelConfig, topology: Topology, shape: ShapeConfig,
            zero_stages: Iterable[Optional[int]] = (None,),
            microbatches: int = 8,
            precisions: Sequence[str] = DEFAULT_PRECISIONS,
+           overlaps: Sequence[bool] = DEFAULT_OVERLAPS,
            top: Optional[int] = None) -> List[PlannedStrategy]:
     """Rank executable strategies for (model, topology, shape).
 
@@ -207,7 +221,7 @@ def search(cfg: ModelConfig, topology: Topology, shape: ShapeConfig,
     cands = candidates(topology, shape.global_batch, dp_modes=dp_modes,
                        tps=tps, cps=cps, pps=pps, eps=eps, scheds=scheds,
                        zero_stages=zero_stages, microbatches=microbatches,
-                       precisions=precisions)
+                       precisions=precisions, overlaps=overlaps)
     out: List[PlannedStrategy] = []
     for s in cands:
         lowers = s.lowerable(topology, cfg)

@@ -7,10 +7,12 @@ from hypothesis import given, settings, strategies as st
 
 from repro.configs.base import ShapeConfig
 from repro.configs.llama2 import LLAMA2_7B
+from repro.configs import get_config
 from repro.core import costmodel as cm
 from repro.strategy import Topology, search
 
 HWS = [cm.V100, cm.A100, cm.H100, cm.TPU_V5E]
+LLAMA2_70B = get_config("llama2-70b")
 
 
 # ---------------------------------------------------------------------------
@@ -116,6 +118,53 @@ def test_sched_in_strategy_validity_and_row():
     assert s.valid()
     r = cm.step_time(LLAMA2_7B, cm.H100, s, 256, 4096)
     assert r.row()["sched"] == "1f1b"
+    # ISSUE 10: the schedule-frontier degrees are valid strategies too —
+    # interleaving needs M % P == 0, overlap needs a sharded-param plan
+    assert cm.Strategy(64, pp=2, microbatches=4, sched="1f1b_i2").valid()
+    assert not cm.Strategy(64, pp=2, microbatches=5, sched="1f1b_i2").valid()
+    assert not cm.Strategy(64, pp=2, microbatches=4, sched="1f1b_i1").valid()
+    assert cm.Strategy(64, pp=2, microbatches=4, sched="zb").valid()
+    assert cm.Strategy(64, zero_stage=3, overlap=True).valid()
+    assert not cm.Strategy(64, zero_stage=0, overlap=True).valid()
+
+
+def test_schedule_frontier_pinned_step_time():
+    """ISSUE 10 acceptance (pinned): at a llama2-70b/H100 pp=4 point both
+    interleaving (1f1b_i2: bubble (P-1)/(vM+P-1) for v x p2p volume) and
+    zero-bubble (zb: bubble 2(P-1)/(3M+2P-2) for a param-shaped wgrad
+    stash) beat plain 1F1B on modeled step time — while the cost model
+    charges each its side of the trade rather than a free lunch."""
+    kw = dict(n_devices=256, pp=4, microbatches=8, zero_stage=3)
+    r = {sched: cm.step_time(LLAMA2_70B, cm.H100,
+                             cm.Strategy(sched=sched, **kw), 256, 4096)
+         for sched in ("1f1b", "1f1b_i2", "zb")}
+    assert r["1f1b_i2"].t_step < r["1f1b"].t_step
+    assert r["zb"].t_step < r["1f1b"].t_step
+    # interleaving multiplies p2p hops: (pp*v - 1) / (pp - 1) = 7/3
+    assert r["1f1b_i2"].comm_breakdown["pp_p2p"] == pytest.approx(
+        r["1f1b"].comm_breakdown["pp_p2p"] * 7 / 3)
+    # zb's bubble win is paid in memory: the stashed dgrad-deferred
+    # weight-gradient state sits above 1F1B's activation footprint
+    assert r["zb"].memory_per_device > r["1f1b"].memory_per_device
+    # and both bubble terms are strictly below the 1F1B bubble
+    P_, M = kw["pp"], kw["microbatches"]
+    b_1f1b = (P_ - 1) / (M + P_ - 1)
+    assert 2 * (P_ - 1) / (3 * M + 2 * P_ - 2) < b_1f1b
+    assert (P_ - 1) / (2 * M + P_ - 1) < b_1f1b
+
+
+def test_overlap_hides_exposed_fsdp_gathers():
+    """The double-buffered ZeRO gather prefetch (overlap=True) widens the
+    per-layer overlap window; on an FSDP-bound point the exposed gather
+    time shrinks and step time strictly improves, while on compute-bound
+    points it can only help, never hurt."""
+    kw = dict(n_devices=1024, zero_stage=3, precision="bf16")
+    r_off = cm.step_time(LLAMA2_70B, cm.A100,
+                         cm.Strategy(**kw), 1024, 4096)
+    r_on = cm.step_time(LLAMA2_70B, cm.A100,
+                        cm.Strategy(overlap=True, **kw), 1024, 4096)
+    assert r_on.t_step < r_off.t_step
+    assert r_on.memory_per_device == pytest.approx(r_off.memory_per_device)
 
 
 def test_memory_decreases_with_sharding():

@@ -16,8 +16,10 @@ from repro.configs import get_config, reduced
 from repro.core.parallel import use_mesh
 from repro.core.pipeline import (SCHEDULES, batch_axes_spec, bubble_fraction,
                                  get_schedule, inflight_microbatches,
-                                 make_pipelined_block_fn,
-                                 measure_bubble_fraction, pipeline_apply)
+                                 known_schedule, make_pipelined_block_fn,
+                                 measure_bubble_fraction, op_tick_counts,
+                                 parse_schedule, pipeline_apply,
+                                 virtual_stages)
 from repro.models.layers import Runtime
 from repro.models.transformer import (_apply_layer, _init_layer, _sig,
                                       _tree_stack)
@@ -68,6 +70,84 @@ def test_1f1b_rejects_underfilled_pipeline():
         get_schedule("unknown")
     with pytest.raises(ValueError):
         bubble_fraction(2, 8, "interleaved")
+
+
+# ---------------------------------------------------------------------------
+# schedule frontier (ISSUE 10): interleaved 1f1b_i<v> and zero-bubble zb
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sched", ["1f1b_i2", "1f1b_i3", "zb"])
+@pytest.mark.parametrize("P_,M", [(2, 4), (4, 8), (4, 16), (8, 16)])
+def test_frontier_tick_tables_match_formulas(sched, P_, M):
+    """Same contract the gpipe/1f1b tables honour: the greedy list
+    scheduler's counted idle fraction and peak in-flight must equal the
+    analytic bubble_fraction / inflight_microbatches terms the cost
+    model charges."""
+    sim = get_schedule(sched).simulate(P_, M)
+    assert sim["bubble"] == pytest.approx(bubble_fraction(P_, M, sched))
+    assert sim["peak_inflight"] == inflight_microbatches(P_, M, sched)
+
+
+def test_schedule_grammar():
+    """'1f1b_i<v>' parses as v virtual stages per rank; 'zb' is a known
+    one-chunk schedule; junk and v=1 are rejected with ValueError."""
+    assert parse_schedule("zb") == ("zb", 1)
+    assert parse_schedule("1f1b_i2")[1] == 2
+    assert virtual_stages("1f1b_i4") == 4
+    assert virtual_stages("gpipe") == 1 and virtual_stages("zb") == 1
+    assert known_schedule("1f1b_i7") and known_schedule("zb")
+    assert not known_schedule("interleaved") and not known_schedule("1f1b_i1")
+    with pytest.raises(ValueError):
+        parse_schedule("1f1b_i1")     # v == 1 is plain 1f1b
+    with pytest.raises(ValueError):
+        parse_schedule("zb_i2")
+
+
+def test_frontier_schedule_rejections():
+    with pytest.raises(ValueError):
+        get_schedule("1f1b_i2").tick_table(4, 6)   # M % P != 0
+    with pytest.raises(ValueError):
+        get_schedule("zb").tick_table(4, 2)        # M < P
+
+
+def test_zb_op_tick_counts():
+    """zb splits every backward into dgrad (B) + wgrad (W) sub-ticks:
+    P*M of each op, and the total tick span is 3M + 2(P-1)."""
+    c = op_tick_counts("zb", 4, 8)
+    assert c["F"] == c["B"] == c["W"] == 32
+    assert c["ticks"] == 3 * 8 + 2 * (4 - 1)
+    c1 = op_tick_counts("1f1b", 4, 8)
+    assert c1["W"] == 0 and c1["F"] == c1["B"] == 32
+    ci = op_tick_counts("1f1b_i2", 4, 8)
+    assert ci["W"] == 0 and ci["F"] == ci["B"] == 64   # per-chunk ticks
+
+
+@settings(max_examples=40, deadline=None)
+@given(P_=st.integers(2, 5), k=st.integers(1, 5), v=st.integers(2, 3))
+def test_property_interleaved_bubble_formula_vs_simulation(P_, k, v):
+    """ISSUE 10 satellite: for every (P, M = kP, v) the interleaved
+    bubble formula (P-1)/(vM+P-1) equals the tick-count simulation —
+    the v-times-finer warmup ramp is exactly what the table emits."""
+    M = P_ * k
+    sim = get_schedule(f"1f1b_i{v}").simulate(P_, M)
+    assert sim["bubble"] == pytest.approx((P_ - 1) / (v * M + P_ - 1))
+    assert sim["bubble"] < bubble_fraction(P_, M, "1f1b")
+
+
+@settings(max_examples=40, deadline=None)
+@given(P_=st.integers(2, 6), extra=st.integers(0, 16))
+def test_property_zb_bubble_and_inflight_vs_1f1b(P_, extra):
+    """ISSUE 10 satellite: zb's simulated bubble matches
+    2(P-1)/(3M+2P-2), stays below 1F1B's, and its activation peak never
+    exceeds 1F1B's min(M, P) cap (the dgrad sub-tick frees the
+    activation; only the param-shaped wgrad stash persists)."""
+    M = P_ + extra
+    zb = get_schedule("zb").simulate(P_, M)
+    fb = get_schedule("1f1b").simulate(P_, M)
+    assert zb["bubble"] == pytest.approx(
+        2 * (P_ - 1) / (3 * M + 2 * P_ - 2))
+    assert zb["bubble"] < fb["bubble"]
+    assert zb["peak_inflight"] <= fb["peak_inflight"]
 
 
 @settings(max_examples=60, deadline=None)
@@ -151,9 +231,12 @@ def test_1f1b_matches_sequential_fwd_and_grad(setup, eight_devices,
     assert float(jnp.max(jnp.abs(gx_p - gx_s))) < 5e-3
 
 
-def test_1f1b_equals_gpipe_execution(setup, eight_devices):
-    """Same ticks, different order: both schedules compute the identical
-    function, so outputs and grads must agree with each other too."""
+def test_all_schedules_equal_gpipe_execution(setup, eight_devices):
+    """Same work, different order: every registered schedule (plus an
+    unregistered interleave depth) computes the identical function, so
+    outputs and grads must agree with gpipe's — including the zb
+    executor's split dgrad/wgrad backward and the interleaved
+    non-contiguous stage chunking (L=4 % (P=2 * v=2) == 0)."""
     cfg, rt, layers, stacked = setup
     mesh = jax.make_mesh((2,), ("pipe",), devices=eight_devices[:2])
     M, mb, S, d = 4, 2, 16, cfg.d_model
@@ -161,7 +244,7 @@ def test_1f1b_equals_gpipe_execution(setup, eight_devices):
     stage_fn = make_pipelined_block_fn(cfg, rt)
 
     outs, grads = {}, {}
-    for sched in ("gpipe", "1f1b"):
+    for sched in ("gpipe", "1f1b", "1f1b_i2", "zb"):
         def loss(params, sched=sched):
             out, _ = pipeline_apply(stage_fn, params, x, mesh, "pipe",
                                     schedule=sched)
@@ -170,12 +253,101 @@ def test_1f1b_equals_gpipe_execution(setup, eight_devices):
         with use_mesh(mesh):
             outs[sched], grads[sched] = jax.jit(
                 jax.value_and_grad(loss))(stacked)
-    assert float(outs["gpipe"]) == pytest.approx(float(outs["1f1b"]),
-                                                 rel=1e-5)
+    for sched in ("1f1b", "1f1b_i2", "zb"):
+        assert float(outs["gpipe"]) == pytest.approx(float(outs[sched]),
+                                                     rel=1e-5), sched
+        errs = [float(jnp.max(jnp.abs(a - b))) for a, b in
+                zip(jax.tree.leaves(grads["gpipe"]),
+                    jax.tree.leaves(grads[sched]))]
+        assert max(errs) < 5e-3, (sched, max(errs))
+
+
+@pytest.mark.parametrize("sched", ["1f1b_i2", "zb"])
+def test_frontier_schedules_match_sequential_composed_mesh(
+        setup, eight_devices, sched):
+    """ISSUE 10 acceptance: the new executors must agree with sequential
+    application on a composed (pipe, data) mesh — forward AND gradients
+    w.r.t. params and inputs, with the interleaved param permutation
+    un-permuting its cotangents."""
+    cfg, rt, layers, stacked = setup
+    mesh = jax.make_mesh((2, 2), ("pipe", "data"),
+                         devices=eight_devices[:4])
+    M, mb, S, d = 4, 2, 16, cfg.d_model
+    x = jax.random.normal(jax.random.PRNGKey(3), (M, mb, S, d)) * 0.5
+    stage_fn = make_pipelined_block_fn(cfg, rt)
+
+    def pipelined(params, x):
+        out, _aux = pipeline_apply(stage_fn, params, x, mesh, "pipe",
+                                   batch_axes=("data",), schedule=sched)
+        return out
+
+    with use_mesh(mesh):
+        out_p = jax.jit(pipelined)(stacked, x)
+    out_s = _sequential(cfg, rt, layers, x)
+    assert float(jnp.max(jnp.abs(out_p - out_s))) < 1e-4
+
+    def loss_p(params, x):
+        return jnp.sum(pipelined(params, x) ** 2)
+
+    def loss_s(layers, x):
+        return jnp.sum(_sequential(cfg, rt, layers, x) ** 2)
+
+    with use_mesh(mesh):
+        g_p, gx_p = jax.jit(jax.grad(loss_p, argnums=(0, 1)))(stacked, x)
+    g_s_layers, gx_s = jax.grad(loss_s, argnums=(0, 1))(layers, x)
+    g_s = {"layers": _tree_stack(g_s_layers)}
     errs = [float(jnp.max(jnp.abs(a - b))) for a, b in
-            zip(jax.tree.leaves(grads["gpipe"]),
-                jax.tree.leaves(grads["1f1b"]))]
+            zip(jax.tree.leaves(g_p), jax.tree.leaves(g_s))]
     assert max(errs) < 5e-3, max(errs)
+    assert float(jnp.max(jnp.abs(gx_p - gx_s))) < 5e-3
+
+
+def test_interleaved_apply_rejects_bad_chunking(setup, eight_devices):
+    """L % (P*v) != 0 and M % P != 0 are construction errors, not silent
+    truncation."""
+    cfg, rt, layers, stacked = setup
+    mesh = jax.make_mesh((4,), ("pipe",), devices=eight_devices[:4])
+    stage_fn = make_pipelined_block_fn(cfg, rt)
+    x = jnp.zeros((8, 2, 16, cfg.d_model))
+    with pytest.raises(ValueError):       # 4 layers % (4 stages * 2) != 0
+        with use_mesh(mesh):
+            pipeline_apply(stage_fn, stacked, x, mesh, "pipe",
+                           schedule="1f1b_i2")
+    mesh2 = jax.make_mesh((2,), ("pipe",), devices=eight_devices[:2])
+    x2 = jnp.zeros((3, 2, 16, cfg.d_model))
+    with pytest.raises(ValueError):       # M=3 % P=2 != 0
+        with use_mesh(mesh2):
+            pipeline_apply(stage_fn, stacked, x2, mesh2, "pipe",
+                           schedule="1f1b_i2")
+
+
+def test_measured_memory_ordering_gpipe_vs_1f1b(setup, eight_devices):
+    """ISSUE 10 satellite: the compiled executable's measured temp
+    (activation/workspace) bytes must order the same way the cost
+    model's in-flight term predicts — gpipe holds all M=8 microbatch
+    activations, 1f1b caps at P=4."""
+    cfg, rt, layers, stacked = setup
+    mesh = jax.make_mesh((4,), ("pipe",), devices=eight_devices[:4])
+    M, mb, S, d = 8, 2, 16, cfg.d_model
+    x = jax.random.normal(jax.random.PRNGKey(4), (M, mb, S, d)) * 0.5
+    stage_fn = make_pipelined_block_fn(cfg, rt)
+    temp = {}
+    for sched in ("gpipe", "1f1b"):
+        def loss(params, sched=sched):
+            out, _ = pipeline_apply(stage_fn, params, x, mesh, "pipe",
+                                    schedule=sched)
+            return jnp.sum(out ** 2)
+
+        with use_mesh(mesh):
+            compiled = jax.jit(jax.value_and_grad(loss)).lower(
+                stacked).compile()
+        ma = compiled.memory_analysis()
+        if ma is None or not getattr(ma, "temp_size_in_bytes", 0):
+            pytest.skip("backend reports no executable memory analysis")
+        temp[sched] = int(ma.temp_size_in_bytes)
+    assert inflight_microbatches(4, M, "1f1b") < \
+        inflight_microbatches(4, M, "gpipe")
+    assert temp["1f1b"] < temp["gpipe"], temp
 
 
 def test_1f1b_apply_rejects_underfilled(setup, eight_devices):
@@ -226,6 +398,48 @@ def test_measure_bubble_flags_unreliable_fit():
     assert rec["bubble_measured"] > 0.0
 
 
+def test_measure_bubble_interleaved_matches_formula():
+    """ISSUE 10 satellite: with a deterministic synthetic step whose
+    wall time is exactly t_tick * (v*M + P-1), the interleaved fit must
+    recover the (P-1)/(vM+P-1) bubble within the probe's 20% tolerance,
+    and the record must carry the virtual-stage count."""
+    P_, M, v, c = 2, 4, 2, 0.006
+
+    def step_for_m(m):
+        delay = c * (v * m + (P_ - 1))
+
+        def run():
+            time.sleep(delay)
+            return jnp.zeros(())
+
+        return run
+
+    rec = measure_bubble_fraction(step_for_m, n_stages=P_, microbatches=M,
+                                  n_iter=2, sched=f"1f1b_i{v}")
+    assert rec["virtual_stages"] == v
+    assert rec["bubble_predicted"] == pytest.approx(
+        (P_ - 1) / (v * M + P_ - 1))
+    assert rec["fit_unreliable"] is False
+    assert rec["bubble_measured"] == pytest.approx(rec["bubble_predicted"],
+                                                   rel=0.2)
+
+
+def test_probe_records_virtual_stages_on_live_pipeline(eight_devices):
+    """The real probe path (pipeline_apply lowering) threads the
+    schedule through: an interleaved strategy's record carries v and the
+    interleaved prediction, not plain 1F1B's."""
+    from repro import strategy as strategy_lib
+    from repro.perf.pipeline_probe import measure_bubble
+
+    cfg = reduced(get_config("qwen3-0.6b"), n_layers=4, d_model=64)
+    rec = measure_bubble(cfg, strategy_lib.parse("fsdp_pp2_mb4_1f1b_i2"),
+                         strategy_lib.host_topology(), seq_len=32, n_iter=1)
+    assert rec["sched"] == "1f1b_i2"
+    assert rec["virtual_stages"] == 2
+    assert rec["bubble_predicted"] == pytest.approx(1 / 9)  # (P-1)/(vM+P-1)
+    assert "fit_unreliable" in rec
+
+
 def test_batch_axes_spec_warns_once_on_dropped_axis(eight_devices, caplog):
     """pp with microbatch rows that cannot occupy the data axis runs with
     replicated (redundant) data-parallel compute; that used to be fully
@@ -268,7 +482,9 @@ def test_probe_handles_pp_ep_strategy(eight_devices):
 
 
 def test_schedule_registry():
-    assert set(SCHEDULES) == {"gpipe", "1f1b"}
+    assert set(SCHEDULES) == {"gpipe", "1f1b", "1f1b_i2", "zb"}
     for name, sched in SCHEDULES.items():
         assert sched.name == name
         assert get_schedule(name) is sched
+    # unregistered interleave depths resolve through the grammar
+    assert get_schedule("1f1b_i3").name == "1f1b_i3"

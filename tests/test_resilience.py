@@ -409,9 +409,13 @@ def test_planner_flips_between_wps_and_effective_wps():
     topo = strategy_lib.Topology("flip", 2048, 8, hardware="H100",
                                  hbm=80e9, hw_obj=hw)
     modes = ("hsdp", "fsdp")
-    a = strategy_lib.best(cfg, topo, shape, objective="wps", dp_modes=modes)
-    b = strategy_lib.best(cfg, topo, shape, objective="effective_wps",
-                          dp_modes=modes)
+    # pin the pre-overlap sweep: the ZeRO gather-prefetch token (ISSUE 10)
+    # hides the FSDP gather cost outright, making one fsdp+ovl point win
+    # BOTH objectives — this test pins the checkpoint-writer flip, which
+    # lives in the overlap-free space
+    kw = dict(dp_modes=modes, overlaps=(False,))
+    a = strategy_lib.best(cfg, topo, shape, objective="wps", **kw)
+    b = strategy_lib.best(cfg, topo, shape, objective="effective_wps", **kw)
     assert a.spec != b.spec
     assert a.spec.startswith("hsdp") and b.spec.startswith("fsdp")
     assert b.report.goodput_frac > a.report.goodput_frac

@@ -52,6 +52,11 @@ POD1 = strategy_lib.pod_topology(pods=1)
              sched="1f1b"),
     Strategy(dp_mode="hsdp", pp=2, microbatches=4, grad_accum=2,
              sched="1f1b", seq_parallel=False),
+    Strategy(dp_mode="fsdp", pp=4, microbatches=8, sched="1f1b_i2"),
+    Strategy(dp_mode="fsdp", pp=2, microbatches=8, sched="1f1b_i4",
+             overlap=True),
+    Strategy(dp_mode="fsdp", pp=2, microbatches=4, sched="zb"),
+    Strategy(dp_mode="hsdp", tp=2, overlap=True),
 ])
 def test_spec_round_trip(s):
     assert parse(s.format()) == s
@@ -69,7 +74,13 @@ def test_spec_defaults_and_aliases():
 
 @pytest.mark.parametrize("bad", ["", "zorp_tp2", "hsdp_tp", "hsdp_xp4",
                                  "hsdp_tp4_tp8", "tp4", "fsdp_1f1b",
-                                 "fsdp_pp2_mb4_1f1b_gpipe"])
+                                 "fsdp_pp2_mb4_1f1b_gpipe",
+                                 "fsdp_zb",                  # sched w/o pp
+                                 "fsdp_pp2_mb4_1f1b_i1",     # v must be >= 2
+                                 "fsdp_pp2_mb4_i2",          # i<v> needs 1f1b
+                                 "fsdp_pp4_mb6_1f1b_i2",     # mb % pp != 0
+                                 "ddp_ovl",                  # ovl needs zero>=2
+                                 "fsdp_z0_ovl"])
 def test_spec_parse_rejects(bad):
     with pytest.raises(StrategyError):
         parse(bad)
@@ -95,6 +106,23 @@ def test_descriptor_validation():
     Strategy(pp=2, microbatches=4).check(POD1, LLAMA2_7B)
     assert not Strategy(tp=5).lowerable(POD1)       # 5 does not divide 256
     assert Strategy(tp=4).lowerable(POD1)
+    # ISSUE 10 schedule-frontier degrees
+    with pytest.raises(StrategyError):
+        Strategy(sched="zb")                        # sched without a pipeline
+    with pytest.raises(StrategyError):
+        Strategy(pp=2, microbatches=4, sched="1f1b_i1")    # v >= 2
+    with pytest.raises(StrategyError):
+        Strategy(pp=4, microbatches=6, sched="1f1b_i2")    # mb % pp != 0
+    with pytest.raises(StrategyError):
+        Strategy(dp_mode="ddp", overlap=True)       # no sharded params
+    # interleaving re-chunks the stack into pp*v slices: a 28-layer stack
+    # splits over pp=4 stages (28 % 4 == 0) but not into 8 v-chunks
+    Strategy(pp=2, microbatches=4, sched="1f1b_i2").check(POD1, LLAMA2_7B)
+    Strategy(pp=2, microbatches=4, sched="zb").check(POD1, LLAMA2_7B)
+    odd28 = dataclasses.replace(LLAMA2_7B, n_layers=28)
+    Strategy(pp=4, microbatches=8, sched="1f1b").check(POD1, odd28)
+    with pytest.raises(StrategyError):
+        Strategy(pp=4, microbatches=8, sched="1f1b_i2").check(POD1, odd28)
 
 
 def test_mb_lt_pp_is_error_not_silent_clamp():
@@ -255,13 +283,14 @@ def _strategy_kwargs():
         tp=st.sampled_from([1, 2, 4, 8]),
         cp=st.sampled_from([1, 2, 4]),
         pp=st.sampled_from([1, 2, 4]),
-        sched=st.sampled_from(["gpipe", "1f1b"]),
+        sched=st.sampled_from(["gpipe", "1f1b", "1f1b_i2", "zb"]),
         ep=st.sampled_from([1, 2, 4, 8]),
         zero_stage=st.sampled_from([None, 0, 2, 3]),
         microbatches=st.sampled_from([1, 4, 8, 16]),
         grad_accum=st.sampled_from([1, 2, 4]),
         attn=st.sampled_from([None, "head_tp", "context"]),
         seq_parallel=st.booleans(),
+        overlap=st.booleans(),
     )
 
 
@@ -306,6 +335,7 @@ def test_property_group_sizes_match_mesh(kw):
     assert plan.ep_size == cost.ep, s.format()
     assert plan.microbatches == (s.microbatches if s.pp > 1 else 1)
     assert plan.pipe_sched == s.sched == cost.sched
+    assert plan.zero_overlap == s.overlap == cost.overlap
     if s.ep > 1:
         assert plan.expert in plan.dp      # ep factored out of the data axes
         assert plan.axis_size(plan.dp) == s.dp_effective(POD2) * s.ep
@@ -411,6 +441,30 @@ def test_1f1b_memory_flips_fits_in_planner_sweep():
     assert s_f.format() in specs, sorted(specs)
     assert s_g.format() not in specs
     assert all(p.report.fits for p in ranked)
+
+
+def test_overlap_token_flips_fsdp_frontier():
+    """ISSUE 10 acceptance (pinned): on an FSDP-bound A100 pod the
+    planner's top strategy *changes* when the gather/compute overlap
+    token enters the sweep.  Without it, exposed per-layer parameter
+    gathers push the winner to tp=2 (smaller gather group per shard);
+    with it, the prefetch window hides the gathers and plain fsdp+ovl
+    overtakes — the overlap degree moves the frontier, not just a
+    number."""
+    cfg = get_config("llama2-70b")
+    topo = Topology("a100-1024", 1024, island=8, hardware="A100", hbm=80e9)
+    shape = ShapeConfig("ovl-flip", 4096, 1024, "train")
+    kw = dict(require_lowerable=False, dp_modes=("fsdp",),
+              zero_stages=(3,), precisions=("bf16",))
+    off = search(cfg, topo, shape, overlaps=(False,), **kw)
+    both = search(cfg, topo, shape, **kw)
+    assert off[0].spec == "fsdp_tp2_z3_bf16", off[0].spec
+    assert both[0].spec == "fsdp_z3_ovl_bf16", both[0].spec
+    assert both[0].report.wps > off[0].report.wps
+    # the same mesh without the token is strictly slower in the ranking
+    by_spec = {p.spec: p for p in both}
+    assert by_spec["fsdp_z3_ovl_bf16"].report.t_step < \
+        by_spec["fsdp_z3_bf16"].report.t_step
 
 
 def test_pareto_front_subset_and_contains_best():
